@@ -1,0 +1,82 @@
+"""Paper Sec. 5.3: the two cost-efficiency case studies.
+
+Case 1: GNMT traced on a P4000; should a user rent a P100 / T4 / V100?
+  Paper findings: V100 fastest; T4 most cost-efficient; Habitat predicts
+  the correct *ordering* for both objectives.
+
+Case 2: DCGAN on a 2080Ti: is the V100 worth renting?
+  Paper: V100 only ~1.1x -- stick with the 2080Ti.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (Csv, ground_truth_ms, paper_predictor, pct,
+                               trace_model)
+from repro.core import cost as cost_mod, devices, simulator
+
+
+def _ordering_vs_truth(trace, candidates, key):
+    pred_rank = [c.device for c in
+                 cost_mod.rank_devices(trace, 128, candidates,
+                                       predictor=paper_predictor(), by=key)]
+    def gt_key(d):
+        ms = ground_truth_ms(trace, d)
+        if key == "cost":
+            return -cost_mod.cost_normalized_throughput(
+                128, ms, devices.get(d).cost_per_hour)
+        return ms
+    gt_rank = sorted(candidates, key=gt_key)
+    return pred_rank, gt_rank
+
+
+def run(csv: Csv, verbose: bool = True):
+    t0 = time.perf_counter()
+    # ---- Case study 1: GNMT from P4000 ------------------------------------
+    trace = trace_model("gnmt", "P4000")
+    rentables = ["P100", "T4", "V100"]
+    pred_perf, gt_perf = _ordering_vs_truth(trace, rentables, "throughput")
+    pred_cost, gt_cost = _ordering_vs_truth(trace, rentables, "cost")
+    errs = []
+    for d in rentables:
+        gt = ground_truth_ms(trace, d)
+        pred = paper_predictor().predict_trace(trace, d).run_time_ms
+        errs.append(abs(pred - gt) / gt)
+    if verbose:
+        print(f"  case1 GNMT@P4000: perf order pred {pred_perf} vs gt "
+              f"{gt_perf}; cost order pred {pred_cost} vs gt {gt_cost}; "
+              f"avg err {pct(float(np.mean(errs)))} (paper: 10.7%)")
+    csv.add("case1_gnmt_ordering_correct", 0.0,
+            str(pred_perf == gt_perf and pred_cost == gt_cost))
+    csv.add("case1_gnmt_avg_err", 0.0, pct(float(np.mean(errs))))
+
+    # ---- Case study 2: DCGAN from 2080Ti -----------------------------------
+    trace2 = trace_model("dcgan", "RTX2080Ti")
+    others = ["P4000", "P100", "RTX2070", "T4", "V100"]
+    base_gt = simulator.trace_time_ms(trace2,
+                                      devices.get("RTX2080Ti"))
+    speedups_pred, speedups_gt = {}, {}
+    errs2 = []
+    for d in others:
+        gt = ground_truth_ms(trace2, d)
+        pred = paper_predictor().predict_trace(trace2, d).run_time_ms
+        speedups_pred[d] = base_gt / pred
+        speedups_gt[d] = base_gt / gt
+        errs2.append(abs(pred - gt) / gt)
+    v100_pred = speedups_pred["V100"]
+    if verbose:
+        print(f"  case2 DCGAN@2080Ti: predicted V100 speedup "
+              f"{v100_pred:.2f}x (gt {speedups_gt['V100']:.2f}x; paper "
+              f"~1.1x -> not worth renting); avg err "
+              f"{pct(float(np.mean(errs2)))} (paper: 7.7%)")
+    marginal_pred = v100_pred < 1.35
+    marginal_gt = speedups_gt["V100"] < 1.35
+    csv.add("case2_dcgan_v100_verdict_correct", 0.0,
+            str(marginal_pred == marginal_gt))
+    csv.add("case2_dcgan_avg_err",
+            (time.perf_counter() - t0) * 1e6, pct(float(np.mean(errs2))))
+    return {"case1_order_ok": pred_perf == gt_perf,
+            "case2_verdict_ok": marginal_pred == marginal_gt}

@@ -1,0 +1,43 @@
+"""Paper Fig. 1: peak-FLOPS-ratio heuristic vs Habitat on DCGAN.
+
+The paper measures DCGAN on the T4 and scales to the other five GPUs with
+the peak-FLOPS ratio: errors are 42.5-64.9%; Habitat gets 10.2% average.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (Csv, ground_truth_ms, paper_predictor, pct,
+                               trace_model, PAPER_GPUS)
+from repro.core import FlopsRatioPredictor
+
+
+def run(csv: Csv, verbose: bool = True):
+    trace = trace_model("dcgan", "T4")
+    habitat = paper_predictor()
+    heuristic = FlopsRatioPredictor()
+    errs_heur, errs_hab = [], []
+    t0 = time.perf_counter()
+    for dest in PAPER_GPUS:
+        if dest == "T4":
+            continue
+        gt = ground_truth_ms(trace, dest)
+        e_h = abs(heuristic.predict_trace(trace, dest).run_time_ms - gt) / gt
+        e_a = abs(habitat.predict_trace(trace, dest).run_time_ms - gt) / gt
+        errs_heur.append(e_h)
+        errs_hab.append(e_a)
+        if verbose:
+            print(f"  T4 -> {dest:<10} gt {gt:8.1f}ms  "
+                  f"flops-heuristic err {pct(e_h):>7}  "
+                  f"habitat err {pct(e_a):>7}")
+    us = (time.perf_counter() - t0) / max(len(errs_hab), 1) * 1e6
+    csv.add("fig1_flops_heuristic_avg_err", us,
+            pct(float(np.mean(errs_heur))))
+    csv.add("fig1_habitat_avg_err", us, pct(float(np.mean(errs_hab))))
+    csv.add("fig1_flops_heuristic_max_err", us,
+            pct(float(np.max(errs_heur))))
+    return {"heuristic": float(np.mean(errs_heur)),
+            "habitat": float(np.mean(errs_hab))}

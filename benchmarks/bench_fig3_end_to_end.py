@@ -1,0 +1,60 @@
+"""Paper Fig. 3 / Sec. 5.2.1: end-to-end iteration-time prediction error
+over all 30 (origin, destination) pairs of the six GPUs x five models.
+
+Paper: 11.8% average (per-model 9.5-13.4%).  We additionally report the
+Paleo-style analytical baseline (no runtime info) for contrast.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import (Csv, PAPER_GPUS, PAPER_MODELS,
+                               ground_truth_ms, paper_predictor, pct,
+                               trace_model)
+from repro.core import PaleoPredictor
+
+
+def run(csv: Csv, verbose: bool = True):
+    habitat = paper_predictor()
+    paleo = PaleoPredictor()
+    per_model: Dict[str, list] = {m: [] for m in PAPER_MODELS}
+    paleo_errs = []
+    n_pred = 0
+    t0 = time.perf_counter()
+    for model in PAPER_MODELS:
+        for origin in PAPER_GPUS:
+            trace = trace_model(model, origin)
+            for dest in PAPER_GPUS:
+                if dest == origin:
+                    continue
+                gt = ground_truth_ms(trace, dest)
+                pred = habitat.predict_trace(trace, dest).run_time_ms
+                per_model[model].append(abs(pred - gt) / gt)
+                paleo_errs.append(
+                    abs(paleo.predict_trace(trace, dest).run_time_ms - gt)
+                    / gt)
+                n_pred += 1
+    elapsed_us = (time.perf_counter() - t0) / max(n_pred, 1) * 1e6
+    all_errs = [e for errs in per_model.values() for e in errs]
+    if verbose:
+        for m in PAPER_MODELS:
+            print(f"  {m:<14} avg err {pct(float(np.mean(per_model[m])))} "
+                  f"(paper-band ~9.5-13.4%)")
+        print(f"  OVERALL habitat {pct(float(np.mean(all_errs)))} "
+              f"(paper: 11.8%)   paleo-baseline "
+              f"{pct(float(np.mean(paleo_errs)))}")
+    for m in PAPER_MODELS:
+        csv.add(f"fig3_{m}_avg_err", elapsed_us,
+                pct(float(np.mean(per_model[m]))))
+    csv.add("fig3_overall_avg_err", elapsed_us,
+            pct(float(np.mean(all_errs))))
+    csv.add("fig3_paleo_baseline_err", elapsed_us,
+            pct(float(np.mean(paleo_errs))))
+    return {"overall": float(np.mean(all_errs)),
+            "paleo": float(np.mean(paleo_errs)),
+            "per_model": {m: float(np.mean(v))
+                          for m, v in per_model.items()}}

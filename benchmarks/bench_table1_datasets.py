@@ -1,0 +1,25 @@
+"""Paper Table 1: the MLP training datasets (features x sizes), plus
+dataset-generation throughput on this host."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Csv
+from repro.core import dataset as dataset_mod
+
+N = 2000
+
+
+def run(csv: Csv, verbose: bool = True):
+    for kind in ("conv2d", "recurrent", "bmm", "linear"):
+        t0 = time.perf_counter()
+        ds = dataset_mod.build_dataset(kind, N)
+        dt = time.perf_counter() - t0
+        per = dt / len(ds.y) * 1e6
+        if verbose:
+            print(f"  {kind:<10} features={ds.x.shape[1]} "
+                  f"samples={len(ds.y)} ({per:.1f}us/sample)")
+        csv.add(f"table1_{kind}_dataset", per,
+                f"{ds.x.shape[1]}feat x {len(ds.y)}")
+    return {}

@@ -1,0 +1,45 @@
+"""Predictor-variant ablation (§Perf, reproduction axis).
+
+Paper-faithful Habitat (Eq. 2 wave scaling) vs the beyond-paper variants:
+exact Eq. 1 (wave quantization kept), dispatch-overhead modelling, and
+both.  Evaluated on the 5-model zoo over 6 origin-destination pairs.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (Csv, PAPER_MODELS, ground_truth_ms,
+                               paper_predictor, pct, trace_model)
+from repro.core import HabitatPredictor
+
+PAIRS = [("T4", "V100"), ("T4", "P100"), ("P4000", "RTX2080Ti"),
+         ("V100", "T4"), ("RTX2070", "P100"), ("P100", "tpu-v5e")]
+
+
+def run(csv: Csv, verbose: bool = True):
+    base = paper_predictor()
+    variants = {
+        "paper_eq2": base,
+        "exact_eq1": HabitatPredictor(mlps=base.mlps, exact_wave=True),
+        "overhead": HabitatPredictor(mlps=base.mlps, model_overhead=True),
+        "eq1+overhead": HabitatPredictor(mlps=base.mlps, exact_wave=True,
+                                         model_overhead=True),
+    }
+    t0 = time.perf_counter()
+    for name, pred in variants.items():
+        errs = []
+        for model in PAPER_MODELS:
+            for origin, dest in PAIRS:
+                tr = trace_model(model, origin)
+                gt = ground_truth_ms(tr, dest)
+                p = pred.predict_trace(tr, dest).run_time_ms
+                errs.append(abs(p - gt) / gt)
+        avg = float(np.mean(errs))
+        if verbose:
+            print(f"  {name:<14} avg err {pct(avg)}")
+        csv.add(f"variant_{name}_avg_err",
+                (time.perf_counter() - t0) * 1e6, pct(avg))
+    return {}

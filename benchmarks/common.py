@@ -1,0 +1,73 @@
+"""Shared benchmark infrastructure.
+
+Paper-parity MLPs: trained on the six Table-2 GPUs plus accelerator
+targets, at paper architecture (8 x 1024) but fewer epochs (CPU budget);
+cached under artifacts/ so re-runs are fast.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import (FlopsRatioPredictor, HabitatPredictor,
+                        OperationTracker, PaleoPredictor, train_mlps)
+from repro.core import devices, mlp, simulator
+from repro.core.trace import TrackedTrace
+from repro.models.evalzoo import ZOO, make_train_iteration
+
+PAPER_MODELS = ["resnet50", "inception_v3", "transformer", "gnmt", "dcgan"]
+PAPER_GPUS = devices.PAPER_GPUS
+
+#: Paper-architecture-family MLPs.  The paper uses 8 x 1024; its own Fig. 5
+#: shows test error flattens past 2^9 units, so we train 6 x 512 within the
+#: CPU budget (documented deviation; fig5 bench reproduces the knee).
+PAPER_MLP_CFG = mlp.MLPConfig(hidden_layers=6, hidden_size=512, epochs=15)
+PAPER_MLP_CONFIGS = 2500
+
+_PREDICTOR = None
+
+
+def paper_predictor() -> HabitatPredictor:
+    global _PREDICTOR
+    if _PREDICTOR is None:
+        mlps = train_mlps(cfg=PAPER_MLP_CFG, n_configs=PAPER_MLP_CONFIGS)
+        _PREDICTOR = HabitatPredictor(mlps=mlps)
+    return _PREDICTOR
+
+
+_TRACES: Dict[Tuple[str, str], TrackedTrace] = {}
+
+
+def trace_model(model: str, origin: str) -> TrackedTrace:
+    key = (model, origin)
+    if key not in _TRACES:
+        it, params, batch = make_train_iteration(model)
+        _TRACES[key] = OperationTracker(origin).track(it, params, batch,
+                                                      label=model)
+    return _TRACES[key]
+
+
+def ground_truth_ms(trace: TrackedTrace, dest: str) -> float:
+    return simulator.trace_time_ms(trace, devices.get(dest))
+
+
+def pct(x: float) -> str:
+    return f"{100.0 * x:.1f}%"
+
+
+class Csv:
+    """Collects ``name,us_per_call,derived`` rows for benchmarks/run.py."""
+
+    def __init__(self):
+        self.rows: List[Tuple[str, float, str]] = []
+
+    def add(self, name: str, us_per_call: float, derived: str):
+        self.rows.append((name, us_per_call, derived))
+
+    def dump(self):
+        for name, us, derived in self.rows:
+            print(f"{name},{us:.3f},{derived}")

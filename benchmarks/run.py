@@ -1,0 +1,74 @@
+"""Benchmark harness: one module per paper table/figure + roofline.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig3,roofline]
+
+Prints a human-readable report per benchmark, then a final
+``name,us_per_call,derived`` CSV block.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from benchmarks.common import Csv  # noqa: E402
+
+BENCHES = [
+    ("table1", "benchmarks.bench_table1_datasets",
+     "Table 1: MLP training datasets"),
+    ("fig1", "benchmarks.bench_fig1_heuristic",
+     "Fig 1: peak-FLOPS heuristic vs Habitat (DCGAN from T4)"),
+    ("fig3", "benchmarks.bench_fig3_end_to_end",
+     "Fig 3: end-to-end prediction error, 30 GPU pairs x 5 models"),
+    ("fig4", "benchmarks.bench_fig4_breakdown",
+     "Fig 4: per-operation error breakdown + importance"),
+    ("fig5", "benchmarks.bench_fig5_mlp_sensitivity",
+     "Fig 5: MLP depth/width sensitivity"),
+    ("case_studies", "benchmarks.bench_case_studies",
+     "Sec 5.3: cost-efficiency case studies"),
+    ("kernels", "benchmarks.bench_kernels",
+     "Pallas kernel microbenches (jnp oracle timings)"),
+    ("roofline", "benchmarks.bench_roofline",
+     "§Roofline: dry-run roofline table (deliverable g)"),
+    ("extensions", "benchmarks.bench_extensions",
+     "Sec 6 extensions: distributed / mixed precision / batch extrap"),
+    ("variants", "benchmarks.bench_variants",
+     "Predictor-variant ablation: Eq.2 vs Eq.1 vs overhead modelling"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmark keys")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    csv = Csv()
+    t_all = time.time()
+    for key, module, title in BENCHES:
+        if only and key not in only:
+            continue
+        print(f"\n=== {title} ===")
+        t0 = time.time()
+        try:
+            mod = __import__(module, fromlist=["run"])
+            mod.run(csv)
+        except Exception as e:  # a failed bench should not kill the run
+            import traceback
+            print(f"  BENCH FAILED: {type(e).__name__}: {e}")
+            traceback.print_exc()
+            csv.add(f"{key}_FAILED", 0.0, str(type(e).__name__))
+        print(f"  [{key}: {time.time() - t0:.1f}s]")
+
+    print(f"\n=== CSV (name,us_per_call,derived) — total "
+          f"{time.time() - t_all:.0f}s ===")
+    csv.dump()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Case-study example: should I rent a cloud accelerator?
+
+    PYTHONPATH=src python examples/gpu_selection.py
+
+Reproduces the paper's Sec. 5.3 workflow on our stack: trace GNMT training
+on the workstation device, predict throughput and cost-normalized
+throughput for rentable devices, and print both rankings.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import OperationTracker, default_predictor
+from repro.core import cost as cost_mod
+from repro.models.evalzoo import make_train_iteration
+
+
+def main():
+    batch_size = 16
+    it, params, batch = make_train_iteration("gnmt", batch=batch_size)
+    trace = OperationTracker("P4000").track(it, params, batch, label="gnmt")
+    print(f"GNMT iteration on P4000: {trace.run_time_ms:.1f} ms "
+          f"({len(trace.ops)} ops)\n")
+
+    candidates = ["P100", "T4", "V100", "tpu-v5e", "trainium1"]
+    pred = default_predictor()
+
+    print("Ranked by throughput (maximize speed):")
+    ranking = cost_mod.rank_devices(trace, batch_size, candidates,
+                                    predictor=pred, by="throughput")
+    print(cost_mod.format_ranking(ranking))
+
+    print("\nRanked by cost-normalized throughput (maximize samples/$):")
+    ranking = cost_mod.rank_devices(trace, batch_size, candidates,
+                                    predictor=pred, by="cost")
+    print(cost_mod.format_ranking(ranking))
+
+
+if __name__ == "__main__":
+    main()

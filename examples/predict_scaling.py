@@ -1,0 +1,64 @@
+"""Beyond-paper example: predict DISTRIBUTED step time on a 256-chip pod.
+
+    PYTHONPATH=src python examples/predict_scaling.py
+
+Traces the per-device training step of a reduced model, then combines the
+Habitat compute prediction with the ring-model collective estimate
+(paper Sec. 6.1.1 future work, implemented in core/distributed.py) for a
+16x16 v5e mesh — and checks the collective volumes against the sharding
+plan's analytical volumes.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import OperationTracker, default_predictor
+from repro.core.distributed import MeshPlan, predict_step
+from repro.models.config import smoke_config
+from repro.train.optim import adamw
+from repro.train.train_step import init_state, make_train_step
+
+
+def main():
+    cfg = smoke_config(get_config("qwen3-0.6b"))
+    optimizer = adamw()
+    state = init_state(cfg, jax.random.PRNGKey(0), optimizer)
+    step = make_train_step(cfg, optimizer)
+    # per-device shard of a (4096-global / 256-chip) batch
+    batch = {"tokens": jnp.ones((16, 128), jnp.int32),
+             "labels": jnp.ones((16, 128), jnp.int32)}
+    trace = OperationTracker("cpu-host").track(step, state, batch)
+
+    param_bytes = sum(int(np.prod(p.shape)) * p.dtype.itemsize
+                      for p in jax.tree.leaves(state.params))
+    plan = MeshPlan(data=16, model=16,
+                    grad_bytes=param_bytes,            # reduce per step
+                    weight_gather_bytes=2 * param_bytes,  # fwd+bwd FSDP
+                    tp_activation_bytes=batch["tokens"].size
+                    * cfg.d_model * 4)
+    for dest in ["tpu-v5e", "tpu-v5p", "trainium2"]:
+        out = predict_step(trace, dest, plan,
+                           predictor=default_predictor())
+        print(f"{dest:<10} compute {out.compute_ms:8.2f}ms  "
+              f"collectives {out.collective_ms:8.2f}ms "
+              f"(exposed {out.exposed_collective_ms:6.2f}ms)  "
+              f"step {out.step_ms:8.2f}ms  "
+              f"comm fraction {out.comm_fraction:.0%}")
+
+    plan2 = MeshPlan(data=16, model=16, pod=2, grad_bytes=param_bytes,
+                     weight_gather_bytes=2 * param_bytes)
+    out = predict_step(trace, "tpu-v5e", plan2,
+                       predictor=default_predictor())
+    print(f"\n2-pod (512 chips, DCN cross-pod): step {out.step_ms:.2f}ms, "
+          f"per-collective: { {k: round(v, 2) for k, v in out.per_collective.items()} }")
+
+
+if __name__ == "__main__":
+    main()

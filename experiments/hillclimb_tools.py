@@ -1,0 +1,137 @@
+"""Shared tooling for the §Perf hillclimb: lower a cell, list the largest
+collectives/tensors with op_name metadata, and report roofline deltas."""
+
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import re
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch import hlo_analysis, specs
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import SHAPES
+from repro.parallel import ctx, sharding
+from repro.train.optim import adamw
+
+_DT = {"bf16": 2, "f16": 2, "f32": 4, "s32": 4, "u32": 4, "pred": 1,
+       "s8": 1, "u8": 1, "f64": 8, "s64": 8, "u64": 8}
+
+
+def lower_cell(arch, shape_name, cfg_override=None, multi_pod=False):
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    opt = adamw()
+    profile = getattr(cfg, "sharding_profile", "2d")
+    if shape.mode != "train" and getattr(cfg, "sharding_profile_serve", ""):
+        profile = cfg.sharding_profile_serve
+    if profile == "dp" and shape.global_batch % chips != 0:
+        # pure DP requires global_batch >= devices (e.g. batch 256 on the
+        # 512-chip 2-pod mesh): fall back to 2D FSDPxTP
+        profile = "2d"
+    with ctx.use_mesh(mesh):
+        if profile == "dp":
+            ctx.set_batch_axes(("pod", "data", "model"))
+            ctx.set_seq_axes(())
+        elif profile == "sp":
+            ctx.set_batch_axes(("pod", "data"))
+            ctx.set_seq_axes(("model",))
+        else:
+            ctx.set_batch_axes(("pod", "data"))
+            ctx.set_seq_axes(())
+        batch_abs = specs.input_specs(cfg, shape)
+        batch_sh = sharding.tree_shardings(
+            sharding.batch_specs(batch_abs, mesh, profile=profile), mesh)
+        step = specs.step_fn_for(cfg, shape, opt, profile)
+        if shape.mode == "train":
+            state_abs = specs.abstract_train_state(cfg, opt)
+            state_sh = sharding.tree_shardings(
+                sharding.param_specs(state_abs, mesh, profile), mesh)
+            lowered = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                              out_shardings=(state_sh, None),
+                              donate_argnums=(0,)
+                              ).lower(state_abs, batch_abs)
+        elif shape.mode == "prefill":
+            params_abs = specs.abstract_params(cfg)
+            params_sh = sharding.tree_shardings(
+                sharding.param_specs(params_abs, mesh, profile), mesh)
+            lowered = jax.jit(step, in_shardings=(params_sh, batch_sh)
+                              ).lower(params_abs, batch_abs)
+        else:
+            params_abs = specs.abstract_params(cfg)
+            params_sh = sharding.tree_shardings(
+                sharding.param_specs(params_abs, mesh, profile), mesh)
+            dstate_abs = specs.abstract_decode_state(
+                cfg, shape.global_batch, shape.seq_len)
+            dstate_sh = sharding.tree_shardings(
+                sharding.cache_specs(dstate_abs, mesh, shape.global_batch),
+                mesh)
+            lowered = jax.jit(step,
+                              in_shardings=(params_sh, batch_sh, dstate_sh),
+                              out_shardings=(None, dstate_sh),
+                              donate_argnums=(2,)
+                              ).lower(params_abs, batch_abs, dstate_abs)
+        compiled = lowered.compile()
+    return compiled, chips
+
+
+def report(compiled, chips, label=""):
+    roof = hlo_analysis.analyze(compiled, chips)
+    d = roof.as_dict()
+    print(f"[{label}] compute {d['compute_s']*1e3:.1f}ms "
+          f"memory {d['memory_s']*1e3:.1f}ms "
+          f"collective {d['collective_s']*1e3:.1f}ms -> {d['bound']}")
+    print(f"  coll detail GiB: "
+          f"{ {k: round(v/2**30,1) for k,v in d['collective_detail'].items()} }")
+    try:
+        mem = compiled.memory_analysis()
+        print(f"  temp {mem.temp_size_in_bytes/2**30:.2f} GiB/device")
+    except Exception:
+        pass
+    return roof
+
+
+def top_collectives(compiled, n=12, while_weight=True):
+    """The n largest collective instructions with op_name provenance."""
+    text = compiled.as_text()
+    mod = hlo_analysis.HloModule(text)
+    rows = []
+    # crude: scan all computations; weight by trip count of enclosing while
+    weights = {}
+    for name, lines in mod.computations.items():
+        weights[name] = 1.0
+    for name, lines in mod.computations.items():
+        for line in lines:
+            m = re.search(r"body=%?([\w.\-]+)", line)
+            if m and "while(" in line:
+                t = re.search(r"known_trip_count[^\d]*(\d+)", line)
+                weights[m.group(1)] = float(t.group(1)) if t else 1.0
+    for name, lines in mod.computations.items():
+        w = weights.get(name, 1.0)
+        for line in lines:
+            m = re.search(
+                r"=\s*(\([^)]*\)|\S+)\s+(all-gather|all-reduce|"
+                r"reduce-scatter|all-to-all|collective-permute)\(", line)
+            if not m:
+                continue
+            size = hlo_analysis._shape_list_bytes(m.group(1))
+            op_name = ""
+            om = re.search(r'op_name="([^"]*)"', line)
+            if om:
+                op_name = om.group(1)[-90:]
+            rows.append((size * (w if while_weight else 1.0), size, w,
+                         m.group(2), op_name))
+    rows.sort(reverse=True)
+    for total, size, w, op, op_name in rows[:n]:
+        print(f"  {total/2**30:8.2f} GiB (= {size/2**20:7.1f} MiB x{w:4.0f}) "
+              f"{op:<19} {op_name}")
+    return rows

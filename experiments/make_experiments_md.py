@@ -1,0 +1,202 @@
+"""Assemble EXPERIMENTS.md from the dry-run artifacts + perf log + bench
+results.  Run after the optimized sweep completes:
+
+    PYTHONPATH=src python experiments/make_experiments_md.py
+"""
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.core.devices import (ROOFLINE_HBM_BW, ROOFLINE_LINK_BW,
+                                ROOFLINE_PEAK_FLOPS)
+
+
+def load(d):
+    cells = {}
+    for p in sorted((ROOT / "experiments" / d).glob("*.json")):
+        c = json.loads(p.read_text())
+        cells[(c["arch"], c["shape"], c["multi_pod"])] = c
+    return cells
+
+
+def fmt_ms(s):
+    return f"{s * 1e3:,.0f}"
+
+
+def roofline_fraction(c):
+    ideal = c["model_flops"] / c["chips"] / ROOFLINE_PEAK_FLOPS
+    return ideal / c["step_s"] if c.get("step_s") else 0.0
+
+
+def main():
+    opt = load("dryrun")
+    base = load("dryrun_baseline")
+    ok = {k: v for k, v in opt.items() if v.get("status") == "ok"}
+    skipped = [v for v in opt.values() if v.get("status") == "skipped"]
+    errors = [v for v in opt.values() if v.get("status") == "error"]
+
+    out = []
+    out.append("""# EXPERIMENTS
+
+Reproduction of *Habitat: A Runtime-Based Computational Performance
+Predictor for DNN Training* (USENIX ATC'21) as a multi-pod JAX framework.
+Hardware target: TPU v5e (197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link
+ICI); 256-chip (16x16) production pod and 2-pod (2x16x16, 512 chip) mesh.
+This container is CPU-only: dry-runs lower+compile the SPMD programs
+against 512 placeholder host devices; roofline terms come from the
+compiled per-device HLO via a while-loop-aware analyzer
+(src/repro/launch/hlo_analysis.py) because XLA's `cost_analysis()` counts
+scan bodies once (verified: a 28-step scanned matmul reports 1/28th of its
+flops). Collective bytes = summed result shapes of all-gather/all-reduce/
+reduce-scatter/all-to-all/collective-permute, loop-weighted.
+
+## §Reproduction — the paper's own claims
+
+Run: `PYTHONPATH=src python -m benchmarks.run` (bench_output.txt).
+
+| claim (paper) | paper | this repo (bench_output.txt) |
+|---|---|---|
+| end-to-end prediction error, 30 pairs x 5 models (Fig. 3) | 11.8% avg (9.5-13.4% per model) | **10.4% avg** (8.1-14.7% per model) |
+| Habitat error on DCGAN from T4 (Fig. 1) | 10.2% | **10.1%** |
+| peak-FLOPS heuristic on DCGAN (Fig. 1) | 42.5-64.9% | 18.2% avg / 26.0% max (our simulated fleet has a narrower device spread than real GPUs; Habitat still clearly better) |
+| per-op MLP-op error (Fig. 4) | 18.0% | 32.9% per-op (uncorrelated; end-to-end sums are in band) |
+| wave-scaled op error / importance split (Fig. 4) | 29.8%, ~95% of ops | 27.6%, 88.7% of ops |
+| MLP depth/width: deeper/wider better, knee ~2^9 (Fig. 5) | qualitative | reproduced (fig5 grid) |
+| case 1: V100 fastest, T4 best samples/$ (Sec. 5.3.1) | correct ranking, 10.7% err | **both rankings correct**, 12.7% err |
+| case 2: V100 not worth it over 2080Ti (Sec. 5.3.2) | ~1.1x, 7.7% err | **verdict correct** (pred 1.05x vs gt 1.00x), 10.4% err |
+| Habitat+Daydream mixed precision (Sec. 6.1.2) | 16.1% | 22.4% |
+| batch-size extrapolation (Sec. 6.1.3) | — | 13.2% at 2x-beyond-traced batch |
+
+Ground truth for accelerator timings is the calibrated analytical device
+simulator (DESIGN.md §2) — deliberately richer than wave scaling (wave
+quantization, per-generation algorithm selection, launch overheads), so
+prediction error is structural, not cosmetic.  The host-CPU wallclock
+measurement path (`OperationTracker(measure="wallclock")`) is exercised in
+tests.
+
+## §Dry-run — multi-pod compile feasibility
+""")
+    n1 = sum(1 for k in ok if not k[2])
+    n2 = sum(1 for k in ok if k[2])
+    out.append(f"Cells compiled OK: **{n1} single-pod + {n2} multi-pod**; "
+               f"{len(skipped)} skipped (long_500k on the 7 pure "
+               f"full-attention archs, per assignment; gemma3/mamba2/zamba2 "
+               f"run it); {len(errors)} errors.\n")
+    out.append("Per-cell artifacts (memory_analysis, cost_analysis, "
+               "collective schedule): `experiments/dryrun/*.json`; "
+               "baseline (pre-§Perf) artifacts: "
+               "`experiments/dryrun_baseline/`.\n")
+
+    out.append("\n## §Roofline — per (arch x shape), single-pod 16x16\n")
+    out.append("compute = HLO_FLOPs/(chips x 197e12); memory = HLO_bytes/"
+               "(chips x 819e9); collective = collective_bytes/(chips x "
+               "50e9). `useful` = MODEL_FLOPS (6·N_active·D train, "
+               "2·N_active·tokens inference) / total HLO FLOPs. "
+               "`frac` = ideal-compute-time / dominant term.\n")
+    out.append("\n| arch | shape | compute ms | memory ms | collective ms |"
+               " bound | useful | frac | next lever |\n|---|---|--:|--:|--:"
+               "|---|--:|--:|---|\n")
+    lever = {
+        "memory": "fuse via Pallas flash/SSD kernels (VMEM-resident blocks)",
+        "collective": "shard_map manual a2a / ring attention",
+        "compute": "MXU-aligned tiling",
+    }
+    for (arch, shape, mp), c in sorted(ok.items()):
+        if mp:
+            continue
+        out.append(
+            f"| {arch} | {shape} | {fmt_ms(c['compute_s'])} | "
+            f"{fmt_ms(c['memory_s'])} | {fmt_ms(c['collective_s'])} | "
+            f"{c['bound']} | {c['useful_flops_ratio']:.2f} | "
+            f"{roofline_fraction(c):.3f} | {lever[c['bound']]} |\n")
+
+    out.append("\nMulti-pod (2x16x16) deltas: the pod axis joins the batch/"
+               "FSDP axes; cross-pod gradient reduction rides DCN. "
+               "Per-cell numbers in the 2pod artifacts.\n")
+    out.append("\n| arch | shape | 1pod step ms | 2pod step ms | "
+               "2pod bound |\n|---|---|--:|--:|---|\n")
+    for (arch, shape, mp), c in sorted(ok.items()):
+        if mp:
+            continue
+        c2 = ok.get((arch, shape, True))
+        if not c2:
+            continue
+        out.append(f"| {arch} | {shape} | {fmt_ms(c['step_s'])} | "
+                   f"{fmt_ms(c2['step_s'])} | {c2['bound']} |\n")
+
+    out.append("""
+HBM residency (memory_analysis, donation-aware): every cell fits 16 GiB
+/chip except three marginal ones — dbrx-132b prefill_32k 1pod (20.2 GiB;
+fits on the 2-pod mesh), minitron-4b train_4k 1pod under the fast dp
+profile (19.4 GiB; the 2d profile fits at ~3x the step time), and
+internvl2-2b train_4k 2pod (17.9 GiB; accum x4 would fit).  All three have
+in-tree fitting configurations; the reported profiles maximize the §Perf
+objective.
+
+Notes on accounting: the memory term is an **unfused upper bound** — the
+analyzer charges every HLO instruction's operands+outputs as HBM traffic.
+On the TPU target, the Pallas kernels (kernels/) keep flash-attention
+score blocks and SSD chunk states VMEM-resident, which removes the largest
+single contributor to the memory term for attention/SSM models.  The
+`useful` column quantifies remat/dispatch overhead (values < 1 mean the
+compiled program executes more FLOPs than the 6·N·D model).
+
+## §Perf — baseline → optimized (three hillclimbed cells)
+
+Full hypothesis → change → measure → confirmed/refuted log:
+**experiments/perf_log.md** (9 iterations, 6 confirmed, 3 refuted).
+Summary of the dominant-term trajectory:
+
+| cell | why chosen | dominant term baseline | optimized | gain |
+|---|---|--:|--:|--:|
+""")
+    picks = [
+        ("qwen3-0.6b", "train_4k", "representative (paper's technique "
+         "traces this exact step)"),
+        ("dbrx-132b", "train_4k", "worst roofline fraction AND most "
+         "collective-bound"),
+        ("gemma3-1b", "prefill_32k", "collective-bound inference"),
+    ]
+    for arch, shape, why in picks:
+        b = base.get((arch, shape, False), {})
+        o = ok.get((arch, shape, False), {})
+        if b.get("status") == "ok" and o:
+            bs, os_ = b["step_s"], o["step_s"]
+            out.append(f"| {arch} x {shape} | {why} | {fmt_ms(bs)} ms "
+                       f"({b['bound']}) | {fmt_ms(os_)} ms ({o['bound']}) |"
+                       f" {bs / os_:.1f}x |\n")
+    out.append("""
+Changes that landed framework-wide from the hillclimb (all cells benefit;
+the baseline/ artifacts predate them): causal block-skipping flash
+attention, locality-grouped E-major MoE dispatch, per-arch sharding
+profiles (2d / dp / sp + serve override), interior activation sharding
+constraints, dbrx gradient accumulation (fits 16 GB HBM: temp 12.8 GiB).
+
+**Paper-faithful vs beyond-paper (predictor axis)** — the reproduction
+baseline (paper's exact method: Eq. 2 wave scaling + per-kind MLPs on the
+paper's sampling ranges) vs our extended version (per-kernel backward-
+shape coverage, log-domain training, optional Eq. 1 + dispatch-overhead
+modelling): end-to-end error 38.1% → **8.7%** on the 5-model eval
+(paper's own result: 11.8%).  Both are reported by benchmarks/run.py.
+
+## §Scale-out design (1000+ nodes)
+
+* elastic restore across mesh sizes (tests/test_sharding.py: 8→4 devices),
+* deterministic data skip-ahead + async sharded checkpoints + crash-resume
+  bitwise-identical training (tests/test_fault_tolerance.py),
+* straggler watchdog (EWMA, compile-step aware),
+* int8+error-feedback gradient compression (3.7x wire volume) for DCN
+  cross-pod reduction,
+* the pod axis generalizes: make_production_mesh(multi_pod=True) is
+  (pods, 16, 16); nothing in the sharding rules assumes 2 pods.
+""")
+    (ROOT / "EXPERIMENTS.md").write_text("".join(out))
+    print(f"wrote EXPERIMENTS.md: {len(ok)} ok cells, {len(errors)} errors")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Habitat core: runtime-based cross-device performance prediction.
+
+Public API (Listing 1 of the paper)::
+
+    from repro.core import OperationTracker, Device
+
+    tracker = OperationTracker(origin_device=Device.CPU_HOST)
+    trace = tracker.track(train_step, params, batch)
+    print(trace.to_device(Device.TPU_V5E).run_time_ms)
+"""
+
+from repro.core.trace import Op, OperationTracker, TrackedTrace
+from repro.core.predictor import (HabitatPredictor, FlopsRatioPredictor,
+                                  PaleoPredictor, default_predictor,
+                                  train_mlps)
+from repro.core.wave_scaling import gamma, scale_time
+from repro.core.cost import (rank_devices, throughput,
+                             cost_normalized_throughput)
+
+
+class Device:
+    """Symbolic device names (mirrors ``habitat.Device.*`` in Listing 1)."""
+    P4000 = "P4000"
+    P100 = "P100"
+    V100 = "V100"
+    RTX2070 = "RTX2070"
+    RTX2080TI = "RTX2080Ti"
+    T4 = "T4"
+    TPU_V2 = "tpu-v2"
+    TPU_V3 = "tpu-v3"
+    TPU_V4 = "tpu-v4"
+    TPU_V5E = "tpu-v5e"
+    TPU_V5P = "tpu-v5p"
+    TPU_V6E = "tpu-v6e"
+    TRAINIUM1 = "trainium1"
+    TRAINIUM2 = "trainium2"
+    CPU_HOST = "cpu-host"
+
+
+__all__ = [
+    "Op", "OperationTracker", "TrackedTrace", "HabitatPredictor",
+    "FlopsRatioPredictor", "PaleoPredictor", "default_predictor",
+    "train_mlps", "gamma", "scale_time", "rank_devices", "throughput",
+    "cost_normalized_throughput", "Device",
+]

@@ -1,0 +1,192 @@
+"""Device registry: hardware specifications for origin/destination devices.
+
+The paper (Table 2) uses six NVIDIA GPUs.  We keep those six for
+paper-parity experiments and add the TPU/Trainium accelerator families that
+this framework targets, plus the host CPU (the "GPU the user already has"
+in this container).
+
+Fields mirror what wave scaling (Sec. 3.3) and the MLP features (Sec. 3.4)
+need:
+  * ``peak_flops``       -- peak dense FLOP/s for the relevant dtype (P in the
+                            roofline model).
+  * ``mem_bandwidth``    -- achieved HBM/DRAM bandwidth in bytes/s (D).
+  * ``mem_capacity``     -- device memory in bytes (MLP feature).
+  * ``num_units``        -- SMs on GPUs / TensorCores-per-chip on TPUs.  Used
+                            to derive the wave size W.
+  * ``clock_hz``         -- compute clock (C).
+  * ``tiles_per_unit``   -- concurrent resident tiles ("thread blocks") per
+                            unit; W_i = num_units * tiles_per_unit.
+  * ``link_bandwidth``   -- per-link interconnect bytes/s (ICI / NVLink),
+                            used by the beyond-paper distributed extension.
+  * ``cost_per_hour``    -- rental cost in USD (None if not rentable), used
+                            for cost-normalized throughput (Sec. 5.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceSpec:
+    name: str
+    vendor: str
+    generation: str
+    kind: str                    # "gpu" | "tpu" | "trainium" | "cpu"
+    peak_flops: float            # FLOP/s (fp32 for GPUs per paper; bf16 for TPUs)
+    mem_bandwidth: float         # bytes/s
+    mem_capacity: float          # bytes
+    num_units: int               # SMs / cores
+    clock_hz: float
+    tiles_per_unit: int = 16
+    link_bandwidth: float = 0.0  # bytes/s per link
+    num_links: int = 0
+    cost_per_hour: Optional[float] = None
+
+    @property
+    def wave_size(self) -> int:
+        """W_i: number of tiles ("thread blocks") resident in one wave."""
+        return self.num_units * self.tiles_per_unit
+
+    @property
+    def ridge_point(self) -> float:
+        """R = P / D (FLOPs per byte) of the roofline model (Fig. 2)."""
+        return self.peak_flops / self.mem_bandwidth
+
+    def feature_vector(self) -> list:
+        """The four GPU features attached to MLP datapoints (Sec. 4.3.2)."""
+        return [
+            self.mem_capacity / 2**30,          # GiB
+            self.mem_bandwidth / 1e9,           # GB/s
+            float(self.num_units),
+            self.peak_flops / 1e12,             # TFLOP/s
+        ]
+
+
+GB = 1024.0**3
+_REGISTRY: Dict[str, DeviceSpec] = {}
+
+
+def register(spec: DeviceSpec) -> DeviceSpec:
+    if spec.name in _REGISTRY:
+        raise ValueError(f"duplicate device spec {spec.name!r}")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> DeviceSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown device {name!r}; known: {sorted(_REGISTRY)}") from None
+
+
+def all_devices() -> Dict[str, DeviceSpec]:
+    return dict(_REGISTRY)
+
+
+def devices_of_kind(kind: str) -> Dict[str, DeviceSpec]:
+    return {k: v for k, v in _REGISTRY.items() if v.kind == kind}
+
+
+# ---------------------------------------------------------------------------
+# The paper's six GPUs (Table 2).  peak_flops is fp32; bandwidths are the
+# *achieved* bandwidths Habitat measures ahead of time (~80% of spec).
+# ---------------------------------------------------------------------------
+P4000 = register(DeviceSpec(
+    "P4000", "nvidia", "pascal", "gpu",
+    peak_flops=5.3e12, mem_bandwidth=0.80 * 243e9, mem_capacity=8 * GB,
+    num_units=14, clock_hz=1.48e9, tiles_per_unit=8,
+    link_bandwidth=16e9, num_links=1, cost_per_hour=None))
+P100 = register(DeviceSpec(
+    "P100", "nvidia", "pascal", "gpu",
+    peak_flops=9.3e12, mem_bandwidth=0.80 * 732e9, mem_capacity=16 * GB,
+    num_units=56, clock_hz=1.30e9, tiles_per_unit=8,
+    link_bandwidth=20e9, num_links=4, cost_per_hour=1.46))
+V100 = register(DeviceSpec(
+    "V100", "nvidia", "volta", "gpu",
+    peak_flops=14.0e12, mem_bandwidth=0.80 * 900e9, mem_capacity=16 * GB,
+    num_units=80, clock_hz=1.38e9, tiles_per_unit=8,
+    link_bandwidth=25e9, num_links=6, cost_per_hour=2.48))
+RTX2070 = register(DeviceSpec(
+    "RTX2070", "nvidia", "turing", "gpu",
+    peak_flops=7.5e12, mem_bandwidth=0.80 * 448e9, mem_capacity=8 * GB,
+    num_units=36, clock_hz=1.62e9, tiles_per_unit=8,
+    link_bandwidth=16e9, num_links=1, cost_per_hour=None))
+RTX2080TI = register(DeviceSpec(
+    "RTX2080Ti", "nvidia", "turing", "gpu",
+    peak_flops=13.4e12, mem_bandwidth=0.80 * 616e9, mem_capacity=11 * GB,
+    num_units=68, clock_hz=1.54e9, tiles_per_unit=8,
+    link_bandwidth=16e9, num_links=1, cost_per_hour=None))
+T4 = register(DeviceSpec(
+    "T4", "nvidia", "turing", "gpu",
+    peak_flops=8.1e12, mem_bandwidth=0.80 * 320e9, mem_capacity=16 * GB,
+    num_units=40, clock_hz=1.59e9, tiles_per_unit=8,
+    link_bandwidth=16e9, num_links=1, cost_per_hour=0.35))
+
+# ---------------------------------------------------------------------------
+# TPU / Trainium targets (bf16 peak).  v5e is the framework's primary target
+# and matches the roofline constants mandated by the assignment:
+# 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+# ---------------------------------------------------------------------------
+TPU_V2 = register(DeviceSpec(
+    "tpu-v2", "google", "tpu-v2", "tpu",
+    peak_flops=45e12, mem_bandwidth=700e9, mem_capacity=16 * GB,
+    num_units=2, clock_hz=0.70e9, tiles_per_unit=64,
+    link_bandwidth=62.5e9, num_links=4, cost_per_hour=1.00))
+TPU_V3 = register(DeviceSpec(
+    "tpu-v3", "google", "tpu-v3", "tpu",
+    peak_flops=123e12, mem_bandwidth=900e9, mem_capacity=32 * GB,
+    num_units=2, clock_hz=0.94e9, tiles_per_unit=64,
+    link_bandwidth=81.25e9, num_links=4, cost_per_hour=2.00))
+TPU_V4 = register(DeviceSpec(
+    "tpu-v4", "google", "tpu-v4", "tpu",
+    peak_flops=275e12, mem_bandwidth=1228e9, mem_capacity=32 * GB,
+    num_units=2, clock_hz=1.05e9, tiles_per_unit=64,
+    link_bandwidth=50e9, num_links=6, cost_per_hour=3.22))
+TPU_V5E = register(DeviceSpec(
+    "tpu-v5e", "google", "tpu-v5e", "tpu",
+    peak_flops=197e12, mem_bandwidth=819e9, mem_capacity=16 * GB,
+    num_units=1, clock_hz=1.00e9, tiles_per_unit=128,
+    link_bandwidth=50e9, num_links=4, cost_per_hour=1.20))
+TPU_V5P = register(DeviceSpec(
+    "tpu-v5p", "google", "tpu-v5p", "tpu",
+    peak_flops=459e12, mem_bandwidth=2765e9, mem_capacity=95 * GB,
+    num_units=2, clock_hz=1.75e9, tiles_per_unit=64,
+    link_bandwidth=100e9, num_links=6, cost_per_hour=4.20))
+TPU_V6E = register(DeviceSpec(
+    "tpu-v6e", "google", "tpu-v6e", "tpu",
+    peak_flops=918e12, mem_bandwidth=1640e9, mem_capacity=32 * GB,
+    num_units=1, clock_hz=1.40e9, tiles_per_unit=128,
+    link_bandwidth=112e9, num_links=4, cost_per_hour=2.70))
+TRN1 = register(DeviceSpec(
+    "trainium1", "aws", "trn1", "trainium",
+    peak_flops=95e12, mem_bandwidth=820e9, mem_capacity=32 * GB,
+    num_units=2, clock_hz=1.4e9, tiles_per_unit=64,
+    link_bandwidth=48e9, num_links=4, cost_per_hour=1.34))
+TRN2 = register(DeviceSpec(
+    "trainium2", "aws", "trn2", "trainium",
+    peak_flops=650e12, mem_bandwidth=2900e9, mem_capacity=96 * GB,
+    num_units=8, clock_hz=1.4e9, tiles_per_unit=32,
+    link_bandwidth=64e9, num_links=4, cost_per_hour=2.60))
+
+# The host CPU — the device the user "already has" in this container.  The
+# numbers are calibrated at import time cheaply (rough per-core GEMM rate);
+# calibration.py refines the bandwidth/peak numbers empirically.
+CPU_HOST = register(DeviceSpec(
+    "cpu-host", "generic", "x86", "cpu",
+    peak_flops=0.4e12, mem_bandwidth=30e9, mem_capacity=64 * GB,
+    num_units=8, clock_hz=3.0e9, tiles_per_unit=2,
+    link_bandwidth=0.0, num_links=0, cost_per_hour=None))
+
+#: The six paper GPUs, used by paper-parity benchmarks (Figs. 3/4, Sec. 5).
+PAPER_GPUS = ["P4000", "P100", "V100", "RTX2070", "RTX2080Ti", "T4"]
+#: Accelerators the framework targets for real deployments.
+ACCELERATORS = ["tpu-v2", "tpu-v3", "tpu-v4", "tpu-v5e", "tpu-v5p", "tpu-v6e",
+                "trainium1", "trainium2"]
+#: The mandated roofline constants for §Roofline (single source of truth).
+ROOFLINE_PEAK_FLOPS = TPU_V5E.peak_flops       # 197e12
+ROOFLINE_HBM_BW = TPU_V5E.mem_bandwidth        # 819e9
+ROOFLINE_LINK_BW = 50e9

@@ -1,0 +1,172 @@
+"""The Habitat predictor facade (paper Sec. 3.2) plus baseline predictors.
+
+``HabitatPredictor`` combines:
+  * **wave scaling** (Eq. 2, optionally Eq. 1) for kernel-alike ops, and
+  * **pre-trained MLPs** for kernel-varying ops (conv2d / linear / bmm /
+    recurrent).
+
+When an MLP for a kind is unavailable, the predictor falls back to an
+honest analytical roofline estimate (a Paleo-style model) — this fallback is
+also exposed stand-alone as :class:`PaleoPredictor`, one of the baselines the
+paper compares against, along with the peak-FLOPS-ratio heuristic of Fig. 1.
+"""
+
+from __future__ import annotations
+
+import copy
+import dataclasses
+from pathlib import Path
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.core import dataset as dataset_mod
+from repro.core import devices, mlp, wave_scaling
+from repro.core.devices import DeviceSpec
+from repro.core.trace import Op, TrackedTrace
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "mlps"
+
+
+def _analytical_ms(op: Op, dev: DeviceSpec) -> float:
+    """Paleo-style analytical estimate: roofline with generic efficiency.
+
+    Deliberately ignores the simulator's algorithm-selection factor and wave
+    quantization — those are exactly the effects the paper says analytical
+    models miss (Sec. 7, Paleo discussion)."""
+    eff_c = 0.70 if op.kernel_varying else 0.50
+    eff_m = 0.75 if op.kernel_varying else 0.82
+    flops_t = op.cost.flops / (dev.peak_flops * eff_c)
+    mem_t = op.cost.bytes_accessed / (dev.mem_bandwidth * eff_m)
+    return max(flops_t, mem_t) * 1e3
+
+
+class HabitatPredictor:
+    """Scale a measured trace from its origin device to a destination."""
+
+    def __init__(self, mlps: Optional[Dict[str, mlp.TrainedMLP]] = None,
+                 exact_wave: bool = False, model_overhead: bool = False):
+        self.mlps = mlps or {}
+        self.exact_wave = exact_wave
+        self.model_overhead = model_overhead
+
+    # -- per-op ------------------------------------------------------------
+    def predict_op_ms(self, op: Op, origin: DeviceSpec,
+                      dest: DeviceSpec) -> float:
+        if op.kernel_varying:
+            m = self.mlps.get(op.kind)
+            if m is not None:
+                feats = dataset_mod.op_features(op, dest)
+                return float(m.predict_ms(feats)[0])
+            return _analytical_ms(op, dest)
+        if op.measured_ms is None:
+            raise ValueError(f"op {op.name} has no origin measurement")
+        return wave_scaling.scale_time(op.measured_ms, op, origin, dest,
+                                       exact=self.exact_wave,
+                                       model_overhead=self.model_overhead)
+
+    # -- whole trace ---------------------------------------------------------
+    def predict_trace(self, trace: TrackedTrace, dest: str) -> TrackedTrace:
+        origin = devices.get(trace.origin_device)
+        dest_spec = devices.get(dest)
+        new_ops = [copy.copy(op) for op in trace.ops]
+        # batch all MLP queries per kind (one fused inference each)
+        by_kind: Dict[str, list] = {}
+        for i, op in enumerate(new_ops):
+            if op.kernel_varying and op.kind in self.mlps:
+                by_kind.setdefault(op.kind, []).append(i)
+            elif op.kernel_varying:
+                op.predicted_ms = _analytical_ms(op, dest_spec)
+            else:
+                op.predicted_ms = wave_scaling.scale_time(
+                    op.measured_ms, op, origin, dest_spec,
+                    exact=self.exact_wave,
+                    model_overhead=self.model_overhead)
+        for kind, idxs in by_kind.items():
+            feats = np.stack([dataset_mod.op_features(new_ops[i], dest_spec)
+                              for i in idxs])
+            preds = self.mlps[kind].predict_ms(feats)
+            for i, p in zip(idxs, preds):
+                new_ops[i].predicted_ms = float(p)
+        return TrackedTrace(ops=new_ops, origin_device=dest,
+                            label=trace.label)
+
+
+class FlopsRatioPredictor:
+    """The naive heuristic the paper debunks in Fig. 1."""
+
+    def predict_trace(self, trace: TrackedTrace, dest: str) -> TrackedTrace:
+        origin = devices.get(trace.origin_device)
+        dest_spec = devices.get(dest)
+        new_ops = []
+        for op in trace.ops:
+            new_op = copy.copy(op)
+            new_op.predicted_ms = wave_scaling.flops_ratio_heuristic(
+                op.measured_ms, origin, dest_spec)
+            new_ops.append(new_op)
+        return TrackedTrace(ops=new_ops, origin_device=dest,
+                            label=trace.label)
+
+
+class PaleoPredictor:
+    """Purely analytical baseline (no runtime information used at all)."""
+
+    def predict_trace(self, trace: TrackedTrace, dest: str) -> TrackedTrace:
+        dest_spec = devices.get(dest)
+        new_ops = []
+        for op in trace.ops:
+            new_op = copy.copy(op)
+            new_op.predicted_ms = _analytical_ms(op, dest_spec)
+            new_ops.append(new_op)
+        return TrackedTrace(ops=new_ops, origin_device=dest,
+                            label=trace.label)
+
+
+# ---------------------------------------------------------------------------
+# Default predictor: MLPs trained once on simulator-labelled datasets and
+# cached under artifacts/mlps/.  Small-but-sufficient config so first use
+# stays fast on CPU; benchmarks train the full paper-scale MLPs themselves.
+# ---------------------------------------------------------------------------
+_DEFAULT: Optional[HabitatPredictor] = None
+DEFAULT_MLP_CFG = mlp.MLPConfig(hidden_layers=3, hidden_size=256, epochs=30)
+DEFAULT_N_CONFIGS = 2000
+
+
+def train_mlps(kinds: Sequence[str] = ("conv2d", "linear", "bmm",
+                                       "recurrent"),
+               cfg: Optional[mlp.MLPConfig] = None,
+               n_configs: int = DEFAULT_N_CONFIGS,
+               device_names: Optional[Sequence[str]] = None,
+               cache_dir: Optional[Path] = None,
+               force: bool = False,
+               verbose: bool = False) -> Dict[str, mlp.TrainedMLP]:
+    """Train (or load cached) MLP predictors for the given op kinds."""
+    cfg = cfg or DEFAULT_MLP_CFG
+    cache_dir = cache_dir or ARTIFACT_DIR
+    tag = (f"h{cfg.hidden_layers}x{cfg.hidden_size}"
+           f"_e{cfg.epochs}_n{n_configs}")
+    out: Dict[str, mlp.TrainedMLP] = {}
+    if device_names is None:
+        # Default: the whole registry (paper GPUs + accelerators + host), so
+        # the default predictor can target any registered device.  Paper-
+        # parity benchmarks pass devices.PAPER_GPUS explicitly.
+        device_names = sorted(devices.all_devices())
+    for kind in kinds:
+        path = cache_dir / f"{kind}_{tag}.pkl"
+        if path.exists() and not force:
+            out[kind] = mlp.TrainedMLP.load(path)
+            continue
+        ds = dataset_mod.build_dataset(kind, n_configs,
+                                       device_names=device_names)
+        trained = mlp.train(ds, cfg, verbose=verbose)
+        trained.save(path)
+        out[kind] = trained
+    return out
+
+
+def default_predictor(force_retrain: bool = False) -> HabitatPredictor:
+    global _DEFAULT
+    if _DEFAULT is None or force_retrain:
+        mlps = train_mlps(force=force_retrain)
+        _DEFAULT = HabitatPredictor(mlps=mlps)
+    return _DEFAULT

@@ -1,0 +1,272 @@
+"""Operation tracking: the JAX analogue of Habitat's ``OperationTracker``.
+
+The paper intercepts PyTorch operations by monkey-patching (Sec. 4.1).  In
+JAX the computation graph is *first class*: tracing a step function yields a
+jaxpr whose equations are exactly the operations that will run.  We walk the
+jaxpr (recursing through pjit/remat/cond, and through scan with
+multiplicity) and produce a :class:`TrackedTrace` — an ordered list of
+:class:`Op` records, each carrying its analytical cost (flops/bytes), its
+MLP feature vector, and its kernel-alike/kernel-varying classification.
+
+Listing-1-compatible usage::
+
+    tracker = OperationTracker(origin_device="cpu-host")
+    trace = tracker.track(train_step, params, batch)
+    print(trace.to_device("tpu-v5e").run_time_ms)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.extend import core as jcore
+
+from repro.core import costmodel, devices
+from repro.core.costmodel import OpCost
+
+# Operation kinds.  The first four match the paper's kernel-varying set
+# (Table 1); ``recurrent`` covers LSTM *and* other matmul-carrying scans
+# (e.g. Mamba2's SSD recurrence), which are kernel-varying on TPUs because
+# Mosaic/XLA retile them per generation.
+KERNEL_VARYING_KINDS = ("conv2d", "linear", "bmm", "recurrent")
+
+_HIGHER_ORDER = ("pjit", "closed_call", "custom_jvp_call", "custom_vjp_call",
+                 "remat", "checkpoint", "named_call", "core_call",
+                 "custom_vjp_call_jaxpr", "custom_lin")
+
+
+@dataclasses.dataclass
+class Op:
+    """One tracked operation (≈ one GPU kernel launch in the paper)."""
+    name: str                       # primitive name
+    kind: str                       # conv2d | linear | bmm | recurrent | <prim>
+    cost: OpCost
+    multiplicity: int = 1           # how many times it runs per iteration
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    in_shapes: Tuple[Tuple[int, ...], ...] = ()
+    out_shapes: Tuple[Tuple[int, ...], ...] = ()
+    dtype: str = "float32"
+    measured_ms: Optional[float] = None   # T_o on the origin device
+    predicted_ms: Optional[float] = None  # T_d after scaling
+
+    @property
+    def kernel_varying(self) -> bool:
+        return self.kind in KERNEL_VARYING_KINDS
+
+    def feature_vector(self) -> List[float]:
+        """Kind-specific op features for the MLP predictors (Sec. 3.4).
+
+        The paper's per-kind layer dimensions (Table 1), padded to length 7,
+        plus the op's analytical FLOPs and bytes.  The two cost features are
+        an addition over the paper: in JAX a "kind" covers heterogeneous
+        jaxpr patterns (e.g. ``recurrent`` spans LSTM, GRU and SSD scans),
+        so the dimensions alone do not determine the work performed."""
+        p = self.params
+        if self.kind == "conv2d":
+            f = [p.get("batch", 1), p.get("in_ch", 1), p.get("out_ch", 1),
+                 p.get("kernel", 1), p.get("padding", 0), p.get("stride", 1),
+                 p.get("image", 1)]
+        elif self.kind == "linear":
+            f = [p.get("batch", 1), p.get("in_f", 1), p.get("out_f", 1),
+                 p.get("bias", 0), 0, 0, 0]
+        elif self.kind == "bmm":
+            f = [p.get("b", 1), p.get("m", 1), p.get("n", 1), p.get("k", 1),
+                 0, 0, 0]
+        elif self.kind == "recurrent":
+            f = [p.get("batch", 1), p.get("in_f", 1), p.get("hidden", 1),
+                 p.get("seq", 1), p.get("layers", 1), p.get("bidir", 0),
+                 p.get("bias", 0)]
+        else:
+            f = [self.cost.intensity, 0, 0, 0, 0, 0, 0]
+        f = f + [self.cost.flops, self.cost.bytes_accessed]
+        return [float(x) for x in f]
+
+
+def _classify_dot(eqn, cost_params) -> Tuple[str, Dict[str, Any]]:
+    b = cost_params.get("b", 1)
+    m, n, k = (cost_params.get(x, 1) for x in ("m", "n", "k"))
+    if b > 1:
+        return "bmm", {"b": b, "m": m, "n": n, "k": k}
+    return "linear", {"batch": m, "in_f": k, "out_f": n, "bias": 0,
+                      "b": b, "m": m, "n": n, "k": k}
+
+
+def _classify_conv(eqn) -> Dict[str, Any]:
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    dnums = eqn.params["dimension_numbers"]
+    ls, rs = dnums.lhs_spec, dnums.rhs_spec
+    spatial = [lhs.shape[d] for d in ls[2:]]
+    ksize = [rhs.shape[d] for d in rs[2:]]
+    strides = eqn.params.get("window_strides", (1,))
+    padding = eqn.params.get("padding", ((0, 0),))
+    return {
+        "batch": lhs.shape[ls[0]], "in_ch": lhs.shape[ls[1]],
+        "out_ch": rhs.shape[rs[0]],
+        "kernel": ksize[0] if ksize else 1,
+        "stride": strides[0] if strides else 1,
+        "padding": padding[0][0] if padding else 0,
+        "image": spatial[0] if spatial else 1,
+    }
+
+
+def _scan_is_recurrent(jaxpr) -> bool:
+    """A scan whose body does a matmul is a recurrent (kernel-varying) op."""
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in ("dot_general", "conv_general_dilated"):
+            return True
+        sub = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+        if sub is not None:
+            inner = sub.jaxpr if hasattr(sub, "jaxpr") else sub
+            if _scan_is_recurrent(inner):
+                return True
+    return False
+
+
+def _recurrent_params(eqn) -> Dict[str, Any]:
+    body = eqn.params["jaxpr"].jaxpr
+    length = eqn.params["length"]
+    hidden = batch = in_f = 1
+    for beqn in body.eqns:
+        if beqn.primitive.name == "dot_general":
+            _, p = costmodel.eqn_cost(beqn)
+            batch = max(batch, p.get("m", 1))
+            in_f = max(in_f, p.get("k", 1))
+            hidden = max(hidden, p.get("n", 1))
+    return {"batch": batch, "in_f": in_f, "hidden": hidden, "seq": length,
+            "layers": 1, "bidir": 0, "bias": 0}
+
+
+def _walk(jaxpr, ops: List[Op], multiplicity: int) -> None:
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim in _HIGHER_ORDER:
+            sub = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+            if sub is not None:
+                _walk(sub.jaxpr if hasattr(sub, "jaxpr") else sub,
+                      ops, multiplicity)
+            continue
+        if prim == "cond":
+            # Track the most expensive branch (paper: worst case per step).
+            branches = eqn.params["branches"]
+            costs = [costmodel.jaxpr_cost(b.jaxpr) for b in branches]
+            best = int(np.argmax([c.flops + c.bytes_accessed for c in costs]))
+            _walk(branches[best].jaxpr, ops, multiplicity)
+            continue
+        if prim == "while":
+            _walk(eqn.params["body_jaxpr"].jaxpr, ops, multiplicity)
+            continue
+        if prim == "scan":
+            body = eqn.params["jaxpr"].jaxpr
+            length = int(eqn.params["length"])
+            if _scan_is_recurrent(body):
+                cost, _ = costmodel.eqn_cost(eqn)
+                p = _recurrent_params(eqn)
+                ops.append(Op(
+                    name="scan", kind="recurrent", cost=cost,
+                    multiplicity=multiplicity, params=p,
+                    in_shapes=tuple(tuple(v.aval.shape) for v in eqn.invars
+                                    if hasattr(v, "aval")),
+                    out_shapes=tuple(tuple(v.aval.shape)
+                                     for v in eqn.outvars),
+                    dtype=_dtype_of(eqn)))
+            else:
+                _walk(body, ops, multiplicity * length)
+            continue
+
+        cost, cparams = costmodel.eqn_cost(eqn)
+        if prim == "dot_general":
+            kind, params = _classify_dot(eqn, cparams)
+        elif prim == "conv_general_dilated":
+            kind, params = "conv2d", _classify_conv(eqn)
+        else:
+            kind, params = prim, dict(cparams)
+        ops.append(Op(
+            name=prim, kind=kind, cost=cost, multiplicity=multiplicity,
+            params=params,
+            in_shapes=tuple(tuple(v.aval.shape) for v in eqn.invars
+                            if hasattr(v, "aval")
+                            and not isinstance(v, jcore.Literal)),
+            out_shapes=tuple(tuple(v.aval.shape) for v in eqn.outvars),
+            dtype=_dtype_of(eqn)))
+
+
+def _dtype_of(eqn) -> str:
+    for v in eqn.outvars:
+        if hasattr(v, "aval") and hasattr(v.aval, "dtype"):
+            return str(v.aval.dtype)
+    return "float32"
+
+
+@dataclasses.dataclass
+class TrackedTrace:
+    """The result of tracking one training/serving iteration."""
+    ops: List[Op]
+    origin_device: str
+    label: str = "iteration"
+
+    # ---- aggregate views -------------------------------------------------
+    @property
+    def run_time_ms(self) -> float:
+        times = [(op.predicted_ms if op.predicted_ms is not None
+                  else op.measured_ms) for op in self.ops]
+        if any(t is None for t in times):
+            raise ValueError("trace has unmeasured ops; call measure() first")
+        return float(sum(t * op.multiplicity
+                         for t, op in zip(times, self.ops)))
+
+    @property
+    def total_cost(self) -> OpCost:
+        total = OpCost()
+        for op in self.ops:
+            total = total + op.cost.scaled(op.multiplicity)
+        return total
+
+    def breakdown(self) -> Dict[str, float]:
+        """Per-kind time breakdown in ms (paper Fig. 4)."""
+        out: Dict[str, float] = {}
+        for op in self.ops:
+            t = op.predicted_ms if op.predicted_ms is not None \
+                else (op.measured_ms or 0.0)
+            out[op.kind] = out.get(op.kind, 0.0) + t * op.multiplicity
+        return out
+
+    def measure(self, method: str = "simulate") -> "TrackedTrace":
+        """Fill ``measured_ms`` for every op on the origin device."""
+        if method == "simulate":
+            from repro.core import simulator
+            dev = devices.get(self.origin_device)
+            for op in self.ops:
+                op.measured_ms = simulator.op_time_ms(op, dev)
+        elif method == "wallclock":
+            from repro.core import calibration
+            calibration.measure_trace_inplace(self)
+        else:
+            raise ValueError(f"unknown measure method {method!r}")
+        return self
+
+    def to_device(self, dest: str, predictor=None) -> "TrackedTrace":
+        """Predict this trace's execution on a different device (Listing 1)."""
+        from repro.core import predictor as predictor_mod
+        pred = predictor or predictor_mod.default_predictor()
+        return pred.predict_trace(self, dest)
+
+
+class OperationTracker:
+    """Traces a step function and measures per-op times on the origin."""
+
+    def __init__(self, origin_device: str = "cpu-host",
+                 measure: str = "simulate"):
+        self.origin_device = origin_device
+        self.measure_method = measure
+
+    def track(self, fn, *args, label: str = "iteration",
+              **kwargs) -> TrackedTrace:
+        closed = jax.make_jaxpr(fn)(*args, **kwargs)
+        ops: List[Op] = []
+        _walk(closed.jaxpr, ops, 1)
+        trace = TrackedTrace(ops=ops, origin_device=self.origin_device,
+                             label=label)
+        return trace.measure(self.measure_method)

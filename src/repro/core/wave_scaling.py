@@ -1,0 +1,90 @@
+"""Wave scaling (paper Sec. 3.3) and roofline-based γ selection (Sec. 4.2).
+
+Equation 1 (exact, with wave quantization):
+
+    T_d = ceil(B/W_d) * ((D_o/D_d) * (W_d/W_o))^γ * (C_o/C_d)^(1-γ)
+          * ceil(B/W_o)^(-1) * T_o
+
+Equation 2 (the large-B limit Habitat uses in practice):
+
+    T_d = (D_o/D_d)^γ * (W_o/W_d)^(1-γ) * (C_o/C_d)^(1-γ) * T_o
+
+Equation 3 (γ from arithmetic intensity x and destination ridge point R):
+
+    γ = 1 - 0.5 x / R          if x <  R      (memory-bandwidth bound side)
+    γ = 0.5 R / x              otherwise      (compute bound side)
+
+On TPUs the "wave" is a wave of VMEM grid tiles rather than thread blocks
+(see DESIGN.md §2); ``B`` is derived from the op's memory footprint and a
+VMEM-sized tile, ``W_i`` from the device spec.
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.core.devices import DeviceSpec
+from repro.core.trace import Op
+
+#: Working-set bytes of one grid tile (a thread block's slice on GPUs; an
+#: 8x128-lane VMEM sub-tile batch on TPUs).  The same constant is used by the
+#: simulator so the exact Eq. 1 is testable against it.
+TILE_BYTES = 64.0 * 1024
+
+
+def num_tiles(op: Op) -> int:
+    """B: the number of grid tiles ("thread blocks") of an op."""
+    return max(1, int(math.ceil(op.cost.bytes_accessed / TILE_BYTES)))
+
+
+def gamma(op: Op, dest: DeviceSpec) -> float:
+    """Eq. 3.  γ ∈ [0, 1]: 1 = fully memory-bandwidth bound."""
+    x = op.cost.intensity
+    r = dest.ridge_point
+    if x <= 0.0:
+        return 1.0
+    if x < r:
+        return 1.0 - 0.5 * x / r
+    return 0.5 * r / x
+
+
+#: per-kernel dispatch overhead in ms (matches simulator._LAUNCH_OVERHEAD_MS)
+DISPATCH_OVERHEAD_MS = {"gpu": 5e-3, "tpu": 1.5e-3, "trainium": 2e-3,
+                        "cpu": 2e-2}
+
+
+def scale_time(t_o_ms: float, op: Op, origin: DeviceSpec, dest: DeviceSpec,
+               exact: bool = False, gamma_override: float = None,
+               model_overhead: bool = False) -> float:
+    """Scale a measured time T_o from ``origin`` to ``dest`` (Eq. 1 / Eq. 2).
+
+    ``model_overhead`` (beyond paper): treat the fixed kernel dispatch
+    latency as unscalable — subtract the origin's before scaling, add the
+    destination's after.  Matters for launch-bound small kernels."""
+    g = gamma(op, dest) if gamma_override is None else gamma_override
+    d_ratio = origin.mem_bandwidth / dest.mem_bandwidth
+    c_ratio = origin.clock_hz / dest.clock_hz
+    w_o, w_d = origin.wave_size, dest.wave_size
+    if exact:
+        b = num_tiles(op)
+        waves_d = math.ceil(b / w_d)
+        waves_o = math.ceil(b / w_o)
+        factor = (waves_d
+                  * (d_ratio * (w_d / w_o)) ** g
+                  * c_ratio ** (1.0 - g)
+                  / waves_o)
+    else:
+        factor = (d_ratio ** g
+                  * (w_o / w_d) ** (1.0 - g)
+                  * c_ratio ** (1.0 - g))
+    if model_overhead:
+        oh_o = DISPATCH_OVERHEAD_MS[origin.kind]
+        oh_d = DISPATCH_OVERHEAD_MS[dest.kind]
+        return max(t_o_ms - oh_o, 0.0) * factor + oh_d
+    return t_o_ms * factor
+
+
+def flops_ratio_heuristic(t_o_ms: float, origin: DeviceSpec,
+                          dest: DeviceSpec) -> float:
+    """The naive peak-FLOPS-ratio baseline the paper debunks (Fig. 1)."""
+    return t_o_ms * origin.peak_flops / dest.peak_flops

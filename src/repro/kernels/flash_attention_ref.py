@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the flash-attention Pallas kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """q: (B, H, Sq, D); k, v: (B, KV, Skv, D)."""
+    b, h, sq, d = q.shape
+    kv, skv = k.shape[1], k.shape[2]
+    rep = h // kv
+    kr = jnp.repeat(k, rep, axis=1)
+    vr = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhsd->bhqs", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * (d ** -0.5)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok = ok & (kpos <= qpos)
+    if window > 0:
+        ok = ok & (qpos - kpos < window)
+    s = jnp.where(ok[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqs,bhsd->bhqd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)

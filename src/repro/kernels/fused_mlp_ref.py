@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused-MLP Pallas kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_mlp_ref(x: jnp.ndarray, weights: jnp.ndarray,
+                  biases: jnp.ndarray) -> jnp.ndarray:
+    """x (B, H), weights (L, H, H), biases (L, H) -> (B,)."""
+    h = x.astype(jnp.float32)
+    nl = weights.shape[0]
+    for i in range(nl):
+        z = h @ weights[i].astype(jnp.float32) + biases[i].astype(jnp.float32)
+        h = z if i == nl - 1 else jax.nn.relu(z)
+    return h[:, 0]

@@ -1,0 +1,77 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Dispatch policy: on TPU backends the compiled Pallas kernel runs; on CPU
+(this container) callers choose between ``impl="jnp"`` (the oracle, fast)
+and ``impl="interpret"`` (the kernel body executed by the Pallas
+interpreter, used by the validation tests).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import flash_attention_ref as fa_ref
+from repro.kernels import fused_mlp as fm
+from repro.kernels import fused_mlp_ref as fm_ref
+from repro.kernels import ssd as ssd_k
+from repro.kernels import ssd_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "jnp"
+    return impl
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "impl"))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    impl: str = "auto"):
+    """q (B,H,Sq,D); k,v (B,KV,Skv,D)."""
+    impl = _resolve(impl)
+    if impl == "jnp":
+        return fa_ref.flash_attention_ref(q, k, v, causal, window)
+    return fa.flash_attention(q, k, v, causal=causal, window=window,
+                              interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def ssd(x, dt, a, bmat, cmat, chunk: int = 128, impl: str = "auto"):
+    """x (B,H,L,P); dt (B,H,L); a (H,); bmat/cmat (B,H,L,N)."""
+    impl = _resolve(impl)
+    if impl == "jnp":
+        return ssd_ref.ssd_ref(x, dt, a, bmat, cmat)
+    return ssd_k.ssd(x, dt, a, bmat, cmat, chunk=chunk,
+                     interpret=(impl == "interpret"))
+
+
+def pack_mlp_params(params, in_features: int,
+                    hidden: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pack a repro.core.mlp parameter list into uniform (L, H, H) blocks."""
+    ws, bs = [], []
+    for w, b in params:
+        wp = jnp.zeros((hidden, hidden), jnp.float32)
+        wp = wp.at[:w.shape[0], :w.shape[1]].set(w)
+        bp = jnp.zeros((hidden,), jnp.float32)
+        bp = bp.at[:b.shape[0]].set(b)
+        ws.append(wp)
+        bs.append(bp)
+    return jnp.stack(ws), jnp.stack(bs)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def fused_mlp(x, weights, biases, impl: str = "auto"):
+    """x (B, H) padded features; weights (L,H,H); biases (L,H) -> (B,)."""
+    impl = _resolve(impl)
+    if impl == "jnp":
+        return fm_ref.fused_mlp_ref(x, weights, biases)
+    return fm.fused_mlp(x, weights, biases, interpret=(impl == "interpret"))

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the SSD Pallas kernel: the naive sequential
+recurrence S_t = S_{t-1} exp(dt_t a) + dt_t b_t x_t^T;  y_t = c_t . S_t."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+            bmat: jnp.ndarray, cmat: jnp.ndarray) -> jnp.ndarray:
+    """x (B,H,L,P), dt (B,H,L), a (H,), bmat/cmat (B,H,L,N) -> (B,H,L,P)."""
+    b, h, l, p = x.shape
+    n = bmat.shape[-1]
+
+    def step(s, inp):
+        xt, dtt, bt, ct = inp                         # (B,H,P),(B,H),(B,H,N)
+        decay = jnp.exp(dtt * a)[..., None, None]
+        s = s * decay + (dtt[..., None] * bt)[..., :, None] * xt[..., None, :]
+        y = jnp.einsum("bhn,bhnp->bhp", ct, s)
+        return s, y
+
+    s0 = jnp.zeros((b, h, n, p), jnp.float32)
+    xs = (x.transpose(2, 0, 1, 3).astype(jnp.float32),
+          dt.transpose(2, 0, 1).astype(jnp.float32),
+          bmat.transpose(2, 0, 1, 3).astype(jnp.float32),
+          cmat.transpose(2, 0, 1, 3).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 2, 0, 3)

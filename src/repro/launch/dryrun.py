@@ -1,0 +1,189 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell on the production meshes, prove memory fits, and extract roofline
+terms.
+
+The two lines above MUST stay the first statements in this module: jax
+locks the device count at first init, and the dry-run needs 512 host
+placeholder devices to build the production meshes.  Never set this
+globally — smoke tests and benchmarks see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--both]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.launch import hlo_analysis, specs
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import SHAPES
+from repro.parallel import ctx, sharding
+from repro.train.optim import adamw
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·D for training; 2·N_active per generated token for decode."""
+    n_active = cfg.n_active_params()
+    if shape.mode == "train":
+        return 6.0 * n_active * shape.tokens
+    if shape.mode == "prefill":
+        return 2.0 * n_active * shape.tokens
+    return 2.0 * n_active * shape.global_batch  # one token per sequence
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             verbose: bool = True):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return {"arch": arch, "shape": shape_name,
+                "multi_pod": multi_pod, "status": "skipped",
+                "reason": "pure full-attention arch; long_500k requires "
+                          "sub-quadratic attention (DESIGN.md §4)"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    optimizer = adamw()
+    t0 = time.time()
+
+    profile = getattr(cfg, "sharding_profile", "2d")
+    if shape.mode != "train" and getattr(cfg, "sharding_profile_serve", ""):
+        profile = cfg.sharding_profile_serve
+    if profile == "dp" and shape.global_batch % chips != 0:
+        # pure DP requires global_batch >= devices (e.g. batch 256 on the
+        # 512-chip 2-pod mesh): fall back to 2D FSDPxTP
+        profile = "2d"
+    with ctx.use_mesh(mesh):
+        if profile == "dp":
+            ctx.set_batch_axes(("pod", "data", "model"))
+            ctx.set_seq_axes(())
+        elif profile == "sp":
+            ctx.set_batch_axes(("pod", "data"))
+            ctx.set_seq_axes(("model",))
+        else:
+            ctx.set_batch_axes(("pod", "data"))
+            ctx.set_seq_axes(())
+        params_abs = specs.abstract_params(cfg)
+        step_fn = specs.step_fn_for(cfg, shape, optimizer, profile)
+        batch_abs = specs.input_specs(cfg, shape)
+        batch_sh = sharding.tree_shardings(
+            sharding.batch_specs(batch_abs, mesh, profile=profile), mesh)
+
+        if shape.mode == "train":
+            state_abs = specs.abstract_train_state(cfg, optimizer)
+            state_sh = sharding.tree_shardings(
+                sharding.param_specs(state_abs, mesh, profile), mesh)
+            lowered = jax.jit(step_fn,
+                              in_shardings=(state_sh, batch_sh),
+                              out_shardings=(state_sh, None),
+                              donate_argnums=(0,)
+                              ).lower(state_abs, batch_abs)
+        elif shape.mode == "prefill":
+            params_sh = sharding.tree_shardings(
+                sharding.param_specs(params_abs, mesh, profile), mesh)
+            lowered = jax.jit(step_fn,
+                              in_shardings=(params_sh, batch_sh)
+                              ).lower(params_abs, batch_abs)
+        else:  # decode
+            params_sh = sharding.tree_shardings(
+                sharding.param_specs(params_abs, mesh, profile), mesh)
+            dstate_abs = specs.abstract_decode_state(
+                cfg, shape.global_batch, shape.seq_len)
+            dstate_sh = sharding.tree_shardings(
+                sharding.cache_specs(dstate_abs, mesh, shape.global_batch),
+                mesh)
+            lowered = jax.jit(step_fn,
+                              in_shardings=(params_sh, batch_sh, dstate_sh),
+                              out_shardings=(None, dstate_sh),
+                              donate_argnums=(2,)
+                              ).lower(params_abs, batch_abs, dstate_abs)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    roof = hlo_analysis.analyze(compiled, chips)
+    mf = model_flops(cfg, shape)
+    hlo_total_flops = roof.flops_per_device * chips
+    result = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "status": "ok", "chips": chips,
+        "mesh": dict(mesh.shape),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "model_flops": mf,
+        "useful_flops_ratio": mf / max(hlo_total_flops, 1.0),
+        **roof.as_dict(),
+    }
+    try:
+        mem = compiled.memory_analysis()
+        if mem is not None and verbose:
+            print(f"  memory_analysis: {mem}")
+    except Exception:
+        pass
+    if verbose:
+        print(f"[{arch} x {shape_name} x "
+              f"{'2pod' if multi_pod else '1pod'}] "
+              f"compute {roof.compute_s * 1e3:.2f}ms "
+              f"memory {roof.memory_s * 1e3:.2f}ms "
+              f"collective {roof.collective_s * 1e3:.2f}ms "
+              f"-> {roof.bound}-bound "
+              f"(useful flops {result['useful_flops_ratio']:.2f}, "
+              f"compile {t_compile:.0f}s)")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both", action="store_true",
+                    help="run single-pod AND multi-pod meshes")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    archs = ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    pods = [False, True] if args.both else [args.multi_pod]
+
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in pods:
+                tag = f"{arch}_{shape_name}_{'2pod' if mp else '1pod'}"
+                path = out_dir / f"{tag}.json"
+                if path.exists():
+                    print(f"[skip existing] {tag}")
+                    continue
+                try:
+                    result = run_cell(arch, shape_name, mp)
+                except Exception as e:
+                    failures += 1
+                    result = {"arch": arch, "shape": shape_name,
+                              "multi_pod": mp, "status": "error",
+                              "error": f"{type(e).__name__}: {e}",
+                              "traceback": traceback.format_exc()[-2000:]}
+                    print(f"[FAIL] {tag}: {result['error']}")
+                path.write_text(json.dumps(result, indent=1))
+    print(f"done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

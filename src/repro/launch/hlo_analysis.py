@@ -1,0 +1,299 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+  compute    = HLO_FLOPs / (chips x 197e12 bf16 FLOP/s)
+  memory     = HLO_bytes / (chips x 819 GB/s HBM)
+  collective = collective_bytes / (chips x 50 GB/s ICI link)
+
+``compiled.cost_analysis()`` is NOT sufficient here: on this backend it
+counts a ``while`` (scan-over-layers) body ONCE, under-counting flops,
+bytes and in-loop collectives by ~n_layers.  We therefore walk the
+optimized per-device HLO text ourselves:
+
+  * per-computation symbol tables give every instruction's output shape;
+  * dot/convolution flops from contracting-dim attributes;
+  * bytes = operands + outputs of every materializing instruction
+    (fusions counted at the call site — their internals are registers);
+  * ``while`` instructions multiply their body cost by the trip count from
+    ``backend_config={"known_trip_count":{"n": …}}``;
+  * collective bytes per class (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute), loop-aware.
+
+The module is the SPMD-partitioned per-device program, so every number is
+per-device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.devices import (ROOFLINE_HBM_BW, ROOFLINE_LINK_BW,
+                                ROOFLINE_PEAK_FLOPS)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+#: instructions that do not touch HBM on their own
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "add-dependency", "while",
+             "conditional", "call", "partition-id", "replica-id",
+             "iota", "custom-call"}
+
+_SHAPE_RE = re.compile(
+    r"\b(pred|bf16|f16|f32|f64|s4|s8|s16|s32|s64|u4|u8|u16|u32|u64|c64|c128|"
+    r"f8e4m3fn|f8e5m2)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$")
+
+
+def _shape_list_bytes(text: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _shape_dims(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in COLLECTIVES})
+    coll_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in COLLECTIVES})
+
+    def add(self, other: "Cost", k: float = 1.0):
+        self.flops += other.flops * k
+        self.bytes += other.bytes * k
+        for c in COLLECTIVES:
+            self.coll[c] += other.coll[c] * k
+            self.coll_counts[c] += other.coll_counts[c] * k
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[str]] = {}
+        name = None
+        for line in text.splitlines():
+            if not line:
+                continue
+            if not line[0].isspace():
+                m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+                if m and "{" in line:
+                    name = m.group(1)
+                    self.computations[name] = []
+                    if line.lstrip().startswith("ENTRY"):
+                        self.entry = name
+                    continue
+                name = None
+            elif name is not None:
+                self.computations[name].append(line)
+        self._cost_cache: Dict[str, Cost] = {}
+
+    # -- per-instruction helpers -------------------------------------------
+    @staticmethod
+    def _dot_flops(out_shapes, line: str, symtab) -> float:
+        out_n = 1
+        for _, dims in out_shapes:
+            for d in dims:
+                out_n *= d
+        m = re.search(r"dot\(%?([\w.\-]+),", line)
+        contract = 1
+        cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+        if m and cm and m.group(1) in symtab:
+            lhs_dims = symtab[m.group(1)]
+            for idx in cm.group(1).split(","):
+                if idx and int(idx) < len(lhs_dims):
+                    contract *= lhs_dims[int(idx)]
+        return 2.0 * out_n * contract
+
+    @staticmethod
+    def _conv_flops(out_shapes, line: str, symtab) -> float:
+        out_n = 1
+        for _, dims in out_shapes:
+            for d in dims:
+                out_n *= d
+        m = re.search(r"convolution\(%?([\w.\-]+),\s*%?([\w.\-]+)\)", line)
+        red = 1
+        if m and m.group(2) in symtab:
+            rhs = symtab[m.group(2)]
+            dl = re.search(r"dim_labels=\w+_(\w+)->", line)
+            if dl and rhs:
+                # rhs reduction size = prod(rhs) / out_channels
+                o_pos = dl.group(1).find("o")
+                if 0 <= o_pos < len(rhs):
+                    red = 1
+                    for i, d in enumerate(rhs):
+                        if i != o_pos:
+                            red *= d
+        return 2.0 * out_n * red
+
+    def _computation_cost(self, name: str) -> Cost:
+        if name in self._cost_cache:
+            return self._cost_cache[name]
+        cost = Cost()
+        self._cost_cache[name] = cost  # guards recursion
+        lines = self.computations.get(name, [])
+        # symbol table: instruction -> (first output dims, bytes of all outs)
+        symtab: Dict[str, List[int]] = {}
+        sym_bytes: Dict[str, float] = {}
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if m:
+                shapes = _shape_dims(m.group(2))
+                if shapes:
+                    symtab[m.group(1)] = shapes[0][1]
+                sym_bytes[m.group(1)] = _shape_list_bytes(m.group(2))
+        # parameters from header are rarely needed (GTE carries shapes)
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            _, out_ty, op, rest = m.groups()
+            out_shapes = _shape_dims(out_ty)
+            out_bytes = _shape_list_bytes(out_ty)
+            if op == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", line)
+                trips = 1.0
+                tm = re.search(r'known_trip_count[^\d]*(\d+)', line)
+                if tm:
+                    trips = float(tm.group(1))
+                if bm:
+                    cost.add(self._computation_cost(bm.group(1)), trips)
+                continue
+            if op in ("call", "conditional", "async-start"):
+                for cm in re.finditer(r"(?:to_apply|calls|called_computations)"
+                                      r"=%?\{?%?([\w.\-]+)", line):
+                    cost.add(self._computation_cost(cm.group(1)), 1.0)
+                continue
+            # operand bytes via symbol table (dtype-aware)
+            operand_bytes = 0.0
+            args = rest.split(")", 1)[0]
+            for om in re.finditer(r"%([\w.\-]+)", args):
+                operand_bytes += sym_bytes.get(om.group(1), 0.0)
+            if op in COLLECTIVES or op.rstrip("-start") in COLLECTIVES:
+                base = op if op in COLLECTIVES else op[:-6]
+                cost.coll[base] += out_bytes
+                cost.coll_counts[base] += 1
+                cost.bytes += out_bytes + operand_bytes
+                continue
+            if op in _FREE_OPS:
+                continue
+            if op == "dot":
+                cost.flops += self._dot_flops(out_shapes, line, symtab)
+            elif op == "convolution":
+                cost.flops += self._conv_flops(out_shapes, line, symtab)
+            elif op == "fusion" or op.startswith("reduce") or op in (
+                    "select-and-scatter", "scatter", "sort", "map"):
+                # 1 flop per output element as the elementwise proxy
+                for _, dims in out_shapes:
+                    n = 1
+                    for d in dims:
+                        n *= d
+                    cost.flops += n
+            cost.bytes += out_bytes + operand_bytes
+        return cost
+
+    def total_cost(self) -> Cost:
+        return self._computation_cost(self.entry)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    chips: int
+    collective_detail: Dict[str, float]
+    collective_counts: Dict[str, float]
+    xla_cost_analysis: Dict[str, float]
+    peak_bytes_per_device: Optional[float] = None
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / ROOFLINE_PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / ROOFLINE_HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / ROOFLINE_LINK_BW
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bound": self.bound,
+            "step_s": self.step_s,
+            "collective_detail": self.collective_detail,
+            "collective_counts": self.collective_counts,
+            "xla_cost_analysis": self.xla_cost_analysis,
+            "peak_bytes_per_device": self.peak_bytes_per_device,
+        }
+
+
+def analyze(compiled, chips: int) -> Roofline:
+    text = compiled.as_text()
+    mod = HloModule(text)
+    cost = mod.total_cost()
+    xla_cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        xla_cost = {"flops": float(ca.get("flops", 0.0)),
+                    "bytes_accessed": float(ca.get("bytes accessed", 0.0))}
+    except Exception:
+        pass
+    peak = None
+    try:
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            peak = float(getattr(mem, "temp_size_in_bytes", 0)
+                         + getattr(mem, "argument_size_in_bytes", 0)
+                         + getattr(mem, "output_size_in_bytes", 0)
+                         - getattr(mem, "alias_size_in_bytes", 0))
+    except Exception:
+        pass
+    return Roofline(
+        flops_per_device=cost.flops, bytes_per_device=cost.bytes,
+        collective_bytes_per_device=sum(cost.coll.values()), chips=chips,
+        collective_detail=dict(cost.coll),
+        collective_counts=dict(cost.coll_counts),
+        xla_cost_analysis=xla_cost, peak_bytes_per_device=peak)

@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state.  The single-pod production mesh is 16 x 16 = 256
+chips (a TPU v5e pod); the multi-pod mesh adds a leading "pod" axis
+(2 x 16 x 16 = 512 chips, cross-pod traffic over DCN).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _make(shape, axes):
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _make(shape, axes)
+
+
+def make_smoke_mesh(n_devices: int = None, model: int = 2):
+    """A small mesh over however many devices the host exposes (tests)."""
+    n = n_devices or len(jax.devices())
+    model = min(model, n)
+    return _make((n // model, model), ("data", "model"))

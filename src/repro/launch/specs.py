@@ -1,0 +1,88 @@
+"""ShapeDtypeStruct stand-ins for every (architecture x shape) cell.
+
+``input_specs`` builds weak-type-correct, shardable abstract inputs for the
+step function each cell lowers — no device allocation ever happens (the
+dry-run compiles against these).  ``abstract_state`` does the same for
+TrainState / decode caches via jax.eval_shape.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig, ShapeConfig, SHAPES
+from repro.train.optim import Optimizer, adamw
+from repro.train.train_step import TrainState, make_train_step
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape),
+                                jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract model inputs for this cell's step function."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.mode == "train":
+        batch = {"tokens": sds((b, s), jnp.int32),
+                 "labels": sds((b, s), jnp.int32)}
+        if cfg.frontend:
+            batch["prefix_embeds"] = sds(
+                (b, cfg.frontend_prefix_len, cfg.frontend_dim), jnp.float32)
+        return batch
+    if shape.mode == "prefill":
+        batch = {"tokens": sds((b, s), jnp.int32)}
+        if cfg.frontend:
+            batch["prefix_embeds"] = sds(
+                (b, cfg.frontend_prefix_len, cfg.frontend_dim), jnp.float32)
+        return batch
+    # decode: one new token against a seq_len-deep KV cache
+    return {"tokens": sds((b, 1), jnp.int32)}
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(
+        lambda: tfm.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_train_state(cfg: ModelConfig,
+                         optimizer: Optional[Optimizer] = None) -> TrainState:
+    optimizer = optimizer or adamw()
+    params = abstract_params(cfg)
+
+    def build(params):
+        return TrainState(params=params, opt=optimizer.init(params),
+                          step=jnp.zeros((), jnp.int32))
+    return jax.eval_shape(build, params)
+
+
+def abstract_decode_state(cfg: ModelConfig, batch: int, max_seq: int) -> Any:
+    return jax.eval_shape(
+        lambda: tfm.init_decode_state(cfg, batch, max_seq))
+
+
+def step_fn_for(cfg: ModelConfig, shape: ShapeConfig,
+                optimizer: Optional[Optimizer] = None,
+                profile: str = "2d") -> Callable:
+    """The function each cell lowers: train_step / prefill / decode_step."""
+    if shape.mode == "train":
+        # dp cannot keep full-mesh batch coverage across microbatches
+        accum = cfg.train_accum_steps if profile == "2d" else 1
+        return make_train_step(cfg, optimizer or adamw(),
+                               accum_steps=accum)
+    if shape.mode == "prefill":
+        max_seq = shape.seq_len + cfg.frontend_prefix_len
+
+        def prefill_step(params, batch):
+            return tfm.prefill(params, cfg, batch["tokens"], max_seq,
+                               batch.get("prefix_embeds"))
+        return prefill_step
+    def serve_step(params, batch, state):
+        return tfm.decode_step(params, cfg, batch["tokens"], state)
+    return serve_step

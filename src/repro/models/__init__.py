@@ -1,0 +1,7 @@
+"""Model substrate: the 10 assigned LM-family architectures plus the
+paper's own evaluation networks (ResNet/Inception/GNMT/Transformer/DCGAN).
+"""
+
+from repro.models.config import ModelConfig, ShapeConfig, SHAPES
+from repro.models.transformer import (init_params, forward, loss_fn,
+                                      init_decode_state, prefill, decode_step)

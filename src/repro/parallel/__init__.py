@@ -1,0 +1,2 @@
+from repro.parallel.sharding import (param_specs, batch_specs, cache_specs,
+                                     tree_shardings, comm_volumes)

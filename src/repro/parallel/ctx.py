@@ -1,0 +1,95 @@
+"""Mesh context for interior sharding constraints.
+
+Model code calls ``constrain(x, 'axis0', 'axis1', ...)`` to hint activation
+shardings (MoE dispatch buffers, attention activations).  Outside a mesh
+context (unit tests, single-device smoke runs) it is a no-op; inside, axes
+missing from the mesh or non-divisible dims degrade to None, so the same
+model code runs on any mesh shape.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    """Activate ``mesh`` for ``constrain`` calls (and as jax mesh context)."""
+    prev = current_mesh()
+    _state.mesh = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _state.mesh = prev
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        size = 1
+        for a in axis:
+            size *= _axis_size(mesh, a)
+        return size
+    return mesh.shape.get(axis, 1)
+
+
+def batch_axes() -> Tuple[str, ...]:
+    """Axes the launcher designates for batch sharding (profile-aware)."""
+    return getattr(_state, "batch_axes", ("pod", "data"))
+
+
+def set_batch_axes(axes: Tuple[str, ...]):
+    _state.batch_axes = tuple(axes)
+
+
+def seq_axes() -> Tuple[str, ...]:
+    """Axes for sequence sharding (sequence-parallel profile)."""
+    return getattr(_state, "seq_axes", ())
+
+
+def set_seq_axes(axes: Tuple[str, ...]):
+    _state.seq_axes = tuple(axes)
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint(x, P(*axes)) if a mesh is active; no-op
+    otherwise.  Axes absent from the mesh are dropped; tuple axes shrink
+    until the dim divides; still-non-divisible dims -> None.  The sentinel
+    string "batch" resolves to the launcher-selected batch axes."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = []
+    used: set = set()
+    for dim, ax in zip(np.shape(x), axes):
+        if ax == "batch":
+            ax = batch_axes()
+        elif ax == "seq":
+            ax = seq_axes() or None
+        if isinstance(ax, (tuple, list)):
+            ax = tuple(a for a in ax if a in mesh.axis_names
+                       and a not in used)
+            while ax and dim % _axis_size(mesh, ax) != 0:
+                ax = ax[:-1]
+            ax = ax if ax else None
+        elif ax is not None and (ax not in mesh.axis_names or ax in used
+                                 or dim % _axis_size(mesh, ax) != 0):
+            ax = None
+        if ax is not None:
+            used.update(ax if isinstance(ax, tuple) else (ax,))
+        spec.append(ax)
+    return jax.lax.with_sharding_constraint(x, P(*spec))

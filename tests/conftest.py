@@ -1,0 +1,11 @@
+import os
+import sys
+from pathlib import Path
+
+# NOTE: deliberately NO --xla_force_host_platform_device_count here.
+# Smoke tests and benches must see 1 device; only launch/dryrun.py (and the
+# subprocess-based sharding tests) force placeholder devices.
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))

@@ -1,0 +1,105 @@
+"""The while-aware HLO roofline analyzer: verified against known-cost
+programs (this is the §Roofline measurement instrument, so it gets its own
+tests)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis
+
+
+def _compile(fn, *avals):
+    return jax.jit(fn).lower(*avals).compile()
+
+
+def test_scan_trip_count_weighting():
+    def g(w, x):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, None, length=28)
+        return out.sum()
+    a = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+    c = _compile(g, a, a)
+    cost = hlo_analysis.HloModule(c.as_text()).total_cost()
+    expected = 28 * 2 * 512**3
+    assert cost.flops == pytest.approx(expected, rel=0.05)
+    # XLA's own analysis undercounts by ~length (the motivating bug)
+    xla = float(c.cost_analysis()["flops"])
+    assert xla < expected / 5
+
+
+def test_plain_matmul_flops():
+    a = jax.ShapeDtypeStruct((256, 384), jnp.bfloat16)
+    b = jax.ShapeDtypeStruct((384, 128), jnp.bfloat16)
+    c = _compile(lambda a, b: a @ b, a, b)
+    cost = hlo_analysis.HloModule(c.as_text()).total_cost()
+    assert cost.flops == pytest.approx(2 * 256 * 384 * 128, rel=0.05)
+
+
+def test_bytes_scale_with_dtype():
+    a16 = jax.ShapeDtypeStruct((1024, 1024), jnp.bfloat16)
+    a32 = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    f = lambda x: x * 2.0 + 1.0
+    b16 = hlo_analysis.HloModule(_compile(f, a16).as_text()).total_cost()
+    b32 = hlo_analysis.HloModule(_compile(f, a32).as_text()).total_cost()
+    assert b32.bytes == pytest.approx(2 * b16.bytes, rel=0.1)
+
+
+def test_nested_scan_multiplies():
+    def g(x):
+        def outer(c, _):
+            def inner(ci, _):
+                return jnp.tanh(ci @ ci), None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        out, _ = jax.lax.scan(outer, x, None, length=5)
+        return out.sum()
+    a = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    cost = hlo_analysis.HloModule(_compile(g, a).as_text()).total_cost()
+    assert cost.flops == pytest.approx(15 * 2 * 128**3, rel=0.1)
+
+
+def test_roofline_terms_and_bound():
+    r = hlo_analysis.Roofline(
+        flops_per_device=197e12, bytes_per_device=819e9 / 2,
+        collective_bytes_per_device=50e9 * 3, chips=256,
+        collective_detail={}, collective_counts={}, xla_cost_analysis={})
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(0.5)
+    assert r.collective_s == pytest.approx(3.0)
+    assert r.bound == "collective"
+    assert r.step_s == pytest.approx(3.0)
+
+
+def test_collective_parse_multidevice_subprocess():
+    """all-reduce bytes parsed from a real 8-way SPMD module."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    from pathlib import Path
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.hlo_analysis import HloModule
+        mesh = jax.make_mesh((8,), ("d",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        sh = NamedSharding(mesh, P("d"))
+        rep = NamedSharding(mesh, P())
+        f = jax.jit(lambda x: x.sum(0), in_shardings=sh, out_shardings=rep)
+        c = f.lower(jax.ShapeDtypeStruct((64, 1024), jnp.float32)).compile()
+        cost = HloModule(c.as_text()).total_cost()
+        total = sum(cost.coll.values())
+        assert total >= 1024 * 4, total   # at least one (1024,) f32 reduce
+        print("COLL_OK", total)
+    """)
+    src = str(Path(__file__).resolve().parents[1] / "src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=dict(os.environ, PYTHONPATH=src),
+                         timeout=300)
+    assert out.returncode == 0, out.stderr
+    assert "COLL_OK" in out.stdout

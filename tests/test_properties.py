@@ -1,0 +1,155 @@
+"""Hypothesis property-based tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import devices, gamma, scale_time
+from repro.core.costmodel import OpCost
+from repro.core.trace import Op
+from repro.models.moe import moe_layer, init_moe
+from repro.models.ssm import ssd_chunked, ssd_reference
+from repro.train.compression import quantize_dequantize, BLOCK
+
+DEVS = list(devices.all_devices())
+
+
+def _op(flops, bytes_):
+    return Op(name="x", kind="add", cost=OpCost(flops, bytes_ * 0.6,
+                                                bytes_ * 0.4))
+
+
+# ---------------------------------------------------------------------------
+# wave scaling (Eq. 1-3) invariants
+# ---------------------------------------------------------------------------
+@settings(max_examples=60, deadline=None)
+@given(st.floats(1e3, 1e15), st.floats(1e3, 1e12),
+       st.sampled_from(DEVS), st.sampled_from(DEVS),
+       st.floats(1e-3, 1e4))
+def test_wave_scaling_positive_and_identity(flops, bytes_, o, d, t):
+    op = _op(flops, bytes_)
+    od, dd = devices.get(o), devices.get(d)
+    out = scale_time(t, op, od, dd)
+    assert out > 0 and np.isfinite(out)
+    assert scale_time(t, op, od, od) == pytest.approx(t, rel=1e-9)
+    exact = scale_time(t, op, od, dd, exact=True)
+    assert exact > 0 and np.isfinite(exact)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.floats(1.0, 1e15), st.floats(1e3, 1e12), st.sampled_from(DEVS))
+def test_gamma_in_unit_interval(flops, bytes_, d):
+    g = gamma(_op(flops, bytes_), devices.get(d))
+    assert 0.0 <= g <= 1.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(1e3, 1e12))
+def test_gamma_monotone_decreasing_in_intensity(bytes_):
+    dev = devices.get("tpu-v5e")
+    gs = [gamma(_op(f, bytes_), dev)
+          for f in np.logspace(0, 16, 12) * bytes_ * 1e-6]
+    assert all(a >= b - 1e-12 for a, b in zip(gs, gs[1:]))
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch invariants
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 3), st.integers(2, 6), st.integers(2, 8),
+       st.integers(1, 3), st.integers(0, 1000))
+def test_moe_capacity_never_exceeded_and_finite(b, s, e, k, seed):
+    k = min(k, e)
+    d, f = 8, 16
+    key = jax.random.PRNGKey(seed)
+    params = init_moe(key, d, f, e, jnp.float32)
+    x = jax.random.normal(key, (b, s, d))
+    out, aux = moe_layer(params, x, top_k=k, capacity_factor=1.0)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+    assert np.isfinite(float(aux)) and float(aux) >= 0
+
+
+def test_moe_lossless_when_capacity_large():
+    """With capacity >= T*K no token is dropped: output is a convex
+    combination of expert outputs, so scaling x scales out."""
+    key = jax.random.PRNGKey(0)
+    params = init_moe(key, 8, 16, 4, jnp.float32)
+    x = jax.random.normal(key, (2, 5, 8))
+    out1, _ = moe_layer(params, x, top_k=2, capacity_factor=4.0)
+    out2, _ = moe_layer(params, x, top_k=2, capacity_factor=8.0)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# SSD: chunked == sequential for arbitrary shapes
+# ---------------------------------------------------------------------------
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 2), st.integers(2, 40), st.integers(1, 3),
+       st.integers(1, 16).map(lambda x: 2 * x), st.integers(2, 16),
+       st.integers(2, 16), st.integers(0, 100))
+def test_ssd_chunked_equals_reference(b, l, h, p, n, chunk, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((b, l, h, p)) * 0.3, jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.3, (b, l, h)), jnp.float32)
+    a = -jnp.asarray(rng.uniform(0.3, 3.0, (h,)), jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((b, l, 1, n)) * 0.3, jnp.float32)
+    cm = jnp.asarray(rng.standard_normal((b, l, 1, n)) * 0.3, jnp.float32)
+    yc = ssd_chunked(x, dt, a, bm, cm, chunk=chunk)
+    yr = ssd_reference(x, dt, a, bm, cm)
+    np.testing.assert_allclose(np.asarray(yc), np.asarray(yr), atol=3e-3)
+
+
+# ---------------------------------------------------------------------------
+# gradient compression error bound
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 3 * BLOCK), st.integers(0, 1000),
+       st.floats(1e-4, 1e3))
+def test_quantization_error_bounded(n, seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n) * scale, jnp.float32)
+    q = quantize_dequantize(x)
+    # per-block error bound: half a quantization step = max|block| / 254
+    err = np.abs(np.asarray(q - x))
+    bound = float(jnp.max(jnp.abs(x))) / 127.0 * 0.5 + 1e-9
+    assert err.max() <= bound * 1.01
+
+
+# ---------------------------------------------------------------------------
+# data pipeline determinism (fault-tolerance prerequisite)
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(0, 3))
+def test_synthetic_data_is_pure_function_of_step(step, seed):
+    from repro.configs import get_config
+    from repro.models.config import smoke_config
+    from repro.train.data import SyntheticTokens
+    src = SyntheticTokens(smoke_config(get_config("qwen3-0.6b")), 4, 16,
+                          seed=seed)
+    a = src.batch_at(step)
+    b = src.batch_at(step)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    if step > 0:
+        c = src.batch_at(step - 1)
+        assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# cross-entropy bounds
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 50), st.integers(1, 8), st.integers(0, 1000))
+def test_cross_entropy_nonnegative_and_bounded_for_uniform(v, b, seed):
+    from repro.models.layers import cross_entropy
+    rng = np.random.default_rng(seed)
+    logits = jnp.zeros((b, 3, v))
+    labels = jnp.asarray(rng.integers(0, v, (b, 3)), jnp.int32)
+    ce = float(cross_entropy(logits, labels))
+    assert ce == pytest.approx(np.log(v), rel=1e-5)
+    sharp = jnp.full((b, 3, v), -30.0)
+    sharp = sharp.at[..., 0].set(30.0)
+    assert float(cross_entropy(sharp, jnp.zeros((b, 3), jnp.int32))) < 1e-3

@@ -1,0 +1,115 @@
+"""Unit tests for the sharding rules (no devices needed: specs only)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.parallel import sharding
+from repro.parallel.sharding import (_dp_leaf_spec, batch_specs,
+                                     comm_volumes, param_specs)
+
+
+class FakeMesh:
+    """Duck-typed mesh: sharding rules only read .shape / .axis_names."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.axis_names = tuple(axes)
+
+
+MESH = FakeMesh(data=16, model=16)
+MESH3 = FakeMesh(pod=2, data=16, model=16)
+
+
+def _abstract_params(arch):
+    from repro.launch import specs
+    return specs.abstract_params(get_config(arch))
+
+
+def test_2d_dense_rules():
+    params = _abstract_params("glm4-9b")
+    specs = param_specs(params, MESH)
+    layers = specs["layers"]
+    assert layers["wq"] == P(None, "data", "model")
+    assert layers["wo"] == P(None, "model", "data")
+    assert layers["w_down"] == P(None, "model", "data")
+    assert specs["embed"] == P("model", "data")
+    # stacked norm scales keep the column rule: the D-sharded scale is a
+    # beneficial activation-layout hint (see sharding.py note)
+    assert layers["ln1"] == P(None, "model")
+
+
+def test_moe_expert_parallel_when_divisible():
+    params = _abstract_params("dbrx-132b")      # 16 experts % 16 == 0
+    specs = param_specs(params, MESH)
+    assert specs["layers"]["moe"]["w_gate"][1] == "model"
+
+
+def test_moe_fallback_when_not_divisible():
+    params = _abstract_params("granite-moe-3b-a800m")  # 40 % 16 != 0
+    specs = param_specs(params, MESH)
+    wg = specs["layers"]["moe"]["w_gate"]
+    assert wg[1] is None                 # experts NOT sharded
+    assert "model" in tuple(wg)          # ffn dims sharded instead
+
+
+def test_non_divisible_dims_replicate():
+    # mamba2 in_proj output dim 3352 is not divisible by 16
+    params = _abstract_params("mamba2-130m")
+    specs = param_specs(params, MESH)
+    in_proj = specs["layers"]["mamba"]["in_proj"]
+    assert in_proj[-1] is None
+    assert in_proj[-2] == "data"         # d_model 768 divides
+
+
+def test_dp_profile_prefers_full_mesh_coverage():
+    # 151936 % 256 != 0 but 1024 % 256 == 0: shard the other dim fully
+    spec = _dp_leaf_spec((151936, 1024), MESH)
+    assert spec == P(None, ("data", "model"))
+    spec = _dp_leaf_spec((28, 1024, 3072), MESH)
+    assert spec[2] == ("data", "model")
+    # tiny tensors fall back gracefully
+    spec = _dp_leaf_spec((8,), MESH)
+    assert spec == P(None)
+
+
+def test_batch_specs_profiles():
+    batch = {"tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32)}
+    s2 = batch_specs(batch, MESH, profile="2d")["tokens"]
+    assert s2[0] in ("data", ("data",))
+    sdp = batch_specs(batch, MESH, profile="dp")["tokens"]
+    assert sdp[0] == ("data", "model")
+    # batch 32 cannot cover 256: dp degrades to data-only
+    small = {"tokens": jax.ShapeDtypeStruct((32, 4096), jnp.int32)}
+    sdp2 = batch_specs(small, MESH, profile="dp")["tokens"]
+    assert sdp2[0] in ("data", ("data",))
+    # sp shards the sequence over model
+    ssp = batch_specs(small, MESH, profile="sp")["tokens"]
+    assert ssp[0] in ("data", ("data",)) and ssp[1] in ("model", ("model",))
+
+
+def test_batch_specs_multipod():
+    batch = {"tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32)}
+    s = batch_specs(batch, MESH3, profile="2d")["tokens"]
+    assert tuple(s[0]) == ("pod", "data")
+
+
+def test_cache_specs_kv_head_fallback():
+    from repro.launch import specs as lspecs
+    cfg = get_config("dbrx-132b")  # kv=8 < model=16
+    st = lspecs.abstract_decode_state(cfg, 128, 32768)
+    cs = sharding.cache_specs(st, MESH, 128)
+    # batch over data, sequence picks up 'model' because kv doesn't divide
+    assert cs["k"][1] in ("data", ("data",))
+    assert cs["k"][2] == "model"
+
+
+def test_comm_volumes_split():
+    params = {"w": jnp.zeros((64, 64)), "ln": jnp.zeros((64,))}
+    specs = {"w": P("data", None), "ln": P(None)}
+    v = comm_volumes(params, MESH, specs)
+    assert v["weight_all_gather_bytes"] == 64 * 64 * 4
+    assert v["grad_all_reduce_bytes"] == 64 * 4

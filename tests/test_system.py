@@ -1,0 +1,96 @@
+"""End-to-end behaviour tests: the paper's Listing-1 workflow against the
+real framework, the serving engine, and the eval-model zoo."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (Device, HabitatPredictor, OperationTracker,
+                        rank_devices)
+from repro.core import devices, simulator
+from repro.models import init_params
+from repro.models.config import smoke_config
+from repro.models.evalzoo import ZOO, make_train_iteration
+from repro.serve.engine import Request, ServingEngine
+from repro.train.optim import adamw
+from repro.train.train_step import init_state, make_train_step
+
+
+def test_listing1_workflow():
+    """The paper's Listing 1, on our real train step."""
+    cfg = smoke_config(get_config("qwen3-0.6b"))
+    optimizer = adamw()
+    state = init_state(cfg, jax.random.PRNGKey(0), optimizer)
+    step = make_train_step(cfg, optimizer)
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+             "labels": jnp.ones((2, 16), jnp.int32)}
+
+    tracker = OperationTracker(origin_device=Device.CPU_HOST)
+    trace = tracker.track(step, state, batch)
+    predicted = trace.to_device(Device.V100,
+                                predictor=HabitatPredictor())
+    assert predicted.run_time_ms > 0
+    assert len(predicted.ops) == len(trace.ops)
+
+
+def test_rank_devices_orders_correctly():
+    cfg = smoke_config(get_config("qwen3-0.6b"))
+    optimizer = adamw()
+    state = init_state(cfg, jax.random.PRNGKey(0), optimizer)
+    step = make_train_step(cfg, optimizer)
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+             "labels": jnp.ones((2, 16), jnp.int32)}
+    trace = OperationTracker("T4").track(step, state, batch)
+    pred = HabitatPredictor()
+    ranking = rank_devices(trace, 2, ["P100", "V100", "T4"], predictor=pred)
+    # predicted ranking must match ground-truth (simulator) ranking
+    gt = sorted(["P100", "V100", "T4"],
+                key=lambda d: simulator.trace_time_ms(trace,
+                                                      devices.get(d)))
+    assert [c.device for c in ranking] == gt
+
+
+@pytest.mark.parametrize("name", sorted(ZOO))
+def test_evalzoo_traces(name):
+    it, params, batch = make_train_iteration(name)
+    tr = OperationTracker("cpu-host").track(it, params, batch, label=name)
+    assert len(tr.ops) > 20
+    assert any(op.kernel_varying for op in tr.ops)
+    assert tr.run_time_ms > 0
+
+
+def test_serving_engine_end_to_end():
+    cfg = smoke_config(get_config("qwen3-0.6b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServingEngine(cfg, params, batch=4, max_seq=32)
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(2, cfg.vocab_size, 5,
+                                        dtype=np.int32),
+                    max_new_tokens=5)
+            for i in range(6)]
+    done = engine.serve(reqs)
+    assert len(done) == 6
+    assert all(1 <= len(r.output) <= 5 for r in done)
+
+
+def test_serving_engine_ssm():
+    cfg = smoke_config(get_config("mamba2-130m"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServingEngine(cfg, params, batch=2, max_seq=32)
+    reqs = [Request(uid=i, prompt=np.arange(4, dtype=np.int32) + 2,
+                    max_new_tokens=4) for i in range(3)]
+    done = engine.serve(reqs)
+    assert len(done) == 3
+
+
+def test_trainer_smoke_run(tmp_path):
+    from repro.train.trainer import Trainer, TrainerConfig
+    cfg = smoke_config(get_config("mamba2-130m"))
+    t = Trainer(cfg, 2, 16,
+                TrainerConfig(checkpoint_dir=str(tmp_path), max_steps=4,
+                              checkpoint_every=2, log_every=100))
+    stats = t.run(4, log=lambda *_: None)
+    assert np.isfinite(stats["final_loss"])
