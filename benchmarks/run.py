@@ -1,6 +1,10 @@
 """Benchmark harness: one module per paper table/figure + roofline.
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig3,roofline]
+  PYTHONPATH=src python -m benchmarks.run [--only fig3,roofline] [--smoke]
+
+``--smoke`` runs the CI-sized subset (fleet engine + kernels) with each
+bench's reduced problem size — the fast regression gate wired into
+``.github/workflows/ci.yml``.
 
 Prints a human-readable report per benchmark, then a final
 ``name,us_per_call,derived`` CSV block.
@@ -9,6 +13,7 @@ Prints a human-readable report per benchmark, then a final
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 from pathlib import Path
@@ -38,17 +43,32 @@ BENCHES = [
      "Sec 6 extensions: distributed / mixed precision / batch extrap"),
     ("variants", "benchmarks.bench_variants",
      "Predictor-variant ablation: Eq.2 vs Eq.1 vs overhead modelling"),
+    ("fleet", "benchmarks.bench_fleet",
+     "Fleet engine: vectorized vs scalar prediction loop (>=10x gate)"),
 ]
+
+#: the subset (and reduced sizes) run by CI's bench-smoke job
+SMOKE_KEYS = ("fleet", "kernels")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benchmark keys")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: smoke subset at reduced sizes")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    if only:
+        unknown = only - {key for key, _, _ in BENCHES}
+        if unknown:
+            sys.exit(f"unknown benchmark keys: {', '.join(sorted(unknown))}"
+                     f" (known: {', '.join(k for k, _, _ in BENCHES)})")
+    if args.smoke and only is None:
+        only = set(SMOKE_KEYS)
 
     csv = Csv()
+    failed = []
     t_all = time.time()
     for key, module, title in BENCHES:
         if only and key not in only:
@@ -57,17 +77,25 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = __import__(module, fromlist=["run"])
-            mod.run(csv)
+            kwargs = {}
+            if args.smoke and \
+                    "smoke" in inspect.signature(mod.run).parameters:
+                kwargs["smoke"] = True
+            mod.run(csv, **kwargs)
         except Exception as e:  # a failed bench should not kill the run
             import traceback
             print(f"  BENCH FAILED: {type(e).__name__}: {e}")
             traceback.print_exc()
             csv.add(f"{key}_FAILED", 0.0, str(type(e).__name__))
+            failed.append(key)
         print(f"  [{key}: {time.time() - t0:.1f}s]")
 
     print(f"\n=== CSV (name,us_per_call,derived) — total "
           f"{time.time() - t_all:.0f}s ===")
     csv.dump()
+    if failed and args.smoke:
+        # smoke mode is a CI gate: failures must fail the job
+        sys.exit(f"smoke benches failed: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

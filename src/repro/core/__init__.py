@@ -9,11 +9,13 @@ Public API (Listing 1 of the paper)::
     print(trace.to_device(Device.TPU_V5E).run_time_ms)
 """
 
-from repro.core.trace import Op, OperationTracker, TrackedTrace
+from repro.core.trace import Op, OperationTracker, TraceArrays, TrackedTrace
+from repro.core.batched import FleetPrediction, predict_trace_batch
 from repro.core.predictor import (HabitatPredictor, FlopsRatioPredictor,
                                   PaleoPredictor, default_predictor,
                                   train_mlps)
-from repro.core.wave_scaling import gamma, scale_time
+from repro.core.wave_scaling import (gamma, gamma_vec, scale_time,
+                                     scale_times_vec)
 from repro.core.cost import (rank_devices, throughput,
                              cost_normalized_throughput)
 
@@ -38,8 +40,9 @@ class Device:
 
 
 __all__ = [
-    "Op", "OperationTracker", "TrackedTrace", "HabitatPredictor",
+    "Op", "OperationTracker", "TraceArrays", "TrackedTrace",
+    "FleetPrediction", "predict_trace_batch", "HabitatPredictor",
     "FlopsRatioPredictor", "PaleoPredictor", "default_predictor",
-    "train_mlps", "gamma", "scale_time", "rank_devices", "throughput",
-    "cost_normalized_throughput", "Device",
+    "train_mlps", "gamma", "gamma_vec", "scale_time", "scale_times_vec",
+    "rank_devices", "throughput", "cost_normalized_throughput", "Device",
 ]

@@ -1,0 +1,143 @@
+"""Vectorized fleet-prediction engine: one trace against many devices.
+
+The serving question Habitat answers is "from the one device you own, rank
+every device you could buy" (Sec. 5.3) — at production scale that is one
+trace predicted against *dozens* of destinations per request.  The per-op
+Python loop in the original ``HabitatPredictor.predict_trace`` pays the
+interpreter cost once per (op, device) pair; this module pays it once per
+trace.
+
+The pipeline is fully array-shaped:
+
+  * kernel-alike ops   -> ``wave_scaling.scale_times_vec`` fills the whole
+                          (n_ops x n_devices) grid in one NumPy expression,
+  * kernel-varying ops -> one batched MLP inference per kind covering *all*
+                          destinations at once (features tiled device-major),
+                          falling back to a vectorized Paleo-style roofline
+                          when no MLP is available for a kind.
+
+``FleetPrediction`` keeps the per-(op, device) grid so per-kind breakdowns
+and per-device totals are both O(1) array reductions afterwards.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from types import SimpleNamespace
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core import dataset as dataset_mod
+from repro.core import devices, wave_scaling
+from repro.core.devices import DeviceArrays, DeviceSpec
+from repro.core.trace import TraceArrays, TrackedTrace
+
+#: Paleo-fallback efficiencies, matching ``predictor._analytical_ms``.
+_EFF_COMPUTE = (0.50, 0.70)   # (kernel-alike, kernel-varying)
+_EFF_MEMORY = (0.82, 0.75)
+
+
+def analytical_ms_vec(arrays: TraceArrays,
+                      dests: DeviceArrays) -> np.ndarray:
+    """Vectorized Paleo-style roofline estimate, shape (n_ops, n_dev)."""
+    eff_c = np.where(arrays.kernel_varying, _EFF_COMPUTE[1], _EFF_COMPUTE[0])
+    eff_m = np.where(arrays.kernel_varying, _EFF_MEMORY[1], _EFF_MEMORY[0])
+    flops_t = (arrays.flops * (1.0 / eff_c))[:, None] \
+        / dests.peak_flops[None, :]
+    mem_t = (arrays.bytes_accessed * (1.0 / eff_m))[:, None] \
+        / dests.mem_bandwidth[None, :]
+    return np.maximum(flops_t, mem_t) * 1e3
+
+
+def mlp_features_grid(arrays: TraceArrays, idx: np.ndarray,
+                      dests: DeviceArrays) -> np.ndarray:
+    """MLP query features for ops ``idx`` x all devices, device-major rows.
+
+    Row ``i * n_dev + j`` is op ``idx[i]`` queried against device ``j`` —
+    the same log1p transform as :func:`repro.core.dataset.op_features`."""
+    n_idx, n_dev = len(idx), dests.n
+    op_part = np.repeat(arrays.op_features[idx], n_dev, axis=0)
+    dev_part = np.tile(dests.feature_matrix, (n_idx, 1))
+    raw = np.concatenate([op_part, dev_part], axis=1)
+    return dataset_mod.transform_features(raw)
+
+
+@dataclasses.dataclass
+class FleetPrediction:
+    """Per-(op, device) prediction grid for one trace against a fleet."""
+    origin_device: str
+    dests: List[str]
+    op_ms: np.ndarray            # (n_ops, n_dev) single-execution times
+    arrays: TraceArrays
+    label: str = "iteration"
+
+    @property
+    def total_ms(self) -> np.ndarray:
+        """Predicted iteration time per destination device, shape (n_dev,)."""
+        return (self.op_ms * self.arrays.multiplicity[:, None]).sum(axis=0)
+
+    def time_for(self, dest: str) -> float:
+        return float(self.total_ms[self.dests.index(dest)])
+
+    def as_dict(self) -> Dict[str, float]:
+        return dict(zip(self.dests, self.total_ms.tolist()))
+
+    def breakdown(self, dest: str) -> Dict[str, float]:
+        """Per-kind time breakdown on one destination (paper Fig. 4)."""
+        j = self.dests.index(dest)
+        weighted = self.op_ms[:, j] * self.arrays.multiplicity
+        totals = np.bincount(self.arrays.kind_ids, weights=weighted,
+                             minlength=len(self.arrays.kinds))
+        return {k: float(t) for k, t in zip(self.arrays.kinds, totals)}
+
+
+def predict_trace_batch(trace: TrackedTrace,
+                        dests: Union[DeviceArrays, Sequence[str],
+                                     Sequence[DeviceSpec]],
+                        mlps: Optional[Dict] = None,
+                        exact: bool = False,
+                        model_overhead: bool = False) -> FleetPrediction:
+    """Predict one trace's per-op times on every destination at once."""
+    origin = devices.get(trace.origin_device)
+    da = devices.as_arrays(dests)
+    arrays = trace.to_arrays()
+    mlps = mlps or {}
+    out = np.empty((arrays.n_ops, da.n), np.float64)
+
+    # kernel-alike: wave scaling over the whole grid
+    alike = ~arrays.kernel_varying
+    if alike.any():
+        t_o = arrays.measured_ms[alike]
+        if np.isnan(t_o).any():
+            bad = int(np.flatnonzero(alike)[np.isnan(t_o).argmax()])
+            raise ValueError(
+                f"op {trace.ops[bad].name} has no origin measurement")
+        sub = SimpleNamespace(intensity=arrays.intensity[alike],
+                              bytes_accessed=arrays.bytes_accessed[alike])
+        out[alike] = wave_scaling.scale_times_vec(
+            t_o, sub, origin, da, exact=exact,
+            model_overhead=model_overhead)
+
+    # kernel-varying without an MLP: vectorized analytical fallback
+    kind_has_mlp = np.asarray([k in mlps for k in arrays.kinds], bool)
+    no_mlp = arrays.kernel_varying & ~kind_has_mlp[arrays.kind_ids]
+    if no_mlp.any():
+        out[no_mlp] = analytical_ms_vec(arrays, da)[no_mlp]
+
+    # kernel-varying with an MLP: one fused inference per kind, covering
+    # every destination device in the same batch
+    for kid, kind in enumerate(arrays.kinds):
+        if kind not in mlps:
+            continue
+        idx = np.flatnonzero(arrays.kernel_varying
+                             & (arrays.kind_ids == kid))
+        if not len(idx):
+            continue
+        feats = mlp_features_grid(arrays, idx, da)
+        preds = mlps[kind].predict_ms(feats).reshape(len(idx), da.n)
+        out[idx] = preds
+
+    return FleetPrediction(origin_device=trace.origin_device,
+                           dests=list(da.names), op_ms=out, arrays=arrays,
+                           label=trace.label)

@@ -42,13 +42,27 @@ def rank_devices(trace: TrackedTrace, batch_size: int,
     """Predict and rank candidate devices for the traced workload.
 
     ``by`` is either "throughput" (maximize speed) or "cost" (maximize
-    samples/$) — the two user objectives from case studies 1 and 2."""
+    samples/$) — the two user objectives from case studies 1 and 2.
+
+    Predictors exposing ``predict_fleet`` (all predictors in
+    ``repro.core.predictor``) are queried once for the whole candidate set
+    via the vectorized engine; anything else falls back to the per-device
+    ``predict_trace`` loop."""
+    candidates = list(candidates)   # may be a one-shot iterator
     origin_ms = trace.run_time_ms
+    if predictor is None:
+        from repro.core import predictor as predictor_mod
+        predictor = predictor_mod.default_predictor()
+    if hasattr(predictor, "predict_fleet"):
+        fleet_ms = predictor.predict_fleet(trace, candidates).as_dict()
+    else:
+        fleet_ms = {name: trace.to_device(name,
+                                          predictor=predictor).run_time_ms
+                    for name in candidates}
     out: List[DeviceChoice] = []
     for name in candidates:
         spec = devices.get(name)
-        pred = trace.to_device(name, predictor=predictor)
-        ms = pred.run_time_ms
+        ms = fleet_ms[name]
         tput = throughput(batch_size, ms)
         cn = (cost_normalized_throughput(batch_size, ms, spec.cost_per_hour)
               if spec.cost_per_hour else None)

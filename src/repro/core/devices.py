@@ -25,7 +25,9 @@ need:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +91,67 @@ def all_devices() -> Dict[str, DeviceSpec]:
 
 def devices_of_kind(kind: str) -> Dict[str, DeviceSpec]:
     return {k: v for k, v in _REGISTRY.items() if v.kind == kind}
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceArrays:
+    """Structure-of-arrays view of a destination fleet (one row per device).
+
+    The vectorized prediction engine (``core/batched.py``,
+    ``wave_scaling.scale_times_vec``) broadcasts op-axis arrays against
+    these device-axis arrays to fill an (n_ops x n_devices) grid in one
+    NumPy expression instead of a per-op Python loop."""
+    names: List[str]
+    kinds: List[str]                  # "gpu" | "tpu" | "trainium" | "cpu"
+    peak_flops: np.ndarray            # (n_dev,)
+    mem_bandwidth: np.ndarray         # (n_dev,)
+    clock_hz: np.ndarray              # (n_dev,)
+    wave_size: np.ndarray             # (n_dev,)
+    ridge_point: np.ndarray           # (n_dev,)
+    cost_per_hour: np.ndarray         # (n_dev,) NaN where not rentable
+    feature_matrix: np.ndarray        # (n_dev, 4) MLP device features
+
+    @property
+    def n(self) -> int:
+        return len(self.names)
+
+
+def spec_arrays(specs: Sequence[DeviceSpec]) -> DeviceArrays:
+    """Stack device specs into the SoA layout the batched engine consumes."""
+    return DeviceArrays(
+        names=[s.name for s in specs],
+        kinds=[s.kind for s in specs],
+        peak_flops=np.asarray([s.peak_flops for s in specs], np.float64),
+        mem_bandwidth=np.asarray([s.mem_bandwidth for s in specs],
+                                 np.float64),
+        clock_hz=np.asarray([s.clock_hz for s in specs], np.float64),
+        wave_size=np.asarray([s.wave_size for s in specs], np.float64),
+        ridge_point=np.asarray([s.ridge_point for s in specs], np.float64),
+        cost_per_hour=np.asarray(
+            [s.cost_per_hour if s.cost_per_hour is not None else np.nan
+             for s in specs], np.float64),
+        feature_matrix=np.asarray([s.feature_vector() for s in specs],
+                                  np.float64),
+    )
+
+
+def arrays_for(names: Sequence[str]) -> DeviceArrays:
+    """``spec_arrays`` over registry names (KeyError on unknown devices)."""
+    return spec_arrays([get(n) for n in names])
+
+
+def as_arrays(dests) -> DeviceArrays:
+    """Coerce any destination-fleet spelling to :class:`DeviceArrays`.
+
+    Accepts a ready ``DeviceArrays``, a sequence of registry names, or a
+    sequence of ``DeviceSpec`` objects — the one resolver shared by the
+    vectorized engine and every predictor."""
+    if isinstance(dests, DeviceArrays):
+        return dests
+    dests = list(dests)
+    if dests and isinstance(dests[0], str):
+        return arrays_for(dests)
+    return spec_arrays(dests)
 
 
 # ---------------------------------------------------------------------------

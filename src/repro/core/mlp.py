@@ -13,6 +13,7 @@ Layer count / width are configurable for the Fig. 5 sensitivity study.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import pickle
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -59,6 +60,13 @@ def forward(params, x: jnp.ndarray) -> jnp.ndarray:
     return (h @ w + b)[..., 0]
 
 
+#: jitted inference entry point: the fleet engine issues one batched
+#: forward per op kind covering every destination device, so dispatch
+#: overhead (not FLOPs) dominates without jit.  Shapes recompile per
+#: (batch size, width) pair; the fleet path reuses a handful of shapes.
+_forward_jit = jax.jit(forward)
+
+
 def mape_loss(params, x, y) -> jnp.ndarray:
     """MAPE against raw times; the network predicts log(ms)."""
     pred = jnp.exp(forward(params, x))
@@ -74,6 +82,12 @@ def male_loss(params, x, logy) -> jnp.ndarray:
     return jnp.mean(jnp.abs(forward(params, x) - logy))
 
 
+#: monotonic TrainedMLP identity for result-cache keys.  ``id()`` is unsafe
+#: here: CPython recycles addresses, so a retrained model could alias a
+#: stale cache entry minted for its garbage-collected predecessor.
+_UID = itertools.count()
+
+
 @dataclasses.dataclass
 class TrainedMLP:
     kind: str
@@ -82,10 +96,24 @@ class TrainedMLP:
     feature_mean: np.ndarray
     feature_std: np.ndarray
     test_mape: float = float("nan")
+    uid: int = dataclasses.field(default_factory=lambda: next(_UID))
 
     def predict_ms(self, features: np.ndarray) -> np.ndarray:
         x = (np.atleast_2d(features) - self.feature_mean) / self.feature_std
-        out = np.asarray(forward(self.params, jnp.asarray(x, jnp.float32)))
+        # bucket the batch size so the jitted forward compiles a bounded
+        # set of shapes, not one per distinct trace: powers of two up to
+        # 512, multiples of 512 beyond (keeps padding waste under ~20%
+        # for the large fleet-grid batches)
+        n = x.shape[0]
+        if n <= 512:
+            padded = 1 << max(n - 1, 0).bit_length()
+        else:
+            padded = -(-n // 512) * 512
+        if padded != n:
+            x = np.concatenate(
+                [x, np.zeros((padded - n, x.shape[1]), x.dtype)])
+        out = np.asarray(_forward_jit(self.params,
+                                      jnp.asarray(x, jnp.float32)))[:n]
         return np.maximum(np.exp(out), 1e-6)
 
     def save(self, path: Path) -> None:

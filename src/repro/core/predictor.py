@@ -20,8 +20,9 @@ from typing import Dict, Optional, Sequence
 
 import numpy as np
 
-from repro.core import dataset as dataset_mod
+from repro.core import batched, dataset as dataset_mod
 from repro.core import devices, mlp, wave_scaling
+from repro.core.batched import FleetPrediction
 from repro.core.devices import DeviceSpec
 from repro.core.trace import Op, TrackedTrace
 
@@ -41,7 +42,20 @@ def _analytical_ms(op: Op, dev: DeviceSpec) -> float:
     return max(flops_t, mem_t) * 1e3
 
 
-class HabitatPredictor:
+class _FleetTraceMixin:
+    """Shared glue: derive ``predict_trace`` from a ``predict_fleet`` grid."""
+
+    def predict_trace(self, trace: TrackedTrace, dest: str) -> TrackedTrace:
+        """Predict the trace on one destination (vectorized hot path)."""
+        fleet = self.predict_fleet(trace, [dest])
+        new_ops = [copy.copy(op) for op in trace.ops]
+        for op, t in zip(new_ops, fleet.op_ms[:, 0]):
+            op.predicted_ms = float(t)
+        return TrackedTrace(ops=new_ops, origin_device=dest,
+                            label=trace.label)
+
+
+class HabitatPredictor(_FleetTraceMixin):
     """Scale a measured trace from its origin device to a destination."""
 
     def __init__(self, mlps: Optional[Dict[str, mlp.TrainedMLP]] = None,
@@ -65,8 +79,32 @@ class HabitatPredictor:
                                        exact=self.exact_wave,
                                        model_overhead=self.model_overhead)
 
-    # -- whole trace ---------------------------------------------------------
-    def predict_trace(self, trace: TrackedTrace, dest: str) -> TrackedTrace:
+    def config_key(self) -> tuple:
+        """Hashable identity of this predictor's configuration.
+
+        Used by result caches (``serve/fleet.py``): two predictors with the
+        same key produce the same predictions within this process."""
+        return (type(self).__name__, self.exact_wave, self.model_overhead,
+                tuple(sorted((k, m.uid) for k, m in self.mlps.items())))
+
+    # -- whole fleet -------------------------------------------------------
+    def predict_fleet(self, trace: TrackedTrace,
+                      dests: Optional[Sequence[str]] = None
+                      ) -> FleetPrediction:
+        """Vectorized: predict the trace on every destination at once."""
+        if dests is None:
+            dests = sorted(devices.all_devices())
+        return batched.predict_trace_batch(
+            trace, dests, mlps=self.mlps, exact=self.exact_wave,
+            model_overhead=self.model_overhead)
+
+    # -- whole trace: predict_trace comes from _FleetTraceMixin ------------
+    def predict_trace_scalar(self, trace: TrackedTrace,
+                             dest: str) -> TrackedTrace:
+        """The original per-op Python loop (reference + benchmark baseline).
+
+        Kept verbatim so ``benchmarks/bench_fleet.py`` can quantify the
+        vectorized engine's speedup and tests can assert parity."""
         origin = devices.get(trace.origin_device)
         dest_spec = devices.get(dest)
         new_ops = [copy.copy(op) for op in trace.ops]
@@ -92,34 +130,48 @@ class HabitatPredictor:
                             label=trace.label)
 
 
-class FlopsRatioPredictor:
+class FlopsRatioPredictor(_FleetTraceMixin):
     """The naive heuristic the paper debunks in Fig. 1."""
 
-    def predict_trace(self, trace: TrackedTrace, dest: str) -> TrackedTrace:
+    def config_key(self) -> tuple:
+        return (type(self).__name__,)
+
+    def predict_fleet(self, trace: TrackedTrace,
+                      dests: Optional[Sequence[str]] = None
+                      ) -> FleetPrediction:
+        if dests is None:
+            dests = sorted(devices.all_devices())
         origin = devices.get(trace.origin_device)
-        dest_spec = devices.get(dest)
-        new_ops = []
-        for op in trace.ops:
-            new_op = copy.copy(op)
-            new_op.predicted_ms = wave_scaling.flops_ratio_heuristic(
-                op.measured_ms, origin, dest_spec)
-            new_ops.append(new_op)
-        return TrackedTrace(ops=new_ops, origin_device=dest,
-                            label=trace.label)
+        da = devices.as_arrays(dests)
+        arrays = trace.to_arrays()
+        if np.isnan(arrays.measured_ms).any():
+            bad = int(np.isnan(arrays.measured_ms).argmax())
+            raise ValueError(
+                f"op {trace.ops[bad].name} has no origin measurement")
+        op_ms = (arrays.measured_ms[:, None]
+                 * (origin.peak_flops / da.peak_flops)[None, :])
+        return FleetPrediction(origin_device=trace.origin_device,
+                               dests=list(da.names), op_ms=op_ms,
+                               arrays=arrays, label=trace.label)
 
 
-class PaleoPredictor:
+class PaleoPredictor(_FleetTraceMixin):
     """Purely analytical baseline (no runtime information used at all)."""
 
-    def predict_trace(self, trace: TrackedTrace, dest: str) -> TrackedTrace:
-        dest_spec = devices.get(dest)
-        new_ops = []
-        for op in trace.ops:
-            new_op = copy.copy(op)
-            new_op.predicted_ms = _analytical_ms(op, dest_spec)
-            new_ops.append(new_op)
-        return TrackedTrace(ops=new_ops, origin_device=dest,
-                            label=trace.label)
+    def config_key(self) -> tuple:
+        return (type(self).__name__,)
+
+    def predict_fleet(self, trace: TrackedTrace,
+                      dests: Optional[Sequence[str]] = None
+                      ) -> FleetPrediction:
+        if dests is None:
+            dests = sorted(devices.all_devices())
+        da = devices.as_arrays(dests)
+        arrays = trace.to_arrays()
+        op_ms = batched.analytical_ms_vec(arrays, da)
+        return FleetPrediction(origin_device=trace.origin_device,
+                               dests=list(da.names), op_ms=op_ms,
+                               arrays=arrays, label=trace.label)
 
 
 # ---------------------------------------------------------------------------

@@ -18,6 +18,7 @@ Listing-1-compatible usage::
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -201,11 +202,50 @@ def _dtype_of(eqn) -> str:
 
 
 @dataclasses.dataclass
+class TraceArrays:
+    """Structure-of-arrays view of a trace (one row per op).
+
+    This is the input format of the vectorized fleet-prediction engine
+    (``core/batched.py``): all per-op scalars are pulled out of the ``Op``
+    objects once, so predicting against N destination devices is pure
+    array math instead of N Python loops over the op list.
+
+    ``measured_ms`` is NaN for ops without an origin measurement;
+    ``kind_ids[i]`` indexes into ``kinds``; ``op_features`` are the *raw*
+    (un-log-transformed) 9-dim MLP op features of :meth:`Op.feature_vector`.
+    """
+    flops: np.ndarray            # (n_ops,)
+    bytes_accessed: np.ndarray   # (n_ops,)
+    intensity: np.ndarray        # (n_ops,)
+    measured_ms: np.ndarray      # (n_ops,) NaN where unmeasured
+    multiplicity: np.ndarray     # (n_ops,)
+    kernel_varying: np.ndarray   # (n_ops,) bool
+    kind_ids: np.ndarray         # (n_ops,) int32 index into ``kinds``
+    kinds: List[str]             # unique kinds, sorted
+    op_features: np.ndarray      # (n_ops, 9) raw MLP op features
+
+    @property
+    def n_ops(self) -> int:
+        return int(self.flops.shape[0])
+
+    def fingerprint(self) -> str:
+        """Stable content hash, used as a result-cache key."""
+        h = hashlib.sha1()
+        for arr in (self.flops, self.bytes_accessed, self.measured_ms,
+                    self.multiplicity, self.kind_ids, self.op_features):
+            h.update(np.ascontiguousarray(arr).tobytes())
+        h.update("|".join(self.kinds).encode())
+        return h.hexdigest()
+
+
+@dataclasses.dataclass
 class TrackedTrace:
     """The result of tracking one training/serving iteration."""
     ops: List[Op]
     origin_device: str
     label: str = "iteration"
+    _arrays: Optional[TraceArrays] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     # ---- aggregate views -------------------------------------------------
     @property
@@ -233,8 +273,50 @@ class TrackedTrace:
             out[op.kind] = out.get(op.kind, 0.0) + t * op.multiplicity
         return out
 
+    def to_arrays(self, refresh: bool = False) -> TraceArrays:
+        """Structure-of-arrays export for the vectorized prediction engine.
+
+        The result is cached on the trace (per-op Python extraction is the
+        last scalar loop on the fleet path); :meth:`measure` invalidates it.
+        Pass ``refresh=True`` after mutating ops by hand."""
+        if self._arrays is not None and not refresh:
+            return self._arrays
+        n = len(self.ops)
+        kinds = sorted({op.kind for op in self.ops})
+        kind_index = {k: i for i, k in enumerate(kinds)}
+        flops = np.empty(n, np.float64)
+        bytes_accessed = np.empty(n, np.float64)
+        intensity = np.empty(n, np.float64)
+        measured = np.full(n, np.nan, np.float64)
+        mult = np.empty(n, np.float64)
+        varying = np.zeros(n, bool)
+        kind_ids = np.empty(n, np.int32)
+        feats = np.zeros((n, 9), np.float64)
+        for i, op in enumerate(self.ops):
+            flops[i] = op.cost.flops
+            bytes_accessed[i] = op.cost.bytes_accessed
+            intensity[i] = op.cost.intensity
+            if op.measured_ms is not None:
+                measured[i] = op.measured_ms
+            mult[i] = op.multiplicity
+            varying[i] = op.kernel_varying
+            kind_ids[i] = kind_index[op.kind]
+            feats[i] = op.feature_vector()
+        self._arrays = TraceArrays(
+            flops=flops, bytes_accessed=bytes_accessed, intensity=intensity,
+            measured_ms=measured, multiplicity=mult, kernel_varying=varying,
+            kind_ids=kind_ids, kinds=kinds, op_features=feats)
+        return self._arrays
+
+    def fingerprint(self) -> str:
+        """Content hash of the trace (ops + origin), for result caches."""
+        h = hashlib.sha1(self.to_arrays().fingerprint().encode())
+        h.update(self.origin_device.encode())
+        return h.hexdigest()
+
     def measure(self, method: str = "simulate") -> "TrackedTrace":
         """Fill ``measured_ms`` for every op on the origin device."""
+        self._arrays = None  # measured_ms changes under the SoA cache
         if method == "simulate":
             from repro.core import simulator
             dev = devices.get(self.origin_device)

@@ -22,8 +22,12 @@ VMEM-sized tile, ``W_i`` from the device spec.
 from __future__ import annotations
 
 import math
+from typing import Optional, Sequence, Union
 
-from repro.core.devices import DeviceSpec
+import numpy as np
+
+from repro.core import devices as devices_mod
+from repro.core.devices import DeviceArrays, DeviceSpec
 from repro.core.trace import Op
 
 #: Working-set bytes of one grid tile (a thread block's slice on GPUs; an
@@ -54,7 +58,7 @@ DISPATCH_OVERHEAD_MS = {"gpu": 5e-3, "tpu": 1.5e-3, "trainium": 2e-3,
 
 
 def scale_time(t_o_ms: float, op: Op, origin: DeviceSpec, dest: DeviceSpec,
-               exact: bool = False, gamma_override: float = None,
+               exact: bool = False, gamma_override: Optional[float] = None,
                model_overhead: bool = False) -> float:
     """Scale a measured time T_o from ``origin`` to ``dest`` (Eq. 1 / Eq. 2).
 
@@ -88,3 +92,66 @@ def flops_ratio_heuristic(t_o_ms: float, origin: DeviceSpec,
                           dest: DeviceSpec) -> float:
     """The naive peak-FLOPS-ratio baseline the paper debunks (Fig. 1)."""
     return t_o_ms * origin.peak_flops / dest.peak_flops
+
+
+# ---------------------------------------------------------------------------
+# Vectorized fleet path: Eqs. 1-3 over an (n_ops x n_devices) grid at once.
+# ---------------------------------------------------------------------------
+def gamma_vec(intensity: np.ndarray, ridge: np.ndarray) -> np.ndarray:
+    """Eq. 3 for every (op, destination) pair.
+
+    ``intensity`` is (n_ops,) arithmetic intensities, ``ridge`` (n_dev,)
+    destination ridge points; returns γ with shape (n_ops, n_dev)."""
+    x = np.asarray(intensity, np.float64)[:, None]
+    r = np.asarray(ridge, np.float64)[None, :]
+    with np.errstate(divide="ignore", invalid="ignore"):
+        g = np.where(x < r, 1.0 - 0.5 * x / r,
+                     0.5 * r / np.where(x > 0.0, x, 1.0))
+    return np.where(x <= 0.0, 1.0, g)
+
+
+def num_tiles_vec(bytes_accessed: np.ndarray) -> np.ndarray:
+    """Vectorized ``num_tiles``: B per op, shape (n_ops,)."""
+    b = np.ceil(np.asarray(bytes_accessed, np.float64) / TILE_BYTES)
+    return np.maximum(b, 1.0)
+
+
+def scale_times_vec(t_o_ms: np.ndarray, ops_arrays,
+                    origin: DeviceSpec,
+                    dests: Union[DeviceArrays, Sequence[DeviceSpec]],
+                    exact: bool = False,
+                    gamma_override: Optional[float] = None,
+                    model_overhead: bool = False) -> np.ndarray:
+    """Vectorized :func:`scale_time`: one (n_ops x n_devices) grid at once.
+
+    ``ops_arrays`` is a structure of arrays exposing ``intensity`` and
+    ``bytes_accessed`` (``TrackedTrace.to_arrays()`` produces one); element
+    [i, j] equals ``scale_time(t_o_ms[i], ops[i], origin, dests[j], ...)``.
+    """
+    da = devices_mod.as_arrays(dests)
+    t = np.atleast_1d(np.asarray(t_o_ms, np.float64))
+    if gamma_override is None:
+        g = gamma_vec(ops_arrays.intensity, da.ridge_point)
+    else:
+        g = np.full((len(t), da.n), float(gamma_override))
+    d_ratio = origin.mem_bandwidth / da.mem_bandwidth          # (n_dev,)
+    c_ratio = origin.clock_hz / da.clock_hz                    # (n_dev,)
+    w_o, w_d = float(origin.wave_size), da.wave_size
+    if exact:
+        b = num_tiles_vec(ops_arrays.bytes_accessed)           # (n_ops,)
+        waves_d = np.ceil(b[:, None] / w_d[None, :])
+        waves_o = np.ceil(b / w_o)[:, None]
+        factor = (waves_d
+                  * (d_ratio[None, :] * (w_d / w_o)[None, :]) ** g
+                  * c_ratio[None, :] ** (1.0 - g)
+                  / waves_o)
+    else:
+        factor = (d_ratio[None, :] ** g
+                  * (w_o / w_d)[None, :] ** (1.0 - g)
+                  * c_ratio[None, :] ** (1.0 - g))
+    if model_overhead:
+        oh_o = DISPATCH_OVERHEAD_MS[origin.kind]
+        oh_d = np.asarray([DISPATCH_OVERHEAD_MS[k] for k in da.kinds],
+                          np.float64)
+        return (np.maximum(t - oh_o, 0.0)[:, None] * factor + oh_d[None, :])
+    return t[:, None] * factor

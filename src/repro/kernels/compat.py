@@ -1,0 +1,13 @@
+"""Version compatibility for Pallas TPU APIs.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in
+newer JAX releases; kernels are written against the new (guide-canonical)
+name and this shim resolves whichever the installed JAX provides.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams", None) \
+    or _pltpu.TPUCompilerParams

@@ -116,7 +116,8 @@ class HloModule:
         for _, dims in out_shapes:
             for d in dims:
                 out_n *= d
-        m = re.search(r"dot\(%?([\w.\-]+),", line)
+        # operands may carry inline types: dot(f32[512,512]{1,0} %lhs, ...)
+        m = re.search(r"dot\([^%]*%([\w.\-]+),", line)
         contract = 1
         cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
         if m and cm and m.group(1) in symtab:
@@ -132,7 +133,8 @@ class HloModule:
         for _, dims in out_shapes:
             for d in dims:
                 out_n *= d
-        m = re.search(r"convolution\(%?([\w.\-]+),\s*%?([\w.\-]+)\)", line)
+        m = re.search(r"convolution\([^%]*%([\w.\-]+),[^%]*%([\w.\-]+)\)",
+                      line)
         red = 1
         if m and m.group(2) in symtab:
             rhs = symtab[m.group(2)]

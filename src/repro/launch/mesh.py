@@ -11,10 +11,21 @@ from __future__ import annotations
 import jax
 
 
-def _make(shape, axes):
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+def make_mesh(shape, axes, devices=None):
+    """``jax.make_mesh`` across jax versions.
+
+    ``axis_types`` (and ``jax.sharding.AxisType``) only exist in newer
+    jax releases; older ones default every axis to Auto anyway."""
+    kwargs = {}
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        kwargs["axis_types"] = (axis_type.Auto,) * len(axes)
+    if devices is not None:
+        kwargs["devices"] = devices
+    return jax.make_mesh(shape, axes, **kwargs)
+
+
+_make = make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):

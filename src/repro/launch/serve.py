@@ -2,6 +2,10 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \\
       --requests 8 --max-new 16
+
+``--fleet`` additionally traces this workload's decode step and answers
+the Habitat fleet query — "which device should serve this model?" — via
+the vectorized ``FleetPlanner`` (ranked by throughput and by samples/$).
 """
 
 from __future__ import annotations
@@ -11,6 +15,7 @@ import dataclasses
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, get_config
@@ -28,6 +33,11 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--fleet", action="store_true",
+                    help="rank every registered device for this workload")
+    ap.add_argument("--fleet-mlps", action="store_true",
+                    help="use the trained-MLP predictor for --fleet "
+                         "(trains/loads artifacts; slower first run)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -51,6 +61,33 @@ def main():
           f"{dt:.2f}s ({toks / dt:.1f} tok/s)")
     for r in done[:3]:
         print(f"  req {r.uid}: {r.output.tolist()}")
+
+    if args.fleet:
+        from repro.core import HabitatPredictor, OperationTracker
+        from repro.core import default_predictor
+        from repro.models import transformer as tfm
+        from repro.serve.fleet import FleetPlanner, format_fleet
+
+        tracker = OperationTracker("cpu-host")
+        trace = tracker.track(
+            lambda p, t, s: tfm.decode_step(p, cfg, t, s),
+            params, jnp.asarray(engine.last_token), engine.state,
+            label=f"{args.arch}-decode")
+        predictor = (default_predictor() if args.fleet_mlps
+                     else HabitatPredictor())
+        planner = FleetPlanner(predictor=predictor)
+        t0 = time.perf_counter()
+        ranking = planner.rank(trace, batch_size=args.batch)
+        dt = (time.perf_counter() - t0) * 1e3
+        print(f"\nfleet ranking for one decode step "
+              f"({len(trace.ops)} ops x {len(planner.fleet)} devices, "
+              f"{dt:.1f} ms):")
+        print(format_fleet(ranking))
+        by_cost = planner.rank(trace, batch_size=args.batch, by="cost")
+        rentable = [c for c in by_cost if c.cost_per_hour]
+        if rentable:
+            print(f"\nbest samples/$: {rentable[0].device} "
+                  f"(cache hit rate {planner.stats.hit_rate:.0%})")
 
 
 if __name__ == "__main__":

@@ -1,1 +1,6 @@
 from repro.serve.engine import ServingEngine, Request
+from repro.serve.fleet import (CacheStats, FleetChoice, FleetPlanner,
+                               format_fleet)
+
+__all__ = ["ServingEngine", "Request", "CacheStats", "FleetChoice",
+           "FleetPlanner", "format_fleet"]

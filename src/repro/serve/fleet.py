@@ -1,0 +1,148 @@
+"""Fleet planning service: "rank every device you could buy" as a query.
+
+``FleetPlanner`` wraps the vectorized prediction engine
+(:mod:`repro.core.batched`) behind the serving-shaped question from the
+paper's case studies (Sec. 5.3): given one measured trace, predict the
+iteration time on every registered device and rank the fleet by throughput
+or by cost-normalized throughput.
+
+Results are memoized per (trace fingerprint, device, predictor config) in
+an LRU cache, so repeated queries — the common serving pattern, where many
+users ask about the same public model — only pay for devices not yet seen
+for that trace.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import cost as cost_mod
+from repro.core import devices
+from repro.core.trace import TrackedTrace
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetChoice:
+    """One ranked row of a fleet query (mirrors ``cost.DeviceChoice``)."""
+    device: str
+    iter_ms: float
+    throughput: float
+    cost_per_hour: Optional[float]
+    cost_normalized: Optional[float]
+    speedup_vs_origin: float
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class FleetPlanner:
+    """Answer fleet queries with an LRU-cached vectorized predictor.
+
+    ``predictor`` is any object exposing ``predict_fleet(trace, dests)``
+    and ``config_key()`` (all predictors in :mod:`repro.core.predictor`
+    do); ``fleet`` defaults to every registered device."""
+
+    def __init__(self, predictor=None, fleet: Optional[Sequence[str]] = None,
+                 cache_size: int = 4096):
+        if predictor is None:
+            from repro.core.predictor import HabitatPredictor
+            predictor = HabitatPredictor()
+        self.predictor = predictor
+        self.fleet = (sorted(devices.all_devices()) if fleet is None
+                      else list(fleet))
+        for name in self.fleet:
+            devices.get(name)   # fail fast on unknown devices
+        self.cache_size = cache_size
+        self.stats = CacheStats()
+        self._cache: "OrderedDict[Tuple, float]" = OrderedDict()
+        self._lock = threading.Lock()
+
+    # -- cache -------------------------------------------------------------
+    @staticmethod
+    def _key(fingerprint: str, device: str, config_key: Tuple) -> Tuple:
+        return (fingerprint, device, config_key)
+
+    def clear_cache(self) -> None:
+        with self._lock:
+            self._cache.clear()
+            self.stats = CacheStats()
+
+    # -- queries -----------------------------------------------------------
+    def predict(self, trace: TrackedTrace,
+                dests: Optional[Sequence[str]] = None) -> Dict[str, float]:
+        """Predicted iteration time (ms) per destination device.
+
+        Cached devices are served from the LRU; the remainder is computed
+        in ONE vectorized ``predict_fleet`` call."""
+        dests = list(self.fleet if dests is None else dests)
+        fp = trace.fingerprint()
+        ck = self.predictor.config_key()
+        out: Dict[str, float] = {}
+        missing: List[str] = []
+        with self._lock:
+            for name in dests:
+                key = self._key(fp, name, ck)
+                if key in self._cache:
+                    self._cache.move_to_end(key)
+                    out[name] = self._cache[key]
+                    self.stats.hits += 1
+                else:
+                    missing.append(name)
+                    self.stats.misses += 1
+        if missing:
+            fleet = self.predictor.predict_fleet(trace, missing)
+            totals = fleet.total_ms
+            with self._lock:
+                for name, ms in zip(fleet.dests, totals):
+                    out[name] = float(ms)
+                    # plain assignment appends fresh keys at the LRU tail
+                    self._cache[self._key(fp, name, ck)] = float(ms)
+                while len(self._cache) > self.cache_size:
+                    self._cache.popitem(last=False)
+                    self.stats.evictions += 1
+        return {name: out[name] for name in dests}
+
+    def rank(self, trace: TrackedTrace, batch_size: int,
+             dests: Optional[Sequence[str]] = None,
+             by: str = "throughput") -> List[FleetChoice]:
+        """Ranked fleet: ``by`` is "throughput" (speed) or "cost" ($/sample).
+
+        Devices with no rental price rank last under ``by="cost"``."""
+        if by not in ("throughput", "cost"):
+            raise ValueError(f"unknown ranking objective {by!r}")
+        times = self.predict(trace, dests)
+        origin_ms = trace.run_time_ms
+        rows = []
+        for name, ms in times.items():
+            spec = devices.get(name)
+            tput = cost_mod.throughput(batch_size, ms)
+            cn = (cost_mod.cost_normalized_throughput(
+                      batch_size, ms, spec.cost_per_hour)
+                  if spec.cost_per_hour else None)
+            rows.append(FleetChoice(
+                device=name, iter_ms=ms, throughput=tput,
+                cost_per_hour=spec.cost_per_hour, cost_normalized=cn,
+                speedup_vs_origin=origin_ms / ms))
+        if by == "cost":
+            # secondary key (device name) makes equal-score ordering stable
+            rows.sort(key=lambda c: (-(c.cost_normalized or 0.0), c.device))
+        else:
+            rows.sort(key=lambda c: (-c.throughput, c.device))
+        return rows
+
+
+def format_fleet(choices: Sequence[FleetChoice]) -> str:
+    """Human-readable ranking table (same layout as ``cost.format_ranking``)."""
+    return cost_mod.format_ranking(choices)

@@ -2,6 +2,8 @@ import os
 import sys
 from pathlib import Path
 
+import pytest
+
 # NOTE: deliberately NO --xla_force_host_platform_device_count here.
 # Smoke tests and benches must see 1 device; only launch/dryrun.py (and the
 # subprocess-based sharding tests) force placeholder devices.
@@ -9,3 +11,31 @@ from pathlib import Path
 SRC = Path(__file__).resolve().parents[1] / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
+
+try:
+    # CI runs with HYPOTHESIS_PROFILE=ci: fewer examples per property so
+    # the fast lane (-m "not slow") stays well under the 2-minute budget.
+    from hypothesis import settings
+
+    settings.register_profile("ci", max_examples=10, deadline=None)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "default"))
+except ImportError:  # hypothesis is a dev-only dependency
+    pass
+
+
+@pytest.fixture
+def tiny_mlp_cfg():
+    """A seconds-not-minutes MLPConfig for tests that train an MLP.
+
+    Big enough to exercise the full train/save/load/predict pipeline,
+    far too small to learn anything — accuracy-sensitive tests must use
+    a real config and carry ``@pytest.mark.slow``."""
+    from repro.core import mlp
+
+    return mlp.MLPConfig(hidden_layers=2, hidden_size=32, epochs=3)
+
+
+@pytest.fixture
+def tiny_n_configs():
+    """Matching tiny dataset size for MLP-pipeline tests."""
+    return 120

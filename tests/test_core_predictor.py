@@ -136,6 +136,7 @@ def test_tracker_wallclock_measurement():
 # ---------------------------------------------------------------------------
 # MLP predictors
 # ---------------------------------------------------------------------------
+@pytest.mark.slow  # trains a real MLP on a 1600-point dataset
 def test_mlp_learns_dataset():
     ds = dataset_mod.build_dataset("linear", 800,
                                    device_names=["T4", "V100"])
@@ -147,10 +148,10 @@ def test_mlp_learns_dataset():
     assert preds.shape == (8,) and (preds > 0).all()
 
 
-def test_mlp_save_load_roundtrip(tmp_path):
-    ds = dataset_mod.build_dataset("bmm", 200, device_names=["T4"])
-    trained = mlp.train(ds, mlp.MLPConfig(hidden_layers=2, hidden_size=32,
-                                          epochs=3))
+def test_mlp_save_load_roundtrip(tmp_path, tiny_mlp_cfg, tiny_n_configs):
+    ds = dataset_mod.build_dataset("bmm", tiny_n_configs,
+                                   device_names=["T4"])
+    trained = mlp.train(ds, tiny_mlp_cfg)
     p = tmp_path / "m.pkl"
     trained.save(p)
     loaded = mlp.TrainedMLP.load(p)
@@ -175,6 +176,7 @@ def test_predict_trace_runs_and_orders_devices():
     assert (t_v100 < t_p4000) == (gt_v100 < gt_p4000)
 
 
+@pytest.mark.slow  # trains the 4 default MLPs when artifacts/ is cold
 def test_habitat_beats_flops_heuristic():
     """Fig. 1's claim: the peak-FLOPS heuristic is much worse.
 

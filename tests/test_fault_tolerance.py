@@ -39,6 +39,7 @@ def test_checkpoint_latest_wins(tmp_path):
     np.testing.assert_array_equal(np.asarray(restored["x"]), np.full(3, 5.0))
 
 
+@pytest.mark.slow
 def test_crash_and_resume_is_bitwise_identical(tmp_path):
     """Train 10 steps straight vs crash-at-6 + restore: same final loss."""
     cfg = _cfg()
@@ -77,6 +78,7 @@ def test_async_checkpoint_completes(tmp_path):
     assert checkpoint.latest_step(str(tmp_path)) == 5
 
 
+@pytest.mark.slow
 def test_straggler_detection(tmp_path):
     cfg = _cfg()
     import time
@@ -116,6 +118,7 @@ def test_compression_parity_and_volume():
         atol=1e-6)
 
 
+@pytest.mark.slow
 def test_compressed_training_converges():
     """SGD with int8-compressed grads still reduces loss (parity band)."""
     from repro.train.train_step import init_state, make_train_step

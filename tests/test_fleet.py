@@ -1,0 +1,210 @@
+"""FleetPlanner + vectorized-predictor interface tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FlopsRatioPredictor, HabitatPredictor,
+                        OperationTracker, PaleoPredictor, devices)
+from repro.core import cost as cost_mod
+from repro.serve.fleet import FleetPlanner, format_fleet
+
+DEVS = sorted(devices.all_devices())
+
+
+def _toy_step(w, x):
+    h = jnp.tanh(x @ w)
+    return jnp.sum(jax.nn.softmax(h @ w.T))
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return OperationTracker("T4").track(
+        _toy_step, jnp.zeros((128, 256)), jnp.zeros((32, 128)))
+
+
+@pytest.fixture(scope="module")
+def trace2():
+    return OperationTracker("T4").track(
+        _toy_step, jnp.zeros((64, 64)), jnp.zeros((16, 64)))
+
+
+# ---------------------------------------------------------------------------
+# cache behavior
+# ---------------------------------------------------------------------------
+def test_cache_miss_then_hit(trace):
+    planner = FleetPlanner(predictor=HabitatPredictor())
+    first = planner.predict(trace)
+    assert planner.stats.misses == len(DEVS)
+    assert planner.stats.hits == 0
+    second = planner.predict(trace)
+    assert planner.stats.hits == len(DEVS)
+    assert second == first
+
+
+def test_cache_partial_overlap(trace):
+    planner = FleetPlanner(predictor=HabitatPredictor())
+    planner.predict(trace, dests=["T4", "V100"])
+    planner.predict(trace, dests=["T4", "V100", "tpu-v5e"])
+    assert planner.stats.hits == 2
+    assert planner.stats.misses == 3
+
+
+def test_cache_keyed_on_trace_and_config(trace, trace2):
+    planner = FleetPlanner(predictor=HabitatPredictor())
+    a = planner.predict(trace, dests=["V100"])
+    b = planner.predict(trace2, dests=["V100"])
+    assert planner.stats.misses == 2    # different fingerprints
+    assert a["V100"] != b["V100"]
+    # a different predictor config must not reuse these entries
+    planner2 = FleetPlanner(predictor=HabitatPredictor(exact_wave=True))
+    planner2._cache = planner._cache    # shared store, different config key
+    planner2.predict(trace, dests=["V100"])
+    assert planner2.stats.misses == 1
+
+
+def test_cache_eviction_lru(trace):
+    planner = FleetPlanner(predictor=HabitatPredictor(), cache_size=4)
+    planner.predict(trace)              # 15 inserts into a 4-slot cache
+    assert len(planner._cache) == 4
+    assert planner.stats.evictions == len(DEVS) - 4
+
+
+def test_cache_consistent_with_uncached(trace):
+    planner = FleetPlanner(predictor=HabitatPredictor())
+    planner.predict(trace, dests=["T4", "V100"])
+    warm = planner.predict(trace)       # mixed cached + fresh
+    cold = HabitatPredictor().predict_fleet(trace, DEVS).as_dict()
+    for d in DEVS:
+        assert warm[d] == pytest.approx(cold[d], rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# ranking
+# ---------------------------------------------------------------------------
+def test_ranking_stable_and_sorted(trace):
+    planner = FleetPlanner(predictor=HabitatPredictor())
+    r1 = planner.rank(trace, batch_size=32)
+    r2 = planner.rank(trace, batch_size=32)
+    assert [c.device for c in r1] == [c.device for c in r2]
+    tputs = [c.throughput for c in r1]
+    assert tputs == sorted(tputs, reverse=True)
+    by_cost = planner.rank(trace, batch_size=32, by="cost")
+    cns = [c.cost_normalized or 0.0 for c in by_cost]
+    assert cns == sorted(cns, reverse=True)
+    with pytest.raises(ValueError, match="ranking objective"):
+        planner.rank(trace, batch_size=32, by="latency")
+
+
+def test_ranking_matches_rank_devices(trace):
+    """FleetPlanner and core.cost.rank_devices agree on the ordering."""
+    pred = HabitatPredictor()
+    planner = FleetPlanner(predictor=pred, fleet=DEVS)
+    fleet_order = [c.device for c in planner.rank(trace, batch_size=32)]
+    cost_order = [c.device for c in cost_mod.rank_devices(
+        trace, 32, DEVS, predictor=pred)]
+    assert fleet_order == cost_order
+
+
+def test_format_fleet_renders(trace):
+    planner = FleetPlanner(predictor=HabitatPredictor())
+    table = format_fleet(planner.rank(trace, batch_size=32))
+    assert "samples/$" in table and "cpu-host" in table
+
+
+def test_unknown_device_fails_fast():
+    with pytest.raises(KeyError, match="unknown device"):
+        FleetPlanner(predictor=HabitatPredictor(), fleet=["T4", "H100"])
+
+
+# ---------------------------------------------------------------------------
+# predictor interface agreement after the to_arrays() refactor
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cls", [HabitatPredictor, FlopsRatioPredictor,
+                                 PaleoPredictor])
+def test_predictors_share_fleet_interface(cls, trace):
+    pred = cls()
+    fleet = pred.predict_fleet(trace, ["V100", "tpu-v5e"])
+    assert fleet.dests == ["V100", "tpu-v5e"]
+    assert fleet.op_ms.shape == (len(trace.ops), 2)
+    # per-device predict_trace agrees with the fleet grid
+    for j, dest in enumerate(fleet.dests):
+        per_dev = pred.predict_trace(trace, dest)
+        assert per_dev.origin_device == dest
+        assert per_dev.run_time_ms == pytest.approx(
+            fleet.time_for(dest), rel=1e-12)
+    assert isinstance(pred.config_key(), tuple)
+
+
+def test_flops_ratio_rejects_unmeasured_trace():
+    """Unmeasured ops must fail loudly, not flow NaN into rankings."""
+    from repro.core.costmodel import OpCost
+    from repro.core.trace import Op, TrackedTrace
+    tr = TrackedTrace(ops=[Op(name="x", kind="add",
+                              cost=OpCost(1e6, 6e5, 4e5))],
+                      origin_device="T4")
+    with pytest.raises(ValueError, match="no origin measurement"):
+        FlopsRatioPredictor().predict_fleet(tr, ["V100"])
+
+
+def test_config_key_distinguishes_retrained_mlps(tiny_mlp_cfg,
+                                                 tiny_n_configs):
+    """Cache keys must change when an MLP is swapped for a retrained one."""
+    from repro.core import dataset as dataset_mod, mlp
+    ds = dataset_mod.build_dataset("bmm", tiny_n_configs,
+                                   device_names=["T4"])
+    m1 = mlp.train(ds, tiny_mlp_cfg)
+    m2 = mlp.train(ds, tiny_mlp_cfg)
+    k1 = HabitatPredictor(mlps={"bmm": m1}).config_key()
+    k2 = HabitatPredictor(mlps={"bmm": m2}).config_key()
+    assert k1 != k2
+
+
+def test_planner_works_with_baseline_predictors(trace):
+    for pred in (FlopsRatioPredictor(), PaleoPredictor()):
+        planner = FleetPlanner(predictor=pred, fleet=["T4", "V100", "P100"])
+        ranking = planner.rank(trace, batch_size=32)
+        assert len(ranking) == 3
+        assert all(np.isfinite(c.iter_ms) for c in ranking)
+
+
+class _StubMLP:
+    """Deterministic fake MLP: prediction is a pure function of the raw
+    feature row, so a transposed/misordered (op, device) grid in the
+    batched feature tiling changes the answer.  Keeps MLP-path parity
+    coverage in the CI fast lane without training anything."""
+
+    uid = -1
+
+    def predict_ms(self, features):
+        x = np.atleast_2d(features)
+        return (x * np.arange(1, x.shape[1] + 1)).sum(axis=1) + 1e-3
+
+
+def test_mlp_fleet_grid_matches_scalar_path():
+    """predict_fleet's per-kind feature tiling == scalar per-device path."""
+    from repro.core import dataset as dataset_mod
+    from repro.core.trace import TrackedTrace
+    ops = (dataset_mod.sample_ops("linear", 5)
+           + dataset_mod.sample_ops("bmm", 4)
+           + dataset_mod.sample_ops("conv2d", 3))
+    tr = TrackedTrace(ops=ops, origin_device="T4").measure()
+    mlps = {"linear": _StubMLP(), "bmm": _StubMLP()}  # conv2d: analytical
+    pred = HabitatPredictor(mlps=mlps)
+    fleet = pred.predict_fleet(tr, DEVS)
+    for j, dest in enumerate(fleet.dests):
+        scalar = pred.predict_trace_scalar(tr, dest)
+        for i, op in enumerate(scalar.ops):
+            assert fleet.op_ms[i, j] == pytest.approx(
+                op.predicted_ms, rel=1e-9), (i, op.kind, dest)
+
+
+def test_fleet_breakdown_matches_trace_breakdown(trace):
+    pred = HabitatPredictor()
+    fleet = pred.predict_fleet(trace, ["V100"])
+    per_dev = pred.predict_trace(trace, "V100").breakdown()
+    fleet_bd = fleet.breakdown("V100")
+    assert set(per_dev) == set(fleet_bd)
+    for kind in per_dev:
+        assert fleet_bd[kind] == pytest.approx(per_dev[kind], rel=1e-12)

@@ -26,7 +26,9 @@ def test_scan_trip_count_weighting():
     expected = 28 * 2 * 512**3
     assert cost.flops == pytest.approx(expected, rel=0.05)
     # XLA's own analysis undercounts by ~length (the motivating bug)
-    xla = float(c.cost_analysis()["flops"])
+    ca = c.cost_analysis()
+    ca = ca[0] if isinstance(ca, list) else ca   # older jax
+    xla = float(ca["flops"])
     assert xla < expected / 5
 
 
@@ -86,8 +88,8 @@ def test_collective_parse_multidevice_subprocess():
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.launch.hlo_analysis import HloModule
-        mesh = jax.make_mesh((8,), ("d",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((8,), ("d",))
         sh = NamedSharding(mesh, P("d"))
         rep = NamedSharding(mesh, P())
         f = jax.jit(lambda x: x.sum(0), in_shardings=sh, out_shardings=rep)

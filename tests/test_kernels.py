@@ -124,6 +124,7 @@ def test_fused_mlp_matches_ref(bsz, hidden, layers):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
 
 
+@pytest.mark.slow  # trains an MLP before serving it
 def test_fused_mlp_serves_trained_predictor():
     """The Habitat MLP predictor itself runs through the Pallas kernel."""
     from repro.core import dataset as dataset_mod, mlp as mlp_mod

@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# dev-only dependency (requirements-dev.txt): skip cleanly, don't break
+# collection, when running against runtime-only requirements
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import devices, gamma, scale_time
 from repro.core.costmodel import OpCost

@@ -36,6 +36,7 @@ def _run(body: str) -> str:
     return out.stdout
 
 
+@pytest.mark.slow
 def test_sharded_train_step_matches_single_device():
     _run("""
         cfg = smoke_config(get_config("qwen3-0.6b"))
@@ -70,6 +71,7 @@ def test_sharded_train_step_matches_single_device():
     """)
 
 
+@pytest.mark.slow
 def test_moe_expert_parallel_matches():
     _run("""
         cfg = smoke_config(get_config("granite-moe-3b-a800m"))
@@ -110,9 +112,9 @@ def test_elastic_restore_8_to_4_devices():
         s8 = jax.device_put(s0, sh8)
         checkpoint.save(d, 3, s8)
         # restore onto a 4-device mesh (elastic down-scale)
-        mesh4 = jax.make_mesh((2, 2), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,) * 2,
-                              devices=jax.devices()[:4])
+        from repro.launch.mesh import make_mesh
+        mesh4 = make_mesh((2, 2), ("data", "model"),
+                          devices=jax.devices()[:4])
         sh4 = sharding.tree_shardings(sharding.param_specs(s0, mesh4), mesh4)
         restored, step = checkpoint.restore(d, s0, shardings=sh4)
         assert step == 3

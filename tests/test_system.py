@@ -52,7 +52,13 @@ def test_rank_devices_orders_correctly():
     assert [c.device for c in ranking] == gt
 
 
-@pytest.mark.parametrize("name", sorted(ZOO))
+# dcgan is the cheapest zoo model; the other four trace for ~14s combined
+# and run in the slow lane
+_ZOO_PARAMS = [pytest.param(n, marks=[] if n == "dcgan"
+                            else pytest.mark.slow) for n in sorted(ZOO)]
+
+
+@pytest.mark.parametrize("name", _ZOO_PARAMS)
 def test_evalzoo_traces(name):
     it, params, batch = make_train_iteration(name)
     tr = OperationTracker("cpu-host").track(it, params, batch, label=name)

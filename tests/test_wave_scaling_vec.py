@@ -1,0 +1,111 @@
+"""Parity tests: the vectorized fleet path must match the scalar path
+element-wise, for every (exact, model_overhead) variant — the >=10x
+speedup in benchmarks/bench_fleet.py is meaningless if the answer moves."""
+
+import numpy as np
+import pytest
+
+from repro.core import devices, gamma, scale_time
+from repro.core import batched, wave_scaling
+from repro.core.costmodel import OpCost
+from repro.core.trace import Op, TrackedTrace
+
+DEVS = sorted(devices.all_devices())
+
+
+def _ops(n=40, seed=0):
+    rng = np.random.default_rng(seed)
+    ops = []
+    for i in range(n):
+        nbytes = float(np.exp(rng.uniform(np.log(1e3), np.log(1e10))))
+        flops = nbytes * float(np.exp(rng.uniform(np.log(1e-3),
+                                                  np.log(1e3))))
+        ops.append(Op(name="x", kind="add",
+                      cost=OpCost(flops, nbytes * 0.6, nbytes * 0.4),
+                      measured_ms=float(rng.uniform(1e-3, 50.0)),
+                      multiplicity=int(rng.integers(1, 4))))
+    return ops
+
+
+def _trace(origin="T4", n=40, seed=0):
+    return TrackedTrace(ops=_ops(n, seed), origin_device=origin)
+
+
+@pytest.mark.parametrize("exact", [False, True])
+@pytest.mark.parametrize("model_overhead", [False, True])
+def test_scale_times_vec_matches_scalar(exact, model_overhead):
+    trace = _trace()
+    arrays = trace.to_arrays()
+    origin = devices.get("T4")
+    dests = [devices.get(d) for d in DEVS]
+    grid = wave_scaling.scale_times_vec(
+        arrays.measured_ms, arrays, origin, dests,
+        exact=exact, model_overhead=model_overhead)
+    assert grid.shape == (len(trace.ops), len(dests))
+    for i, op in enumerate(trace.ops):
+        for j, dest in enumerate(dests):
+            want = scale_time(op.measured_ms, op, origin, dest,
+                              exact=exact, model_overhead=model_overhead)
+            assert grid[i, j] == pytest.approx(want, rel=1e-12), \
+                (op.name, dest.name, exact, model_overhead)
+
+
+def test_scale_times_vec_gamma_override():
+    trace = _trace(n=10)
+    arrays = trace.to_arrays()
+    origin = devices.get("tpu-v5e")
+    dests = [devices.get(d) for d in DEVS]
+    grid = wave_scaling.scale_times_vec(arrays.measured_ms, arrays,
+                                        origin, dests, gamma_override=0.3)
+    for i, op in enumerate(trace.ops):
+        for j, dest in enumerate(dests):
+            want = scale_time(op.measured_ms, op, origin, dest,
+                              gamma_override=0.3)
+            assert grid[i, j] == pytest.approx(want, rel=1e-12)
+
+
+def test_gamma_vec_matches_scalar_including_edges():
+    specs = [devices.get(d) for d in DEVS]
+    da = devices.spec_arrays(specs)
+    ops = _ops(30, seed=1)
+    # edge cases: zero flops (gamma must be 1) and exactly-at-ridge
+    ops.append(Op(name="z", kind="add", cost=OpCost(0.0, 6e5, 4e5)))
+    r = specs[0].ridge_point
+    ops.append(Op(name="ridge", kind="add", cost=OpCost(r * 1e6, 6e5, 4e5)))
+    intensity = np.asarray([op.cost.intensity for op in ops])
+    g = wave_scaling.gamma_vec(intensity, da.ridge_point)
+    assert ((0.0 <= g) & (g <= 1.0)).all()
+    for i, op in enumerate(ops):
+        for j, spec in enumerate(specs):
+            assert g[i, j] == pytest.approx(gamma(op, spec), abs=1e-15)
+
+
+def test_gamma_override_annotation_is_optional():
+    """Regression: the annotation was ``float = None``; it must admit None."""
+    import inspect
+    import typing
+
+    hints = typing.get_type_hints(wave_scaling.scale_time)
+    assert hints["gamma_override"] == typing.Optional[float]
+    assert inspect.signature(
+        wave_scaling.scale_time).parameters["gamma_override"].default is None
+
+
+def test_unmeasured_op_raises_in_batch():
+    ops = _ops(5)
+    ops[3].measured_ms = None
+    trace = TrackedTrace(ops=ops, origin_device="T4")
+    with pytest.raises(ValueError, match="no origin measurement"):
+        batched.predict_trace_batch(trace, DEVS)
+
+
+def test_trace_arrays_cache_and_fingerprint():
+    trace = _trace(n=8)
+    a1 = trace.to_arrays()
+    assert trace.to_arrays() is a1          # cached
+    fp1 = trace.fingerprint()
+    trace.ops[0].measured_ms += 1.0
+    assert trace.fingerprint() == fp1       # stale cache by design...
+    a2 = trace.to_arrays(refresh=True)      # ...refresh invalidates
+    assert a2 is not a1
+    assert trace.fingerprint() != fp1
