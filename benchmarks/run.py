@@ -45,10 +45,12 @@ BENCHES = [
      "Predictor-variant ablation: Eq.2 vs Eq.1 vs overhead modelling"),
     ("fleet", "benchmarks.bench_fleet",
      "Fleet engine: vectorized vs scalar prediction loop (>=10x gate)"),
+    ("sweep", "benchmarks.bench_sweep",
+     "Multi-trace ragged sweep vs per-trace fleet loop (>=3x gate)"),
 ]
 
 #: the subset (and reduced sizes) run by CI's bench-smoke job
-SMOKE_KEYS = ("fleet", "kernels")
+SMOKE_KEYS = ("fleet", "sweep", "kernels")
 
 
 def main() -> None:
@@ -57,6 +59,11 @@ def main() -> None:
                     help="comma-separated subset of benchmark keys")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: smoke subset at reduced sizes")
+    ap.add_argument("--report", default=None, metavar="PATH",
+                    help="write a machine-readable JSON report (per-bench "
+                         "status/duration + the CSV rows) — the nightly "
+                         "workflow uploads this as an artifact so "
+                         "prediction-error regressions are trackable")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     if only:
@@ -69,6 +76,7 @@ def main() -> None:
 
     csv = Csv()
     failed = []
+    durations = {}
     t_all = time.time()
     for key, module, title in BENCHES:
         if only and key not in only:
@@ -88,14 +96,29 @@ def main() -> None:
             traceback.print_exc()
             csv.add(f"{key}_FAILED", 0.0, str(type(e).__name__))
             failed.append(key)
-        print(f"  [{key}: {time.time() - t0:.1f}s]")
+        durations[key] = round(time.time() - t0, 2)
+        print(f"  [{key}: {durations[key]:.1f}s]")
 
     print(f"\n=== CSV (name,us_per_call,derived) — total "
           f"{time.time() - t_all:.0f}s ===")
     csv.dump()
-    if failed and args.smoke:
-        # smoke mode is a CI gate: failures must fail the job
-        sys.exit(f"smoke benches failed: {', '.join(failed)}")
+    if args.report:
+        import json
+        report = {
+            "smoke": args.smoke,
+            "total_seconds": round(time.time() - t_all, 2),
+            "failed": failed,
+            "durations_seconds": durations,
+            "rows": [{"name": n, "us_per_call": round(us, 3),
+                      "derived": derived}
+                     for n, us, derived in csv.rows],
+        }
+        with open(args.report, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"report written to {args.report}")
+    if failed:
+        # CI gates (smoke) and the nightly full run must fail loudly
+        sys.exit(f"benches failed: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,61 @@
+"""Multi-trace what-if sweep: many workload variants x every device.
+
+    PYTHONPATH=src python examples/sweep_grid.py
+
+The fleet query of ``fleet_rank.py`` asks about ONE workload; capacity
+planning asks about a *family* of them — "how does the best device change
+as I scale the batch size?".  Each batch size is traced once on the device
+you own, the traces are stacked into one ragged grid, and a single
+``FleetPlanner.sweep`` pass prices every (variant, device) cell.  A repeat
+query is served entirely from the per-trace fingerprint cache.
+"""
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import OperationTracker, default_predictor
+from repro.models.evalzoo import make_train_iteration
+from repro.serve.fleet import FleetPlanner, format_sweep
+
+
+def main():
+    batch_sizes = [4, 16, 64]
+    tracker = OperationTracker("T4")
+    traces = []
+    for b in batch_sizes:
+        it, params, batch = make_train_iteration("transformer", batch=b)
+        traces.append(tracker.track(it, params, batch,
+                                    label=f"transformer-b{b}"))
+    n_ops = sum(len(t.ops) for t in traces)
+    print(f"traced {len(traces)} batch-size variants on T4 "
+          f"({n_ops} ops total)\n")
+
+    planner = FleetPlanner(predictor=default_predictor())
+
+    t0 = time.perf_counter()
+    times = planner.sweep(traces)
+    dt_cold = (time.perf_counter() - t0) * 1e3
+    print(f"what-if grid — {len(traces)} traces x {len(planner.fleet)} "
+          f"devices in one ragged pass ({dt_cold:.1f} ms, predicted "
+          f"iteration ms):")
+    print(format_sweep([t.label for t in traces], times))
+
+    t0 = time.perf_counter()
+    planner.sweep(traces)
+    dt_warm = (time.perf_counter() - t0) * 1e3
+    print(f"\nrepeat sweep: {dt_warm:.2f} ms, hit rate "
+          f"{planner.stats.hit_rate:.0%} "
+          f"(hits={planner.stats.hits} misses={planner.stats.misses})")
+
+    # the grid answers scaling questions row-wise: throughput-optimal
+    # device per batch size
+    for t, row in zip(traces, times):
+        best = min(row, key=row.get)
+        print(f"  {t.label}: best device {best} ({row[best]:.2f} ms/iter)")
+
+
+if __name__ == "__main__":
+    main()

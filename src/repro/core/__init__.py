@@ -10,7 +10,10 @@ Public API (Listing 1 of the paper)::
 """
 
 from repro.core.trace import Op, OperationTracker, TraceArrays, TrackedTrace
-from repro.core.batched import FleetPrediction, predict_trace_batch
+from repro.core.batched import (FleetPrediction, FusedMLPScorer,
+                                RaggedTraceArrays, SweepPrediction,
+                                predict_sweep, predict_trace_batch,
+                                stack_traces)
 from repro.core.predictor import (HabitatPredictor, FlopsRatioPredictor,
                                   PaleoPredictor, default_predictor,
                                   train_mlps)
@@ -41,8 +44,10 @@ class Device:
 
 __all__ = [
     "Op", "OperationTracker", "TraceArrays", "TrackedTrace",
-    "FleetPrediction", "predict_trace_batch", "HabitatPredictor",
-    "FlopsRatioPredictor", "PaleoPredictor", "default_predictor",
-    "train_mlps", "gamma", "gamma_vec", "scale_time", "scale_times_vec",
-    "rank_devices", "throughput", "cost_normalized_throughput", "Device",
+    "FleetPrediction", "FusedMLPScorer", "RaggedTraceArrays",
+    "SweepPrediction", "predict_sweep", "predict_trace_batch",
+    "stack_traces", "HabitatPredictor", "FlopsRatioPredictor",
+    "PaleoPredictor", "default_predictor", "train_mlps", "gamma",
+    "gamma_vec", "scale_time", "scale_times_vec", "rank_devices",
+    "throughput", "cost_normalized_throughput", "Device",
 ]

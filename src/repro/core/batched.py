@@ -1,11 +1,12 @@
-"""Vectorized fleet-prediction engine: one trace against many devices.
+"""Vectorized fleet-prediction engine: traces against many devices.
 
 The serving question Habitat answers is "from the one device you own, rank
 every device you could buy" (Sec. 5.3) — at production scale that is one
 trace predicted against *dozens* of destinations per request.  The per-op
 Python loop in the original ``HabitatPredictor.predict_trace`` pays the
 interpreter cost once per (op, device) pair; this module pays it once per
-trace.
+trace — and, for fleet-wide what-if sweeps (many batch sizes / model
+variants x many devices), once per *stack* of traces.
 
 The pipeline is fully array-shaped:
 
@@ -18,6 +19,18 @@ The pipeline is fully array-shaped:
 
 ``FleetPrediction`` keeps the per-(op, device) grid so per-kind breakdowns
 and per-device totals are both O(1) array reductions afterwards.
+
+Multi-trace layer: :func:`stack_traces` concatenates several traces into a
+:class:`RaggedTraceArrays` (one structure-of-arrays with segment offsets),
+:func:`predict_sweep` fills the whole (total_ops x n_devices) grid in one
+pass — segment-aware wave scaling handles per-trace origins, and when all
+four op-kind MLPs share an architecture the kernel-varying rows can be
+scored by ONE fused Pallas launch (:class:`FusedMLPScorer`) instead of
+four jitted per-kind forwards.  Row i of the resulting
+:class:`SweepPrediction` equals ``predict_trace_batch`` on trace i alone:
+bitwise on the wave-scaling and analytical paths, and to float32-forward
+tolerance (~1e-6) on trained-MLP rows, whose jitted batches pad to
+different shapes in the two spellings.
 """
 
 from __future__ import annotations
@@ -38,7 +51,7 @@ _EFF_COMPUTE = (0.50, 0.70)   # (kernel-alike, kernel-varying)
 _EFF_MEMORY = (0.82, 0.75)
 
 
-def analytical_ms_vec(arrays: TraceArrays,
+def analytical_ms_vec(arrays: Union[TraceArrays, "RaggedTraceArrays"],
                       dests: DeviceArrays) -> np.ndarray:
     """Vectorized Paleo-style roofline estimate, shape (n_ops, n_dev)."""
     eff_c = np.where(arrays.kernel_varying, _EFF_COMPUTE[1], _EFF_COMPUTE[0])
@@ -50,7 +63,8 @@ def analytical_ms_vec(arrays: TraceArrays,
     return np.maximum(flops_t, mem_t) * 1e3
 
 
-def mlp_features_grid(arrays: TraceArrays, idx: np.ndarray,
+def mlp_features_grid(arrays: Union[TraceArrays, "RaggedTraceArrays"],
+                      idx: np.ndarray,
                       dests: DeviceArrays) -> np.ndarray:
     """MLP query features for ops ``idx`` x all devices, device-major rows.
 
@@ -92,6 +106,25 @@ class FleetPrediction:
         return {k: float(t) for k, t in zip(self.arrays.kinds, totals)}
 
 
+def _mlp_scores_per_kind(arrays, da: DeviceArrays, mlps: Dict,
+                         out: np.ndarray) -> None:
+    """Kernel-varying MLP rows: one jitted forward per kind, covering every
+    destination device in the same batch.  Shared by the single-trace and
+    ragged paths: the feature rows are identical, so pure-NumPy MLPs agree
+    bitwise; real jitted forwards agree to float32 tolerance (the ragged
+    batch pads to a different shape)."""
+    for kid, kind in enumerate(arrays.kinds):
+        if kind not in mlps:
+            continue
+        idx = np.flatnonzero(arrays.kernel_varying
+                             & (arrays.kind_ids == kid))
+        if not len(idx):
+            continue
+        feats = mlp_features_grid(arrays, idx, da)
+        preds = mlps[kind].predict_ms(feats).reshape(len(idx), da.n)
+        out[idx] = preds
+
+
 def predict_trace_batch(trace: TrackedTrace,
                         dests: Union[DeviceArrays, Sequence[str],
                                      Sequence[DeviceSpec]],
@@ -125,19 +158,337 @@ def predict_trace_batch(trace: TrackedTrace,
     if no_mlp.any():
         out[no_mlp] = analytical_ms_vec(arrays, da)[no_mlp]
 
-    # kernel-varying with an MLP: one fused inference per kind, covering
-    # every destination device in the same batch
-    for kid, kind in enumerate(arrays.kinds):
-        if kind not in mlps:
-            continue
-        idx = np.flatnonzero(arrays.kernel_varying
-                             & (arrays.kind_ids == kid))
-        if not len(idx):
-            continue
-        feats = mlp_features_grid(arrays, idx, da)
-        preds = mlps[kind].predict_ms(feats).reshape(len(idx), da.n)
-        out[idx] = preds
+    _mlp_scores_per_kind(arrays, da, mlps, out)
 
     return FleetPrediction(origin_device=trace.origin_device,
                            dests=list(da.names), op_ms=out, arrays=arrays,
                            label=trace.label)
+
+
+# ---------------------------------------------------------------------------
+# Multi-trace ragged grid: several traces x many devices in one pass.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class RaggedTraceArrays:
+    """Several traces stacked into one structure-of-arrays.
+
+    Rows ``offsets[i]:offsets[i+1]`` belong to trace ``i``; ``kind_ids``
+    index into the *unified* ``kinds`` list (union over all traces), so one
+    per-kind MLP batch can span every trace at once.  Per-trace metadata
+    (origin device, label, content fingerprint) rides along for the serve
+    layer's per-trace result caching."""
+    offsets: np.ndarray          # (n_traces + 1,) int64 segment boundaries
+    trace_ids: np.ndarray        # (total_ops,) int32 row -> trace index
+    origins: List[str]           # (n_traces,) origin device names
+    labels: List[str]            # (n_traces,)
+    fingerprints: List[str]      # (n_traces,) TrackedTrace.fingerprint()
+    flops: np.ndarray            # (total_ops,)
+    bytes_accessed: np.ndarray   # (total_ops,)
+    intensity: np.ndarray        # (total_ops,)
+    measured_ms: np.ndarray      # (total_ops,) NaN where unmeasured
+    multiplicity: np.ndarray     # (total_ops,)
+    kernel_varying: np.ndarray   # (total_ops,) bool
+    kind_ids: np.ndarray         # (total_ops,) int32 into ``kinds``
+    kinds: List[str]             # unified kinds, sorted
+    op_features: np.ndarray      # (total_ops, 9) raw MLP op features
+    _alike_origin: Optional[devices.OriginArrays] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def n_traces(self) -> int:
+        return len(self.origins)
+
+    @property
+    def n_ops(self) -> int:
+        return int(self.flops.shape[0])
+
+    def segment(self, i: int) -> TraceArrays:
+        """Trace ``i``'s rows as a plain :class:`TraceArrays` view."""
+        s, e = int(self.offsets[i]), int(self.offsets[i + 1])
+        return TraceArrays(
+            flops=self.flops[s:e], bytes_accessed=self.bytes_accessed[s:e],
+            intensity=self.intensity[s:e],
+            measured_ms=self.measured_ms[s:e],
+            multiplicity=self.multiplicity[s:e],
+            kernel_varying=self.kernel_varying[s:e],
+            kind_ids=self.kind_ids[s:e], kinds=self.kinds,
+            op_features=self.op_features[s:e])
+
+    def origin_arrays(self) -> devices.OriginArrays:
+        """Per-op origin-device arrays for segment-aware wave scaling."""
+        specs = [devices.get(o) for o in self.origins]
+        return devices.repeat_origins(specs, np.diff(self.offsets))
+
+    def alike_origin_arrays(self) -> devices.OriginArrays:
+        """Origin arrays masked to the kernel-alike rows.
+
+        Cached on the stack: the mask is a pure function of the (immutable)
+        stacked arrays, and rebuilding it dominated the fixed per-sweep
+        cost for small trace stacks."""
+        if self._alike_origin is None:
+            self._alike_origin = \
+                self.origin_arrays().take(~self.kernel_varying)
+        return self._alike_origin
+
+
+def stack_traces(traces: Union["RaggedTraceArrays",
+                               Sequence[TrackedTrace]]
+                 ) -> RaggedTraceArrays:
+    """Stack several :class:`TrackedTrace` into one ragged SoA.
+
+    Idempotent (a ready :class:`RaggedTraceArrays` passes through), so hot
+    callers can stack once and sweep many times."""
+    if isinstance(traces, RaggedTraceArrays):
+        return traces
+    traces = list(traces)
+    if not traces:
+        raise ValueError("stack_traces needs at least one trace")
+    per = [t.to_arrays() for t in traces]
+    for t, p in zip(traces, per):
+        if p.n_ops == 0:
+            raise ValueError(f"trace {t.label!r} has no ops")
+    kinds = sorted(set().union(*(p.kinds for p in per)))
+    kmap = {k: i for i, k in enumerate(kinds)}
+    lengths = np.asarray([p.n_ops for p in per], np.int64)
+    offsets = np.zeros(len(per) + 1, np.int64)
+    np.cumsum(lengths, out=offsets[1:])
+    cat = lambda field: np.concatenate([getattr(p, field) for p in per])
+    kind_ids = np.concatenate([
+        np.asarray([kmap[k] for k in p.kinds], np.int32)[p.kind_ids]
+        for p in per])
+    return RaggedTraceArrays(
+        offsets=offsets,
+        trace_ids=np.repeat(np.arange(len(per), dtype=np.int32), lengths),
+        origins=[t.origin_device for t in traces],
+        labels=[t.label for t in traces],
+        fingerprints=[t.fingerprint() for t in traces],
+        flops=cat("flops"), bytes_accessed=cat("bytes_accessed"),
+        intensity=cat("intensity"), measured_ms=cat("measured_ms"),
+        multiplicity=cat("multiplicity"),
+        kernel_varying=cat("kernel_varying"),
+        kind_ids=kind_ids, kinds=kinds, op_features=cat("op_features"))
+
+
+@dataclasses.dataclass
+class SweepPrediction:
+    """The (n_traces x n_devices) what-if grid of one ragged sweep."""
+    dests: List[str]
+    op_ms: np.ndarray            # (total_ops, n_dev)
+    arrays: RaggedTraceArrays
+    _totals: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def n_traces(self) -> int:
+        return self.arrays.n_traces
+
+    @property
+    def labels(self) -> List[str]:
+        return self.arrays.labels
+
+    @property
+    def total_ms(self) -> np.ndarray:
+        """Iteration time grid, shape (n_traces, n_dev).
+
+        Summed per segment with the same ``.sum(axis=0)`` reduction the
+        single-trace ``FleetPrediction.total_ms`` uses, so row i is
+        bit-identical to predicting trace i alone (``np.add.reduceat``
+        would associate differently).  Memoized: cell-by-cell readers
+        (``time_for``) must not re-reduce the grid per access."""
+        if self._totals is None:
+            off = self.arrays.offsets
+            weighted = self.op_ms * self.arrays.multiplicity[:, None]
+            self._totals = np.stack(
+                [weighted[off[i]:off[i + 1]].sum(axis=0)
+                 for i in range(self.n_traces)])
+        return self._totals
+
+    def row(self, i: int) -> FleetPrediction:
+        """Trace ``i``'s slice as a full :class:`FleetPrediction`."""
+        s, e = int(self.arrays.offsets[i]), int(self.arrays.offsets[i + 1])
+        return FleetPrediction(origin_device=self.arrays.origins[i],
+                               dests=list(self.dests),
+                               op_ms=self.op_ms[s:e],
+                               arrays=self.arrays.segment(i),
+                               label=self.arrays.labels[i])
+
+    def time_for(self, i: int, dest: str) -> float:
+        return float(self.total_ms[i, self.dests.index(dest)])
+
+    def as_dicts(self) -> List[Dict[str, float]]:
+        totals = self.total_ms
+        return [dict(zip(self.dests, totals[i].tolist()))
+                for i in range(self.n_traces)]
+
+
+class FusedMLPScorer:
+    """Packs all op-kind MLPs for the one-launch Pallas scorer.
+
+    The per-kind jitted forwards pay one dispatch per kind per sweep; this
+    scorer groups all kernel-varying feature rows by kind, pads each group
+    to whole ``block_m`` row blocks, and evaluates everything in a single
+    ``kernels.ops.fused_mlp_score`` call (compiled Pallas on TPU,
+    interpret-mode or the jnp oracle on CPU).
+
+    Requires every packed MLP to share one architecture — true for
+    ``train_mlps`` output, which trains all four kinds with one config.
+    """
+
+    def __init__(self, mlps: Dict, block_m: int = 128, impl: str = "auto"):
+        from repro.kernels import ops as kernel_ops
+        import jax.numpy as jnp
+        if not mlps:
+            raise ValueError("FusedMLPScorer needs at least one MLP")
+        self.kinds = sorted(mlps)
+        arches = {(m.cfg.hidden_layers, m.cfg.hidden_size,
+                   m.params[0][0].shape[0]) for m in mlps.values()}
+        if len(arches) != 1:
+            raise ValueError(
+                f"fused scorer needs architecture-uniform MLPs, got "
+                f"{sorted(arches)}")
+        _, self.hidden, self.in_features = arches.pop()
+        ws, bs = [], []
+        for kind in self.kinds:
+            w, b = kernel_ops.pack_mlp_params(
+                mlps[kind].params, self.in_features, self.hidden)
+            ws.append(w)
+            bs.append(b)
+        self.weights = jnp.stack(ws)          # (K, L, H, H)
+        self.biases = jnp.stack(bs)           # (K, L, H)
+        self.mlps = dict(mlps)                # normalization + output contract
+        self.block_m = block_m
+        self.impl = impl
+
+    def score_ms(self, feats_by_kind: Dict[str, np.ndarray]
+                 ) -> Dict[str, np.ndarray]:
+        """Raw feature rows per kind -> predicted ms per kind, one launch."""
+        from repro.kernels import ops as kernel_ops
+        import jax.numpy as jnp
+        bm = self.block_m
+        blocks, kind_of_block, counts = [], [], []
+        for kind, feats in feats_by_kind.items():
+            x = self.mlps[kind].normalize(feats)
+            n = x.shape[0]
+            nb = -(-n // bm)
+            xp = np.zeros((nb * bm, self.hidden), np.float32)
+            xp[:n, :x.shape[1]] = x
+            blocks.append(xp)
+            kind_of_block.extend([self.kinds.index(kind)] * nb)
+            counts.append(n)
+        log_ms = np.asarray(kernel_ops.fused_mlp_score(
+            jnp.asarray(np.concatenate(blocks)),
+            jnp.asarray(np.asarray(kind_of_block, np.int32)),
+            self.weights, self.biases, block_m=bm, impl=self.impl))
+        out, offset = {}, 0
+        for kind, n in zip(feats_by_kind, counts):
+            out[kind] = self.mlps[kind].ms_from_log(
+                log_ms[offset:offset + n])
+            offset += (-(-n // bm)) * bm
+        return out
+
+
+def _resolve_scorer(scorer, mlps: Dict):
+    """Map a ``predict_sweep`` scorer spelling to a usable instance.
+
+    ``None``/"off" -> per-kind jitted forwards; "auto" -> fused Pallas
+    only on a TPU backend (CPU keeps strict parity with
+    ``predict_fleet``), silently falling back when the MLP set is not
+    architecture-uniform; an impl name ("pallas" | "interpret" | "jnp")
+    forces the fused path (and raises on non-uniform MLPs); a ready
+    :class:`FusedMLPScorer` is used as-is.  The single policy shared by
+    ``predict_sweep`` and ``HabitatPredictor`` (which only adds caching).
+    """
+    if scorer is None or scorer == "off" or not mlps:
+        return None
+    if isinstance(scorer, FusedMLPScorer):
+        return scorer
+    if scorer == "auto":
+        import jax
+        if jax.default_backend() != "tpu":
+            return None
+        try:
+            return FusedMLPScorer(mlps, impl="pallas")
+        except (ValueError, AttributeError):
+            # mixed architectures, or duck-typed MLPs exposing only
+            # predict_ms: best-effort falls back to per-kind forwards
+            return None
+    if scorer in ("pallas", "interpret", "jnp"):
+        return FusedMLPScorer(mlps, impl=scorer)
+    raise ValueError(f"unknown scorer spelling {scorer!r}")
+
+
+def predict_sweep(traces: Union[RaggedTraceArrays, Sequence[TrackedTrace]],
+                  dests: Union[DeviceArrays, Sequence[str],
+                               Sequence[DeviceSpec]],
+                  mlps: Optional[Dict] = None,
+                  exact: bool = False,
+                  model_overhead: bool = False,
+                  scorer=None) -> SweepPrediction:
+    """Predict every trace on every destination in one ragged pass.
+
+    Row i of the result reproduces :func:`predict_trace_batch` on trace i
+    alone.  Wave scaling broadcasts per-op origin arrays through the same
+    IEEE expression and the analytical fallback is the same element-wise
+    grid function, so those rows agree BITWISE.  Trained-MLP rows go
+    through the same per-kind batched forwards (when no fused ``scorer``
+    is active) but batch all traces' ops together, so their jitted
+    float32 batches pad to different shapes than the per-trace spelling —
+    equal to ~1e-6 relative, not bit-for-bit.
+    """
+    ragged = stack_traces(traces)
+    da = devices.as_arrays(dests)
+    mlps = mlps or {}
+    out = np.empty((ragged.n_ops, da.n), np.float64)
+
+    # kernel-alike: segment-aware wave scaling over the whole ragged grid
+    alike = ~ragged.kernel_varying
+    if alike.any():
+        t_o = ragged.measured_ms[alike]
+        if np.isnan(t_o).any():
+            bad = int(np.flatnonzero(alike)[np.isnan(t_o).argmax()])
+            tid = int(ragged.trace_ids[bad])
+            raise ValueError(
+                f"trace {ragged.labels[tid]!r} op row "
+                f"{bad - int(ragged.offsets[tid])} has no origin "
+                f"measurement")
+        sub = SimpleNamespace(intensity=ragged.intensity[alike],
+                              bytes_accessed=ragged.bytes_accessed[alike])
+        out[alike] = wave_scaling.scale_times_vec(
+            t_o, sub, ragged.alike_origin_arrays(), da, exact=exact,
+            model_overhead=model_overhead)
+
+    # kernel-varying without an MLP: vectorized analytical fallback,
+    # computed on the masked rows only (the formula is element-wise, so
+    # this matches predict_trace_batch's full-grid-then-mask bitwise)
+    kind_has_mlp = np.asarray([k in mlps for k in ragged.kinds], bool)
+    no_mlp = ragged.kernel_varying & ~kind_has_mlp[ragged.kind_ids]
+    if no_mlp.any():
+        sub = SimpleNamespace(
+            kernel_varying=ragged.kernel_varying[no_mlp],
+            flops=ragged.flops[no_mlp],
+            bytes_accessed=ragged.bytes_accessed[no_mlp])
+        out[no_mlp] = analytical_ms_vec(sub, da)
+
+    # kernel-varying with an MLP: fused one-launch scorer when available,
+    # otherwise the same per-kind batched forwards as predict_trace_batch
+    fused = _resolve_scorer(scorer, mlps)
+    if fused is not None:
+        feats_by_kind: Dict[str, np.ndarray] = {}
+        idx_by_kind: Dict[str, np.ndarray] = {}
+        for kid, kind in enumerate(ragged.kinds):
+            if kind not in mlps:
+                continue
+            idx = np.flatnonzero(ragged.kernel_varying
+                                 & (ragged.kind_ids == kid))
+            if not len(idx):
+                continue
+            idx_by_kind[kind] = idx
+            feats_by_kind[kind] = mlp_features_grid(ragged, idx, da)
+        if feats_by_kind:
+            scored = fused.score_ms(feats_by_kind)
+            for kind, idx in idx_by_kind.items():
+                out[idx] = scored[kind].reshape(len(idx), da.n)
+    else:
+        _mlp_scores_per_kind(ragged, da, mlps, out)
+
+    return SweepPrediction(dests=list(da.names), op_ms=out, arrays=ragged)

@@ -116,6 +116,45 @@ class DeviceArrays:
         return len(self.names)
 
 
+@dataclasses.dataclass(frozen=True)
+class OriginArrays:
+    """Per-op origin-device arrays for the ragged multi-trace engine.
+
+    A ragged stack mixes traces measured on *different* origin devices, so
+    the origin side of wave scaling becomes per-op arrays instead of one
+    ``DeviceSpec``.  ``scale_times_vec`` accepts either; element [i, j] of
+    its output is unchanged — only the broadcasting shape of the origin
+    terms differs."""
+    kinds: List[str]                  # per-op origin kind (overhead lookup)
+    mem_bandwidth: np.ndarray         # (n_ops,)
+    clock_hz: np.ndarray              # (n_ops,)
+    wave_size: np.ndarray             # (n_ops,)
+
+    def take(self, idx: np.ndarray) -> "OriginArrays":
+        """Row subset (e.g. the kernel-alike ops of a ragged stack)."""
+        kinds = np.asarray(self.kinds, object)[idx].tolist()
+        return OriginArrays(kinds=kinds,
+                            mem_bandwidth=self.mem_bandwidth[idx],
+                            clock_hz=self.clock_hz[idx],
+                            wave_size=self.wave_size[idx])
+
+
+def repeat_origins(specs: Sequence[DeviceSpec],
+                   counts: Sequence[int]) -> OriginArrays:
+    """Expand per-trace origin specs into per-op arrays (``counts[i]`` ops
+    belong to the trace measured on ``specs[i]``)."""
+    counts = np.asarray(counts, np.int64)
+    kinds: List[str] = []
+    for s, c in zip(specs, counts):
+        kinds.extend([s.kind] * int(c))
+    rep = lambda vals: np.repeat(np.asarray(vals, np.float64), counts)
+    return OriginArrays(
+        kinds=kinds,
+        mem_bandwidth=rep([s.mem_bandwidth for s in specs]),
+        clock_hz=rep([s.clock_hz for s in specs]),
+        wave_size=rep([float(s.wave_size) for s in specs]))
+
+
 def spec_arrays(specs: Sequence[DeviceSpec]) -> DeviceArrays:
     """Stack device specs into the SoA layout the batched engine consumes."""
     return DeviceArrays(

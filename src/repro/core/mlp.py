@@ -98,8 +98,22 @@ class TrainedMLP:
     test_mape: float = float("nan")
     uid: int = dataclasses.field(default_factory=lambda: next(_UID))
 
+    def normalize(self, features: np.ndarray) -> np.ndarray:
+        """Standardize raw feature rows with this model's train-set stats.
+
+        Shared by the per-kind inference path and the fused multi-kind
+        scorer (``core.batched.FusedMLPScorer``) so the two cannot drift."""
+        return ((np.atleast_2d(features) - self.feature_mean)
+                / self.feature_std)
+
+    @staticmethod
+    def ms_from_log(log_ms: np.ndarray) -> np.ndarray:
+        """Map the network's log(ms) output to clamped milliseconds —
+        the one output contract for every inference path."""
+        return np.maximum(np.exp(log_ms), 1e-6)
+
     def predict_ms(self, features: np.ndarray) -> np.ndarray:
-        x = (np.atleast_2d(features) - self.feature_mean) / self.feature_std
+        x = self.normalize(features)
         # bucket the batch size so the jitted forward compiles a bounded
         # set of shapes, not one per distinct trace: powers of two up to
         # 512, multiples of 512 beyond (keeps padding waste under ~20%
@@ -114,7 +128,7 @@ class TrainedMLP:
                 [x, np.zeros((padded - n, x.shape[1]), x.dtype)])
         out = np.asarray(_forward_jit(self.params,
                                       jnp.asarray(x, jnp.float32)))[:n]
-        return np.maximum(np.exp(out), 1e-6)
+        return self.ms_from_log(out)
 
     def save(self, path: Path) -> None:
         path.parent.mkdir(parents=True, exist_ok=True)

@@ -54,15 +54,53 @@ class _FleetTraceMixin:
         return TrackedTrace(ops=new_ops, origin_device=dest,
                             label=trace.label)
 
+    def predict_sweep(self, traces: Sequence[TrackedTrace],
+                      dests: Optional[Sequence[str]] = None
+                      ) -> batched.SweepPrediction:
+        """Generic multi-trace sweep: one ``predict_fleet`` grid per trace.
+
+        Baseline predictors get the sweep API for free through this loop;
+        ``HabitatPredictor`` overrides it with the one-pass ragged engine.
+        Requires real ``TrackedTrace`` objects (not a prebuilt stack)."""
+        if isinstance(traces, batched.RaggedTraceArrays):
+            raise TypeError(
+                f"{type(self).__name__}.predict_sweep needs TrackedTrace "
+                f"objects; only HabitatPredictor accepts a prebuilt "
+                f"RaggedTraceArrays")
+        traces = list(traces)
+        if dests is None:
+            dests = sorted(devices.all_devices())
+        ragged = batched.stack_traces(traces)
+        fleets = [self.predict_fleet(t, dests) for t in traces]
+        return batched.SweepPrediction(
+            dests=list(fleets[0].dests),
+            op_ms=np.concatenate([f.op_ms for f in fleets]),
+            arrays=ragged)
+
+    def sweep_config_key(self) -> tuple:
+        """Cache-key identity of sweep() results.
+
+        The generic sweep IS predict_fleet per trace, so the identities
+        coincide; predictors whose sweep path can produce (tolerably)
+        different numbers override this so the two kinds of cache entries
+        never alias."""
+        return self.config_key()
+
 
 class HabitatPredictor(_FleetTraceMixin):
     """Scale a measured trace from its origin device to a destination."""
 
     def __init__(self, mlps: Optional[Dict[str, mlp.TrainedMLP]] = None,
-                 exact_wave: bool = False, model_overhead: bool = False):
+                 exact_wave: bool = False, model_overhead: bool = False,
+                 sweep_scorer: str = "auto"):
         self.mlps = mlps or {}
         self.exact_wave = exact_wave
         self.model_overhead = model_overhead
+        #: MLP scorer for multi-trace sweeps: "auto" (fused Pallas on TPU,
+        #: per-kind jitted forwards on CPU), "off", or a forced fused impl
+        #: ("pallas" | "interpret" | "jnp").
+        self.sweep_scorer = sweep_scorer
+        self._scorer_cache: Dict = {}
 
     # -- per-op ------------------------------------------------------------
     def predict_op_ms(self, op: Op, origin: DeviceSpec,
@@ -85,6 +123,7 @@ class HabitatPredictor(_FleetTraceMixin):
         Used by result caches (``serve/fleet.py``): two predictors with the
         same key produce the same predictions within this process."""
         return (type(self).__name__, self.exact_wave, self.model_overhead,
+                self.sweep_scorer,
                 tuple(sorted((k, m.uid) for k, m in self.mlps.items())))
 
     # -- whole fleet -------------------------------------------------------
@@ -97,6 +136,54 @@ class HabitatPredictor(_FleetTraceMixin):
         return batched.predict_trace_batch(
             trace, dests, mlps=self.mlps, exact=self.exact_wave,
             model_overhead=self.model_overhead)
+
+    # -- multi-trace ragged sweep ------------------------------------------
+    def _fused_scorer(self, spelling):
+        """Resolve (and cache) the fused scorer for a sweep call.
+
+        Policy lives in :func:`batched._resolve_scorer` (one source of
+        truth); this wrapper only memoizes the built scorer, since
+        packing the (K, L, H, H) weight stack costs real array work and
+        is reusable until the MLP set or the requested impl changes."""
+        if isinstance(spelling, batched.FusedMLPScorer):
+            return spelling
+        key = (spelling, tuple(sorted((k, m.uid)
+                                      for k, m in self.mlps.items())))
+        if self._scorer_cache.get("key") != key:
+            scorer = batched._resolve_scorer(spelling, self.mlps)
+            self._scorer_cache = {"key": key, "scorer": scorer or "off"}
+        return self._scorer_cache["scorer"]
+
+    def predict_sweep(self, traces, dests: Optional[Sequence[str]] = None,
+                      scorer=None) -> batched.SweepPrediction:
+        """One ragged pass: every trace x every destination device.
+
+        ``traces`` is a sequence of ``TrackedTrace`` or a prebuilt
+        :class:`~repro.core.batched.RaggedTraceArrays`; ``scorer`` defaults
+        to the predictor's ``sweep_scorer`` policy."""
+        if dests is None:
+            dests = sorted(devices.all_devices())
+        spelling = self.sweep_scorer if scorer is None else scorer
+        return batched.predict_sweep(
+            traces, dests, mlps=self.mlps, exact=self.exact_wave,
+            model_overhead=self.model_overhead,
+            scorer=self._fused_scorer(spelling))
+
+    def sweep_config_key(self) -> tuple:
+        """Cache-key identity of sweep() results.
+
+        Without MLPs the ragged sweep reproduces ``predict_fleet``
+        bitwise, so the identities coincide and sweep/predict caches
+        interoperate.  With trained MLPs, sweep prices MLP rows in
+        co-batched (and possibly fused-scorer) forwards whose float32
+        results are only ~1e-6-close to the per-trace spelling — those
+        cells get their own tag so they never alias predict()-minted
+        entries under one key.  (``config_key()`` already embeds the
+        ``sweep_scorer`` spelling, so two differently-configured
+        predictors cannot collide either.)"""
+        if not self.mlps:
+            return self.config_key()
+        return self.config_key() + ("sweep",)
 
     # -- whole trace: predict_trace comes from _FleetTraceMixin ------------
     def predict_trace_scalar(self, trace: TrackedTrace,

@@ -57,6 +57,38 @@ class Op:
     def kernel_varying(self) -> bool:
         return self.kind in KERNEL_VARYING_KINDS
 
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-safe record (golden-trace files, cross-process shipping)."""
+        return {
+            "name": self.name, "kind": self.kind,
+            "cost": {"flops": self.cost.flops,
+                     "bytes_read": self.cost.bytes_read,
+                     "bytes_written": self.cost.bytes_written},
+            "multiplicity": int(self.multiplicity),
+            "params": {str(k): _json_safe(v)
+                       for k, v in self.params.items()},
+            "in_shapes": [list(s) for s in self.in_shapes],
+            "out_shapes": [list(s) for s in self.out_shapes],
+            "dtype": self.dtype,
+            "measured_ms": self.measured_ms,
+            "predicted_ms": self.predicted_ms,
+        }
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "Op":
+        return Op(
+            name=d["name"], kind=d["kind"],
+            cost=OpCost(flops=float(d["cost"]["flops"]),
+                        bytes_read=float(d["cost"]["bytes_read"]),
+                        bytes_written=float(d["cost"]["bytes_written"])),
+            multiplicity=int(d["multiplicity"]),
+            params=dict(d["params"]),
+            in_shapes=tuple(tuple(s) for s in d["in_shapes"]),
+            out_shapes=tuple(tuple(s) for s in d["out_shapes"]),
+            dtype=d["dtype"],
+            measured_ms=d["measured_ms"],
+            predicted_ms=d["predicted_ms"])
+
     def feature_vector(self) -> List[float]:
         """Kind-specific op features for the MLP predictors (Sec. 3.4).
 
@@ -84,6 +116,19 @@ class Op:
             f = [self.cost.intensity, 0, 0, 0, 0, 0, 0]
         f = f + [self.cost.flops, self.cost.bytes_accessed]
         return [float(x) for x in f]
+
+
+def _json_safe(v: Any) -> Any:
+    """Coerce an op-params value into something ``json.dump`` accepts."""
+    if isinstance(v, (bool, str)) or v is None:
+        return v
+    if isinstance(v, (int, np.integer)):
+        return int(v)
+    if isinstance(v, (float, np.floating)):
+        return float(v)
+    if isinstance(v, (tuple, list)):
+        return [_json_safe(x) for x in v]
+    return str(v)
 
 
 def _classify_dot(eqn, cost_params) -> Tuple[str, Dict[str, Any]]:
@@ -313,6 +358,27 @@ class TrackedTrace:
         h = hashlib.sha1(self.to_arrays().fingerprint().encode())
         h.update(self.origin_device.encode())
         return h.hexdigest()
+
+    # ---- serialization ---------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-safe record: the golden-trace on-disk format."""
+        return {"origin_device": self.origin_device, "label": self.label,
+                "ops": [op.to_dict() for op in self.ops]}
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "TrackedTrace":
+        return TrackedTrace(ops=[Op.from_dict(o) for o in d["ops"]],
+                            origin_device=d["origin_device"],
+                            label=d.get("label", "iteration"))
+
+    def to_json(self) -> str:
+        import json
+        return json.dumps(self.to_dict(), indent=1)
+
+    @staticmethod
+    def from_json(text: str) -> "TrackedTrace":
+        import json
+        return TrackedTrace.from_dict(json.loads(text))
 
     def measure(self, method: str = "simulate") -> "TrackedTrace":
         """Fill ``measured_ms`` for every op on the origin device."""

@@ -117,7 +117,8 @@ def num_tiles_vec(bytes_accessed: np.ndarray) -> np.ndarray:
 
 
 def scale_times_vec(t_o_ms: np.ndarray, ops_arrays,
-                    origin: DeviceSpec,
+                    origin: Union[DeviceSpec,
+                                  "devices_mod.OriginArrays"],
                     dests: Union[DeviceArrays, Sequence[DeviceSpec]],
                     exact: bool = False,
                     gamma_override: Optional[float] = None,
@@ -127,30 +128,47 @@ def scale_times_vec(t_o_ms: np.ndarray, ops_arrays,
     ``ops_arrays`` is a structure of arrays exposing ``intensity`` and
     ``bytes_accessed`` (``TrackedTrace.to_arrays()`` produces one); element
     [i, j] equals ``scale_time(t_o_ms[i], ops[i], origin, dests[j], ...)``.
+
+    ``origin`` is segment-aware: a single :class:`DeviceSpec` (every op was
+    measured on the same device) or an :class:`~repro.core.devices.
+    OriginArrays` with one row per op (ragged multi-trace stacks, where
+    origins differ per trace).  The origin terms broadcast as (1, n_dev) or
+    (n_ops, n_dev); each grid element is computed by the exact same IEEE
+    operation sequence either way, so the two spellings agree bitwise.
     """
     da = devices_mod.as_arrays(dests)
     t = np.atleast_1d(np.asarray(t_o_ms, np.float64))
+    per_op_origin = not isinstance(origin, DeviceSpec)
     if gamma_override is None:
         g = gamma_vec(ops_arrays.intensity, da.ridge_point)
     else:
         g = np.full((len(t), da.n), float(gamma_override))
-    d_ratio = origin.mem_bandwidth / da.mem_bandwidth          # (n_dev,)
-    c_ratio = origin.clock_hz / da.clock_hz                    # (n_dev,)
-    w_o, w_d = float(origin.wave_size), da.wave_size
+    # origin-side columns: (1, 1) for a single spec, (n_ops, 1) per-op
+    o_bw = np.atleast_1d(np.asarray(origin.mem_bandwidth,
+                                    np.float64))[:, None]
+    o_ck = np.atleast_1d(np.asarray(origin.clock_hz, np.float64))[:, None]
+    o_w = np.atleast_1d(np.asarray(origin.wave_size, np.float64))[:, None]
+    d_ratio = o_bw / da.mem_bandwidth[None, :]
+    c_ratio = o_ck / da.clock_hz[None, :]
+    w_d = da.wave_size
     if exact:
         b = num_tiles_vec(ops_arrays.bytes_accessed)           # (n_ops,)
         waves_d = np.ceil(b[:, None] / w_d[None, :])
-        waves_o = np.ceil(b / w_o)[:, None]
+        waves_o = np.ceil(b[:, None] / o_w)
         factor = (waves_d
-                  * (d_ratio[None, :] * (w_d / w_o)[None, :]) ** g
-                  * c_ratio[None, :] ** (1.0 - g)
+                  * (d_ratio * (w_d[None, :] / o_w)) ** g
+                  * c_ratio ** (1.0 - g)
                   / waves_o)
     else:
-        factor = (d_ratio[None, :] ** g
-                  * (w_o / w_d)[None, :] ** (1.0 - g)
-                  * c_ratio[None, :] ** (1.0 - g))
+        factor = (d_ratio ** g
+                  * (o_w / w_d[None, :]) ** (1.0 - g)
+                  * c_ratio ** (1.0 - g))
     if model_overhead:
-        oh_o = DISPATCH_OVERHEAD_MS[origin.kind]
+        if per_op_origin:
+            oh_o = np.asarray([DISPATCH_OVERHEAD_MS[k]
+                               for k in origin.kinds], np.float64)
+        else:
+            oh_o = DISPATCH_OVERHEAD_MS[origin.kind]
         oh_d = np.asarray([DISPATCH_OVERHEAD_MS[k] for k in da.kinds],
                           np.float64)
         return (np.maximum(t - oh_o, 0.0)[:, None] * factor + oh_d[None, :])

@@ -11,3 +11,17 @@ from jax.experimental.pallas import tpu as _pltpu
 
 CompilerParams = getattr(_pltpu, "CompilerParams", None) \
     or _pltpu.TPUCompilerParams
+
+# Scalar-prefetch grid specs (the fused MLP scorer's block->kind map) have
+# kept one name so far; resolved lazily so a future rename only breaks the
+# one kernel that needs the symbol, not every `repro.kernels` import.
+_PREFETCH_GRID_SPEC = getattr(_pltpu, "PrefetchScalarGridSpec", None)
+
+
+def PrefetchScalarGridSpec(*args, **kwargs):
+    if _PREFETCH_GRID_SPEC is None:  # pragma: no cover - future JAX only
+        raise ImportError(
+            "jax.experimental.pallas.tpu no longer exposes "
+            "PrefetchScalarGridSpec; update repro.kernels.compat with "
+            "the renamed API")
+    return _PREFETCH_GRID_SPEC(*args, **kwargs)

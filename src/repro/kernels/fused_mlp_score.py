@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: one fused launch scoring ALL op-kind MLPs.
+
+The fleet engine (``core/batched.py``) prices kernel-varying ops with one
+pre-trained MLP per op kind (conv2d / linear / bmm / recurrent).  The
+single-trace path issues one jitted forward per kind — four launches per
+prediction, each a chain of small matmuls.  The ragged multi-trace sweep
+replaces them with ONE launch over the whole device-major feature grid:
+rows are grouped by op kind and padded to whole batch blocks, and a
+scalar-prefetched block->kind map selects which MLP's weight stack each
+block flows through.
+
+Layout mirrors ``fused_mlp.py`` but adds a leading kind axis:
+
+  weights (K, L, H, H), biases (K, L, H)   -- all kinds' layers, padded to
+                                              one uniform hidden size H
+  x       (B, H)                           -- B = n_blocks * block_m rows
+  block_kinds (n_blocks,) int32            -- scalar prefetch: kind of the
+                                              MLP scoring each row block
+
+  grid = (batch_blocks, layers)            -- layers innermost, sequential
+  scratch h: (bm, H) VMEM, initialized from x at l == 0, ReLU between
+  layers, written to out at l == L-1; the prediction is column 0.
+
+The weight BlockSpec index map reads ``block_kinds[bi]`` — consecutive
+blocks with the same kind reuse the resident weight block, so sorting rows
+by kind (the engine always does) keeps weight traffic at one (L, H, H)
+stream per distinct kind, not per block.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
+
+
+def _score_kernel(kinds_ref, x_ref, w_ref, b_ref, o_ref, h_ref):
+    del kinds_ref  # consumed by the BlockSpec index maps
+    li = pl.program_id(1)
+    nl = pl.num_programs(1)
+
+    def init():
+        h_ref[...] = x_ref[0].astype(jnp.float32)
+
+    jax.lax.cond(li == 0, init, lambda: None)
+
+    w = w_ref[0, 0].astype(jnp.float32)              # (H, H)
+    b = b_ref[0, 0].astype(jnp.float32)              # (1, H)
+    z = jax.lax.dot_general(h_ref[...], w, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32) + b
+    h_ref[...] = jnp.where(li == nl - 1, z, jax.nn.relu(z))
+
+    def finalize():
+        o_ref[0] = h_ref[...].astype(o_ref.dtype)
+
+    jax.lax.cond(li == nl - 1, finalize, lambda: None)
+
+
+def fused_mlp_score(x: jnp.ndarray, block_kinds: jnp.ndarray,
+                    weights: jnp.ndarray, biases: jnp.ndarray,
+                    block_m: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """x (B, H); block_kinds (B // block_m,); weights (K, L, H, H);
+    biases (K, L, H) -> (B,) (= column 0 of the last layer).
+
+    ``B`` must already be a whole number of ``block_m`` blocks and every
+    row of block ``i`` must belong to kind ``block_kinds[i]`` — the engine
+    (``core.batched.FusedMLPScorer``) does the grouping and padding."""
+    bsz, hdim = x.shape
+    nb = block_kinds.shape[0]
+    if nb * block_m != bsz:
+        raise ValueError(f"x rows ({bsz}) != blocks x block_m "
+                         f"({nb} x {block_m})")
+    nl = weights.shape[1]
+
+    grid_spec = compat.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb, nl),
+        in_specs=[
+            pl.BlockSpec((1, block_m, hdim),
+                         lambda bi, li, kref: (0, bi, 0)),
+            pl.BlockSpec((1, 1, hdim, hdim),
+                         lambda bi, li, kref: (kref[bi], li, 0, 0)),
+            pl.BlockSpec((1, 1, 1, hdim),
+                         lambda bi, li, kref: (kref[bi], li, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, hdim),
+                               lambda bi, li, kref: (0, bi, 0)),
+        scratch_shapes=[pltpu.VMEM((block_m, hdim), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        _score_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, bsz, hdim), jnp.float32),
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_kinds.astype(jnp.int32), x[None], weights,
+      biases[:, :, None, :])
+    return out[0, :, 0]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused multi-kind MLP scorer."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_mlp_score_ref(x: jnp.ndarray, block_kinds: jnp.ndarray,
+                        weights: jnp.ndarray,
+                        biases: jnp.ndarray) -> jnp.ndarray:
+    """x (B, H); block_kinds (nb,); weights (K, L, H, H); biases (K, L, H)
+    -> (B,).  B must equal nb * block_m for an integer block_m."""
+    bsz, hdim = x.shape
+    nb = block_kinds.shape[0]
+    bm = bsz // nb
+    nl = weights.shape[1]
+    h = x.reshape(nb, bm, hdim).astype(jnp.float32)
+    w = weights[block_kinds].astype(jnp.float32)      # (nb, L, H, H)
+    b = biases[block_kinds].astype(jnp.float32)       # (nb, L, H)
+    for li in range(nl):
+        z = jnp.einsum("nbh,nhk->nbk", h, w[:, li]) + b[:, li, None, :]
+        h = z if li == nl - 1 else jax.nn.relu(z)
+    return h.reshape(bsz, hdim)[:, 0]

@@ -19,6 +19,8 @@ from repro.kernels import flash_attention as fa
 from repro.kernels import flash_attention_ref as fa_ref
 from repro.kernels import fused_mlp as fm
 from repro.kernels import fused_mlp_ref as fm_ref
+from repro.kernels import fused_mlp_score as fms
+from repro.kernels import fused_mlp_score_ref as fms_ref
 from repro.kernels import ssd as ssd_k
 from repro.kernels import ssd_ref
 
@@ -75,3 +77,16 @@ def fused_mlp(x, weights, biases, impl: str = "auto"):
     if impl == "jnp":
         return fm_ref.fused_mlp_ref(x, weights, biases)
     return fm.fused_mlp(x, weights, biases, interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "impl"))
+def fused_mlp_score(x, block_kinds, weights, biases, block_m: int = 128,
+                    impl: str = "auto"):
+    """All-kind MLP scorer: x (B, H) kind-grouped rows; block_kinds
+    (B // block_m,); weights (K,L,H,H); biases (K,L,H) -> (B,)."""
+    impl = _resolve(impl)
+    if impl == "jnp":
+        return fms_ref.fused_mlp_score_ref(x, block_kinds, weights, biases)
+    return fms.fused_mlp_score(x, block_kinds, weights, biases,
+                               block_m=block_m,
+                               interpret=(impl == "interpret"))

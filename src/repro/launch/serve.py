@@ -6,6 +6,13 @@
 ``--fleet`` additionally traces this workload's decode step and answers
 the Habitat fleet query — "which device should serve this model?" — via
 the vectorized ``FleetPlanner`` (ranked by throughput and by samples/$).
+
+``--sweep`` asks the multi-trace what-if question: the decode step is
+traced at every batch size in ``--sweep-batches`` and all traces are
+predicted against the whole fleet in ONE ragged pass
+(``FleetPlanner.sweep``), printing the (n_traces x n_devices) grid and the
+per-trace best device; a repeat query demonstrates the per-trace
+fingerprint cache.
 """
 
 from __future__ import annotations
@@ -36,8 +43,15 @@ def main():
     ap.add_argument("--fleet", action="store_true",
                     help="rank every registered device for this workload")
     ap.add_argument("--fleet-mlps", action="store_true",
-                    help="use the trained-MLP predictor for --fleet "
-                         "(trains/loads artifacts; slower first run)")
+                    help="use the trained-MLP predictor for --fleet/"
+                         "--sweep (trains/loads artifacts; slower first "
+                         "run)")
+    ap.add_argument("--sweep", action="store_true",
+                    help="what-if sweep: decode traced at every "
+                         "--sweep-batches size, predicted on the whole "
+                         "fleet in one ragged pass")
+    ap.add_argument("--sweep-batches", default="1,2,4",
+                    help="comma-separated decode batch sizes for --sweep")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -62,20 +76,26 @@ def main():
     for r in done[:3]:
         print(f"  req {r.uid}: {r.output.tolist()}")
 
-    if args.fleet:
-        from repro.core import HabitatPredictor, OperationTracker
+    planner = None
+    if args.fleet or args.sweep:
+        from repro.core import HabitatPredictor
         from repro.core import default_predictor
+        from repro.serve.fleet import FleetPlanner
+
+        predictor = (default_predictor() if args.fleet_mlps
+                     else HabitatPredictor())
+        planner = FleetPlanner(predictor=predictor)
+
+    if args.fleet:
+        from repro.core import OperationTracker
         from repro.models import transformer as tfm
-        from repro.serve.fleet import FleetPlanner, format_fleet
+        from repro.serve.fleet import format_fleet
 
         tracker = OperationTracker("cpu-host")
         trace = tracker.track(
             lambda p, t, s: tfm.decode_step(p, cfg, t, s),
             params, jnp.asarray(engine.last_token), engine.state,
             label=f"{args.arch}-decode")
-        predictor = (default_predictor() if args.fleet_mlps
-                     else HabitatPredictor())
-        planner = FleetPlanner(predictor=predictor)
         t0 = time.perf_counter()
         ranking = planner.rank(trace, batch_size=args.batch)
         dt = (time.perf_counter() - t0) * 1e3
@@ -88,6 +108,33 @@ def main():
         if rentable:
             print(f"\nbest samples/$: {rentable[0].device} "
                   f"(cache hit rate {planner.stats.hit_rate:.0%})")
+
+    if args.sweep:
+        from repro.core import OperationTracker
+        from repro.models import transformer as tfm
+        from repro.serve.fleet import format_sweep
+
+        batches = [int(b) for b in args.sweep_batches.split(",")]
+        tracker = OperationTracker("cpu-host")
+        traces = []
+        for b in batches:
+            eng = ServingEngine(cfg, params, b, args.max_seq)
+            traces.append(tracker.track(
+                lambda p, t, s: tfm.decode_step(p, cfg, t, s),
+                params, jnp.asarray(eng.last_token), eng.state,
+                label=f"{args.arch}-decode-b{b}"))
+        t0 = time.perf_counter()
+        times = planner.sweep(traces)
+        dt = (time.perf_counter() - t0) * 1e3
+        n_ops = sum(len(t.ops) for t in traces)
+        print(f"\nwhat-if sweep: {len(traces)} traces "
+              f"({n_ops} ops total) x {len(planner.fleet)} devices in "
+              f"{dt:.1f} ms (predicted iteration ms):")
+        print(format_sweep([t.label for t in traces], times))
+        planner.sweep(traces)   # repeat query: served from the LRU
+        print(f"sweep cache: hits={planner.stats.hits} "
+              f"misses={planner.stats.misses} "
+              f"(hit rate {planner.stats.hit_rate:.0%})")
 
 
 if __name__ == "__main__":

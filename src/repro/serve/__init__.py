@@ -1,6 +1,6 @@
 from repro.serve.engine import ServingEngine, Request
 from repro.serve.fleet import (CacheStats, FleetChoice, FleetPlanner,
-                               format_fleet)
+                               format_fleet, format_sweep)
 
 __all__ = ["ServingEngine", "Request", "CacheStats", "FleetChoice",
-           "FleetPlanner", "format_fleet"]
+           "FleetPlanner", "format_fleet", "format_sweep"]

@@ -4,20 +4,30 @@
 (:mod:`repro.core.batched`) behind the serving-shaped question from the
 paper's case studies (Sec. 5.3): given one measured trace, predict the
 iteration time on every registered device and rank the fleet by throughput
-or by cost-normalized throughput.
+or by cost-normalized throughput.  :meth:`FleetPlanner.sweep` scales the
+same question to many traces at once (batch sizes, model variants) through
+the ragged multi-trace engine — one (n_traces x n_devices) grid per query.
 
-Results are memoized per (trace fingerprint, device, predictor config) in
-an LRU cache, so repeated queries — the common serving pattern, where many
-users ask about the same public model — only pay for devices not yet seen
-for that trace.
+Results are memoized per (trace fingerprint, device, predictor config,
+fleet token) in an LRU cache, so repeated queries — the common serving
+pattern, where many users ask about the same public model — only pay for
+devices not yet seen for that trace.  The fleet token hashes the fleet's
+membership *and* the member specs as resolved when the fleet was
+assigned, so swapping ``planner.fleet`` can never serve entries minted
+under the old membership.  (The device registry itself is append-only —
+``register`` refuses duplicates — so specs cannot drift *between*
+assignments within a process.)
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import threading
 from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core import cost as cost_mod
 from repro.core import devices
@@ -60,19 +70,76 @@ class FleetPlanner:
             from repro.core.predictor import HabitatPredictor
             predictor = HabitatPredictor()
         self.predictor = predictor
-        self.fleet = (sorted(devices.all_devices()) if fleet is None
-                      else list(fleet))
-        for name in self.fleet:
-            devices.get(name)   # fail fast on unknown devices
         self.cache_size = cache_size
         self.stats = CacheStats()
         self._cache: "OrderedDict[Tuple, float]" = OrderedDict()
-        self._lock = threading.Lock()
+        self._lock = threading.Lock()   # before the fleet setter needs it
+        self.fleet = (sorted(devices.all_devices()) if fleet is None
+                      else list(fleet))
+
+    # -- fleet -------------------------------------------------------------
+    @property
+    def fleet(self) -> List[str]:
+        return list(self._fleet)
+
+    @fleet.setter
+    def fleet(self, names: Sequence[str]) -> None:
+        """Swap the fleet; cached entries from the old fleet cannot leak.
+
+        The fleet token — part of every cache key — hashes both membership
+        and the member specs as resolved at assignment time, so ``rank()``
+        after a fleet change recomputes instead of serving entries minted
+        under the old membership."""
+        names = list(names)
+        specs = [devices.get(n) for n in names]   # fail fast on unknowns
+        h = hashlib.sha1()
+        for spec in sorted(specs, key=lambda s: s.name):
+            h.update(repr(dataclasses.astuple(spec)).encode())
+        # both fields under the lock: queries read (_fleet, _fleet_token)
+        # inside it and must never observe a torn pair
+        with self._lock:
+            self._fleet = names
+            self._fleet_token = h.hexdigest()[:16]
 
     # -- cache -------------------------------------------------------------
     @staticmethod
-    def _key(fingerprint: str, device: str, config_key: Tuple) -> Tuple:
-        return (fingerprint, device, config_key)
+    def _key(fingerprint: str, device: str, config_key: Tuple,
+             fleet_token: str) -> Tuple:
+        # fleet_token is a per-query SNAPSHOT taken together with the
+        # destination list: a concurrent fleet swap mid-query must not mix
+        # old-fleet devices with the new token (or vice versa)
+        return (fingerprint, device, config_key, fleet_token)
+
+    def _query_fleet(self, dests: Optional[Sequence[str]]
+                     ) -> Tuple[List[str], str]:
+        """Atomically resolve (destination list, fleet token) for a query."""
+        with self._lock:
+            return (list(self._fleet) if dests is None else list(dests),
+                    self._fleet_token)
+
+    def _probe(self, key: Tuple) -> Optional[float]:
+        """LRU hit-or-miss with stats accounting.  Caller holds the lock.
+
+        The ONE lookup used by both predict() and sweep(), so their
+        hit/miss semantics cannot drift."""
+        if key in self._cache:
+            self._cache.move_to_end(key)
+            self.stats.hits += 1
+            return self._cache[key]
+        self.stats.misses += 1
+        return None
+
+    def _store(self, items: Sequence[Tuple[Tuple, float]]) -> None:
+        """Insert computed cells and evict LRU overflow, under the lock.
+
+        Plain assignment appends fresh keys at the LRU tail; the ONE
+        write path shared by predict() and sweep()."""
+        with self._lock:
+            for key, ms in items:
+                self._cache[key] = ms
+            while len(self._cache) > self.cache_size:
+                self._cache.popitem(last=False)
+                self.stats.evictions += 1
 
     def clear_cache(self) -> None:
         with self._lock:
@@ -86,33 +153,95 @@ class FleetPlanner:
 
         Cached devices are served from the LRU; the remainder is computed
         in ONE vectorized ``predict_fleet`` call."""
-        dests = list(self.fleet if dests is None else dests)
+        dests, token = self._query_fleet(dests)
         fp = trace.fingerprint()
         ck = self.predictor.config_key()
         out: Dict[str, float] = {}
         missing: List[str] = []
         with self._lock:
             for name in dests:
-                key = self._key(fp, name, ck)
-                if key in self._cache:
-                    self._cache.move_to_end(key)
-                    out[name] = self._cache[key]
-                    self.stats.hits += 1
+                ms = self._probe(self._key(fp, name, ck, token))
+                if ms is not None:
+                    out[name] = ms
                 else:
                     missing.append(name)
-                    self.stats.misses += 1
         if missing:
             fleet = self.predictor.predict_fleet(trace, missing)
             totals = fleet.total_ms
-            with self._lock:
-                for name, ms in zip(fleet.dests, totals):
-                    out[name] = float(ms)
-                    # plain assignment appends fresh keys at the LRU tail
-                    self._cache[self._key(fp, name, ck)] = float(ms)
-                while len(self._cache) > self.cache_size:
-                    self._cache.popitem(last=False)
-                    self.stats.evictions += 1
+            for name, ms in zip(fleet.dests, totals):
+                out[name] = float(ms)
+            self._store([(self._key(fp, name, ck, token), out[name])
+                         for name in fleet.dests])
         return {name: out[name] for name in dests}
+
+    def sweep(self, traces: Sequence[TrackedTrace],
+              dests: Optional[Sequence[str]] = None
+              ) -> List[Dict[str, float]]:
+        """Multi-trace what-if sweep: iteration time per (trace, device).
+
+        Cached (trace fingerprint, device) cells are served from the LRU;
+        every remaining cell is computed in ONE ragged ``predict_sweep``
+        pass over the traces that still miss devices.  Returns one
+        ``{device: ms}`` dict per input trace, in input order.
+
+        Cache stability: MLP-free predictions are exact, so repeated
+        sweeps are bit-reproducible; trained-MLP cells are stable to
+        ~1e-6 across sweeps (the co-batch a trace shares changes the
+        jitted forward's padding) and live under a sweep-tagged config
+        key so they never alias ``predict()``'s per-trace entries."""
+        traces = list(traces)
+        dests, token = self._query_fleet(dests)
+        # sweep results live under the predictor's sweep identity: equal to
+        # config_key() when the sweep path reproduces predict_fleet
+        # exactly, tagged apart when a fused scorer makes it only
+        # tolerance-close (predict() cells must never alias those)
+        ck = getattr(self.predictor, "sweep_config_key",
+                     self.predictor.config_key)()
+        fps = [t.fingerprint() for t in traces]
+        out: List[Dict[str, float]] = [{} for _ in traces]
+        missing: Dict[int, List[str]] = {}
+        with self._lock:
+            for i, fp in enumerate(fps):
+                for name in dests:
+                    ms = self._probe(self._key(fp, name, ck, token))
+                    if ms is not None:
+                        out[i][name] = ms
+                    else:
+                        missing.setdefault(i, []).append(name)
+        if missing:
+            # one RECTANGULAR ragged pass: [traces with any miss] x [union
+            # of missed devices].  Cells of that grid that were cache hits
+            # are priced as a byproduct but NOT stored or returned — the
+            # hit kept its served value, so hit accounting stays truthful
+            # and cached values never churn within one key.
+            run = sorted(missing)
+            miss_sets = {i: set(missing[i]) for i in run}
+            union: List[str] = [d for d in dests
+                                if any(d in miss_sets[i] for i in run)]
+            totals = self._sweep_totals([traces[i] for i in run], union)
+            items: List[Tuple[Tuple, float]] = []
+            for row, i in enumerate(run):
+                for j, name in enumerate(union):
+                    if name not in miss_sets[i]:
+                        continue
+                    ms = float(totals[row, j])
+                    out[i][name] = ms
+                    items.append((self._key(fps[i], name, ck, token), ms))
+            self._store(items)
+        return [{name: row[name] for name in dests} for row in out]
+
+    def _sweep_totals(self, traces: Sequence[TrackedTrace],
+                      dests: Sequence[str]):
+        """(n_traces, n_dests) grid via the predictor's ragged engine.
+
+        The documented predictor contract is only ``predict_fleet`` +
+        ``config_key``; predictors without a ``predict_sweep`` (all
+        in-repo ones have it via ``_FleetTraceMixin``) fall back to one
+        fleet grid per trace."""
+        if hasattr(self.predictor, "predict_sweep"):
+            return self.predictor.predict_sweep(traces, dests).total_ms
+        return np.stack([self.predictor.predict_fleet(t, dests).total_ms
+                         for t in traces])
 
     def rank(self, trace: TrackedTrace, batch_size: int,
              dests: Optional[Sequence[str]] = None,
@@ -146,3 +275,27 @@ class FleetPlanner:
 def format_fleet(choices: Sequence[FleetChoice]) -> str:
     """Human-readable ranking table (same layout as ``cost.format_ranking``)."""
     return cost_mod.format_ranking(choices)
+
+
+def format_sweep(labels: Sequence[str], times: Sequence[Dict[str, float]],
+                 top: int = 5) -> str:
+    """Human-readable sweep grid: one row per trace, fastest devices first.
+
+    Columns are the union of each trace's ``top`` fastest devices, so the
+    table stays readable even against the full registry."""
+    cols: List[str] = []
+    for row in times:
+        for name in sorted(row, key=row.get)[:top]:
+            if name not in cols:
+                cols.append(name)
+    label_w = max([len("trace")] + [len(lb) for lb in labels])
+    col_w = max([10] + [len(c) + 1 for c in cols])
+    lines = [" ".join([f"{'trace':<{label_w}}"]
+                      + [f"{c:>{col_w}}" for c in cols] + ["   best"])]
+    for lb, row in zip(labels, times):
+        best = min(row, key=row.get)
+        cells = [f"{row[c]:>{col_w}.3f}" if c in row
+                 else f"{'-':>{col_w}}" for c in cols]
+        lines.append(" ".join([f"{lb:<{label_w}}"] + cells
+                              + [f"   {best}"]))
+    return "\n".join(lines)

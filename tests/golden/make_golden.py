@@ -1,0 +1,96 @@
+"""Regenerate the golden-trace regression fixtures.
+
+    PYTHONPATH=src python tests/golden/make_golden.py
+
+Each golden file freezes ONE small trace (ops + simulator-measured origin
+times, serialized via ``TrackedTrace.to_dict``) together with the
+per-device iteration times the reference scalar predictor produced for it
+at generation time, under three predictor configs.  The test suite then
+asserts that the scalar, vectorized, and ragged prediction paths all still
+reproduce those numbers — any change in answers must come through an
+intentional regeneration of these files, never silently.
+
+Traces are built from seeded synthetic ops (no jaxpr tracing), so
+regeneration is deterministic and loading them needs no JAX machinery.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+_HERE = Path(__file__).resolve().parent
+sys.path.insert(0, str(_HERE.parents[1] / "src"))
+
+import numpy as np
+
+from repro.core import HabitatPredictor, devices
+from repro.core import dataset as dataset_mod
+from repro.core.costmodel import OpCost
+from repro.core.trace import Op, TrackedTrace
+
+#: predictor configurations frozen into every golden file
+CONFIGS = {
+    "default": {},
+    "exact_wave": {"exact_wave": True},
+    "model_overhead": {"model_overhead": True},
+}
+
+
+def _alike_ops(n: int, seed: int):
+    rng = np.random.default_rng(seed)
+    kinds = ["add", "mul", "tanh", "exp", "reduce_sum", "transpose"]
+    ops = []
+    for _ in range(n):
+        kind = kinds[int(rng.integers(len(kinds)))]
+        nbytes = float(np.exp(rng.uniform(np.log(1e4), np.log(1e8))))
+        flops = nbytes * float(np.exp(rng.uniform(np.log(0.01),
+                                                  np.log(2.0))))
+        ops.append(Op(name=kind, kind=kind,
+                      cost=OpCost(flops, nbytes * 0.6, nbytes * 0.4),
+                      multiplicity=int(rng.integers(1, 4))))
+    return ops
+
+
+def build_traces():
+    """The three golden traces: alike-only, mixed, varying-heavy."""
+    t1 = TrackedTrace(ops=_alike_ops(12, seed=1), origin_device="T4",
+                      label="golden-alike")
+    t2 = TrackedTrace(
+        ops=(_alike_ops(8, seed=2)
+             + dataset_mod.sample_ops("linear", 3, seed=2)
+             + dataset_mod.sample_ops("bmm", 2, seed=3)),
+        origin_device="tpu-v5e", label="golden-mixed")
+    t3 = TrackedTrace(
+        ops=(dataset_mod.sample_ops("conv2d", 3, seed=4)
+             + dataset_mod.sample_ops("recurrent", 2, seed=5)
+             + _alike_ops(4, seed=6)),
+        origin_device="cpu-host", label="golden-varying")
+    return [t.measure() for t in (t1, t2, t3)]
+
+
+def main():
+    dests = sorted(devices.all_devices())
+    for trace in build_traces():
+        expected = {}
+        for cfg_name, kwargs in CONFIGS.items():
+            pred = HabitatPredictor(**kwargs)
+            expected[cfg_name] = {
+                d: pred.predict_trace_scalar(trace, d).run_time_ms
+                for d in dests}
+        blob = {
+            "schema": 1,
+            "fingerprint": trace.fingerprint(),
+            "trace": trace.to_dict(),
+            "expected": expected,
+        }
+        path = _HERE / f"{trace.label}.json"
+        with open(path, "w") as f:
+            json.dump(blob, f, indent=1)
+        print(f"wrote {path} ({len(trace.ops)} ops, "
+              f"{len(dests)} devices x {len(CONFIGS)} configs)")
+
+
+if __name__ == "__main__":
+    main()

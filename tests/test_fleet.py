@@ -71,6 +71,30 @@ def test_cache_eviction_lru(trace):
     assert planner.stats.evictions == len(DEVS) - 4
 
 
+def test_fleet_change_invalidates_cache(trace):
+    """Regression: rank() after a fleet swap must not serve per-device
+    entries minted under the old fleet membership (the fleet token is part
+    of every cache key)."""
+    planner = FleetPlanner(predictor=HabitatPredictor(),
+                           fleet=["T4", "V100"])
+    planner.predict(trace)
+    assert planner.stats.misses == 2
+    planner.fleet = ["T4", "P100"]          # membership change
+    ranking = planner.rank(trace, batch_size=32)
+    assert {c.device for c in ranking} == {"T4", "P100"}
+    # T4 was cached under the OLD fleet token: it must recompute, not hit
+    assert planner.stats.hits == 0
+    assert planner.stats.misses == 4
+    # same fleet again: now everything hits
+    planner.predict(trace)
+    assert planner.stats.hits == 2
+
+
+def test_fleet_setter_validates():
+    with pytest.raises(KeyError, match="unknown device"):
+        FleetPlanner(predictor=HabitatPredictor()).fleet = ["T4", "H100"]
+
+
 def test_cache_consistent_with_uncached(trace):
     planner = FleetPlanner(predictor=HabitatPredictor())
     planner.predict(trace, dests=["T4", "V100"])
@@ -78,6 +102,127 @@ def test_cache_consistent_with_uncached(trace):
     cold = HabitatPredictor().predict_fleet(trace, DEVS).as_dict()
     for d in DEVS:
         assert warm[d] == pytest.approx(cold[d], rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# multi-trace sweep
+# ---------------------------------------------------------------------------
+def test_sweep_matches_predict_per_trace(trace, trace2):
+    planner = FleetPlanner(predictor=HabitatPredictor())
+    rows = planner.sweep([trace, trace2])
+    solo = FleetPlanner(predictor=HabitatPredictor())
+    assert rows[0] == solo.predict(trace)
+    assert rows[1] == solo.predict(trace2)
+
+
+def test_sweep_cache_cold_then_warm(trace, trace2):
+    planner = FleetPlanner(predictor=HabitatPredictor())
+    first = planner.sweep([trace, trace2])
+    assert planner.stats.misses == 2 * len(DEVS)
+    assert planner.stats.hits == 0
+    second = planner.sweep([trace, trace2])
+    assert second == first
+    assert planner.stats.hits == 2 * len(DEVS)
+    assert planner.stats.hit_rate == 0.5
+
+
+def test_sweep_reuses_predict_cache(trace, trace2):
+    """A sweep only recomputes the (trace, device) cells predict() has not
+    already cached — and vice versa."""
+    planner = FleetPlanner(predictor=HabitatPredictor())
+    planner.predict(trace, dests=["T4", "V100"])
+    planner.sweep([trace, trace2], dests=["T4", "V100", "tpu-v5e"])
+    assert planner.stats.hits == 2          # trace x {T4, V100}
+    assert planner.stats.misses == 2 + 4    # predict() + the new cells
+    # the sweep populated trace2's cells: predict() now fully hits
+    planner.predict(trace2, dests=["T4", "tpu-v5e"])
+    assert planner.stats.misses == 6
+
+
+def test_sweep_served_hits_keep_cached_values(trace, trace2):
+    """Cells served as hits keep their cached value even though the
+    rectangular union grid re-prices them as a byproduct (with real MLPs
+    the re-priced value can wobble ~1e-6 with the co-batch)."""
+    class Perturbed(HabitatPredictor):
+        calls = 0
+
+        def predict_sweep(self, traces, dests=None, scorer=None):
+            sw = super().predict_sweep(traces, dests, scorer)
+            Perturbed.calls += 1                 # simulate co-batch wobble
+            sw.op_ms = sw.op_ms * (1.0 + Perturbed.calls * 1e-6)
+            return sw
+
+    planner = FleetPlanner(predictor=Perturbed(),
+                           fleet=["T4", "V100", "tpu-v5e"])
+    first = planner.sweep([trace], dests=["T4", "V100"])[0]
+    rows = planner.sweep([trace, trace2])        # trace hits T4 + V100
+    assert rows[0]["T4"] == first["T4"]
+    assert rows[0]["V100"] == first["V100"]
+    assert planner.stats.hits == 2
+
+
+def test_sweep_single_trace_matches_rank_inputs(trace):
+    planner = FleetPlanner(predictor=HabitatPredictor())
+    row = planner.sweep([trace])[0]
+    times = planner.predict(trace)
+    assert row == times
+    assert planner.stats.hits == len(DEVS)   # second query fully cached
+
+
+def test_sweep_key_separates_mlp_sweep_entries(trace, tiny_mlp_cfg,
+                                               tiny_n_configs):
+    """Cells written by an MLP-priced sweep (co-batched, possibly fused
+    forwards) are only tolerance-close to predict()'s per-trace cells, so
+    they must live under a distinct cache key — predict() after such a
+    sweep recomputes instead of aliasing.  MLP-free predictors reproduce
+    predict_fleet bitwise and keep one shared identity."""
+    from repro.core import dataset as dataset_mod, mlp
+    ds = dataset_mod.build_dataset("linear", tiny_n_configs,
+                                   device_names=["T4"])
+    mlps = {"linear": mlp.train(ds, tiny_mlp_cfg)}
+    for pred in (HabitatPredictor(mlps=mlps, sweep_scorer="jnp"),
+                 HabitatPredictor(mlps=mlps)):
+        assert pred.sweep_config_key() != pred.config_key()
+        planner = FleetPlanner(predictor=pred, fleet=["T4", "V100"])
+        planner.sweep([trace])
+        planner.predict(trace)
+        assert planner.stats.hits == 0       # no cross-path aliasing
+        assert planner.stats.misses == 4
+    # without MLPs the ragged sweep is bitwise-identical: one identity
+    exact = HabitatPredictor()
+    assert exact.sweep_config_key() == exact.config_key()
+
+
+def test_sweep_works_with_baseline_predictors(trace, trace2):
+    """Baseline predictors get sweep() through the mixin's fleet loop."""
+    for pred in (FlopsRatioPredictor(), PaleoPredictor()):
+        planner = FleetPlanner(predictor=pred, fleet=["T4", "V100"])
+        rows = planner.sweep([trace, trace2])
+        assert len(rows) == 2
+        assert all(np.isfinite(v) for row in rows for v in row.values())
+        assert rows[0] == planner.predict(trace, dests=["T4", "V100"])
+
+
+def test_sweep_honors_minimal_predictor_contract(trace, trace2):
+    """sweep() works for predictors exposing only the documented duck
+    type (predict_fleet + config_key), via the per-trace fallback."""
+    class Minimal:
+        def __init__(self):
+            self._inner = HabitatPredictor()
+
+        def predict_fleet(self, t, dests):
+            return self._inner.predict_fleet(t, dests)
+
+        def config_key(self):
+            return ("Minimal",)
+
+    planner = FleetPlanner(predictor=Minimal(), fleet=["T4", "V100"])
+    rows = planner.sweep([trace, trace2])
+    ref = HabitatPredictor()
+    for row, t in zip(rows, (trace, trace2)):
+        for dev, ms in row.items():
+            assert ms == pytest.approx(
+                ref.predict_fleet(t, [dev]).total_ms[0], rel=1e-12)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,98 @@
+"""Golden-trace regression suite.
+
+Three small serialized traces under ``tests/golden/`` carry the
+per-device iteration times the reference scalar predictor produced at
+generation time (see ``tests/golden/make_golden.py``).  Every prediction
+path — the scalar per-op loop, the vectorized single-trace grid, and the
+ragged multi-trace sweep — must keep reproducing them within 1e-6
+relative tolerance.  An intentional semantic change regenerates the
+fixtures; an accidental one fails here first."""
+
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import HabitatPredictor, devices, stack_traces
+from repro.core.trace import TrackedTrace
+
+GOLDEN_DIR = Path(__file__).resolve().parent / "golden"
+GOLDEN_FILES = sorted(GOLDEN_DIR.glob("*.json"))
+DEVS = sorted(devices.all_devices())
+
+#: deliberately duplicated from make_golden.CONFIGS (keeps collection
+#: independent of the generator script); drift is caught by the
+#: set-equality assert in test_golden_serialization_stable
+CONFIGS = {
+    "default": {},
+    "exact_wave": {"exact_wave": True},
+    "model_overhead": {"model_overhead": True},
+}
+
+
+def _load(path: Path):
+    with open(path) as f:
+        blob = json.load(f)
+    return blob, TrackedTrace.from_dict(blob["trace"])
+
+
+def test_golden_files_present():
+    assert len(GOLDEN_FILES) == 3, (
+        f"expected 3 golden traces in {GOLDEN_DIR}, found "
+        f"{[p.name for p in GOLDEN_FILES]}")
+
+
+@pytest.mark.parametrize("path", GOLDEN_FILES, ids=lambda p: p.stem)
+def test_golden_serialization_stable(path):
+    """Deserialized traces hash to the fingerprint frozen at generation."""
+    blob, trace = _load(path)
+    assert trace.fingerprint() == blob["fingerprint"]
+    assert {c for c in blob["expected"]} == set(CONFIGS)
+    assert all(set(blob["expected"][c]) == set(DEVS) for c in CONFIGS)
+
+
+@pytest.mark.parametrize("cfg_name", sorted(CONFIGS))
+@pytest.mark.parametrize("path", GOLDEN_FILES, ids=lambda p: p.stem)
+def test_scalar_path_reproduces_golden(path, cfg_name):
+    blob, trace = _load(path)
+    pred = HabitatPredictor(**CONFIGS[cfg_name])
+    for dev in DEVS:
+        got = pred.predict_trace_scalar(trace, dev).run_time_ms
+        assert got == pytest.approx(blob["expected"][cfg_name][dev],
+                                    rel=1e-6), (dev, cfg_name)
+
+
+@pytest.mark.parametrize("cfg_name", sorted(CONFIGS))
+@pytest.mark.parametrize("path", GOLDEN_FILES, ids=lambda p: p.stem)
+def test_vectorized_path_reproduces_golden(path, cfg_name):
+    blob, trace = _load(path)
+    pred = HabitatPredictor(**CONFIGS[cfg_name])
+    totals = pred.predict_fleet(trace, DEVS).total_ms
+    for j, dev in enumerate(DEVS):
+        assert totals[j] == pytest.approx(
+            blob["expected"][cfg_name][dev], rel=1e-6), (dev, cfg_name)
+
+
+@pytest.mark.parametrize("cfg_name", sorted(CONFIGS))
+def test_ragged_path_reproduces_golden(cfg_name):
+    """One ragged sweep over all three traces (mixed origins) at once."""
+    blobs, traces = zip(*[_load(p) for p in GOLDEN_FILES])
+    pred = HabitatPredictor(**CONFIGS[cfg_name])
+    sweep = pred.predict_sweep(list(traces), DEVS)
+    totals = sweep.total_ms
+    for i, blob in enumerate(blobs):
+        for j, dev in enumerate(DEVS):
+            assert totals[i, j] == pytest.approx(
+                blob["expected"][cfg_name][dev], rel=1e-6), \
+                (traces[i].label, dev, cfg_name)
+
+
+def test_ragged_path_on_prebuilt_stack():
+    """A prebuilt RaggedTraceArrays gives the same grid as TrackedTraces."""
+    _, traces = zip(*[_load(p) for p in GOLDEN_FILES])
+    pred = HabitatPredictor()
+    via_traces = pred.predict_sweep(list(traces), DEVS).total_ms
+    via_stack = pred.predict_sweep(stack_traces(list(traces)),
+                                   DEVS).total_ms
+    np.testing.assert_array_equal(via_stack, via_traces)

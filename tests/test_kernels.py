@@ -139,3 +139,42 @@ def test_fused_mlp_serves_trained_predictor():
                                                  impl="interpret")))
     direct = trained.predict_ms(ds.x[:16])
     np.testing.assert_allclose(kernel_out, direct, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused multi-kind MLP scorer
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_kinds,layers,hidden,bm,blocks", [
+    (4, 3, 64, 8, [0, 2, 2, 1, 3, 0]),    # all four kinds, revisited
+    (2, 4, 128, 16, [1, 1, 1]),           # single kind repeated
+    (3, 2, 64, 32, [2]),                  # one block
+])
+def test_fused_mlp_score_matches_ref(n_kinds, layers, hidden, bm, blocks):
+    ws = jnp.stack([jnp.stack([_rand((hidden, hidden), jnp.float32) * 0.2
+                               for _ in range(layers)])
+                    for _ in range(n_kinds)])
+    bs = jnp.stack([jnp.stack([_rand((hidden,), jnp.float32) * 0.1
+                               for _ in range(layers)])
+                    for _ in range(n_kinds)])
+    bk = jnp.asarray(np.asarray(blocks, np.int32))
+    x = _rand((len(blocks) * bm, hidden), jnp.float32)
+    out = ops.fused_mlp_score(x, bk, ws, bs, block_m=bm, impl="interpret")
+    ref = ops.fused_mlp_score(x, bk, ws, bs, block_m=bm, impl="jnp")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4)
+    # the block->kind map must actually select: each block agrees with the
+    # single-kind fused_mlp kernel for its kind and no other
+    for i, k in enumerate(blocks):
+        rows = slice(i * bm, (i + 1) * bm)
+        per_kind = ops.fused_mlp(x[rows], ws[k], bs[k], impl="jnp")
+        np.testing.assert_allclose(np.asarray(ref[rows]),
+                                   np.asarray(per_kind), atol=1e-4)
+
+
+def test_fused_mlp_score_rejects_partial_blocks():
+    ws = jnp.zeros((2, 2, 16, 16))
+    bs = jnp.zeros((2, 2, 16))
+    x = jnp.zeros((20, 16))
+    with pytest.raises(ValueError, match="blocks x block_m"):
+        ops.fused_mlp_score(x, jnp.zeros(2, jnp.int32), ws, bs,
+                            block_m=16, impl="interpret")

@@ -1,0 +1,71 @@
+"""Serve CLI round-trip: ``launch/serve.py --fleet --sweep`` in-process.
+
+Drives the real ``main()`` (argv-patched) end to end — serving loop,
+decode-step tracing, fleet ranking, and the ragged what-if sweep — and
+checks the ranking/grid output formatting plus the planner's cache-hit
+accounting surfaced through ``CacheStats.hit_rate``."""
+
+import re
+import sys
+
+import pytest
+
+from repro.launch import serve as serve_mod
+
+_ARGV = ["serve", "--smoke", "--requests", "2", "--max-new", "2",
+         "--batch", "2", "--max-seq", "32", "--prompt-len", "4",
+         "--fleet", "--sweep", "--sweep-batches", "1,2"]
+
+
+@pytest.fixture(scope="module")
+def cli_output():
+    """One shared CLI run (jit warmup dominates; every check reads it)."""
+    argv, sys.argv = sys.argv, list(_ARGV)
+    import io
+    import contextlib
+    buf = io.StringIO()
+    try:
+        with contextlib.redirect_stdout(buf):
+            serve_mod.main()
+    finally:
+        sys.argv = argv
+    return buf.getvalue()
+
+
+def test_serving_loop_completes(cli_output):
+    assert re.search(r"served 2/2 requests, \d+ tokens", cli_output)
+
+
+def test_fleet_ranking_renders(cli_output):
+    assert re.search(r"fleet ranking for one decode step "
+                     r"\(\d+ ops x 15 devices", cli_output)
+    # the format_fleet table header and some known devices
+    assert "samples/$" in cli_output
+    assert "tpu-v5e" in cli_output and "cpu-host" in cli_output
+    assert re.search(r"best samples/\$: \S+ \(cache hit rate \d+%\)",
+                     cli_output)
+
+
+def test_sweep_grid_renders(cli_output):
+    m = re.search(r"what-if sweep: 2 traces \((\d+) ops total\) x "
+                  r"15 devices in [\d.]+ ms", cli_output)
+    assert m and int(m.group(1)) > 0
+    # one grid row per batch-size variant, each naming its best device
+    assert re.search(r"qwen3-0\.6b-decode-b1\b.*   \S+", cli_output)
+    assert re.search(r"qwen3-0\.6b-decode-b2\b.*   \S+", cli_output)
+
+
+def test_sweep_cache_accounting(cli_output):
+    """The repeat sweep is served from the LRU: hits >= misses, and the
+    printed hit rate matches the printed counters."""
+    m = re.search(r"sweep cache: hits=(\d+) misses=(\d+) "
+                  r"\(hit rate (\d+)%\)", cli_output)
+    assert m, cli_output
+    hits, misses, rate = map(int, m.groups())
+    # fleet: 15 misses (rank) + 15 hits (rank by cost).  sweep: the b2
+    # decode trace fingerprints identically to the fleet trace (same
+    # jaxpr, same simulated measurements), so the cold sweep is 15 misses
+    # (b1) + 15 cross-query hits (b2); the repeat sweep is 30 hits.
+    assert misses == 15 + 15
+    assert hits == 15 + 15 + 30
+    assert rate == round(100 * hits / (hits + misses))

@@ -1,0 +1,243 @@
+"""Parity tests for the ragged multi-trace engine and the fused scorer.
+
+Two layers:
+
+  * deterministic seeded cases (always run, no extra deps) exercising the
+    shared check helpers, and
+  * hypothesis properties (dev-only dependency, skipped when absent)
+    generating random ragged trace stacks over the same helpers.
+
+The core invariants: ``predict_sweep`` row i is element-wise IDENTICAL to
+``predict_fleet`` on trace i alone, for every predictor config; and the
+fused Pallas scorer (interpret mode on CPU) matches the jitted per-kind
+MLP forwards within float32-forward tolerance."""
+
+import numpy as np
+import pytest
+
+from repro.core import HabitatPredictor, devices
+from repro.core import dataset as dataset_mod
+from repro.core.batched import FusedMLPScorer
+from repro.core.costmodel import OpCost
+from repro.core.trace import Op, TrackedTrace
+
+DEVS = sorted(devices.all_devices())
+VARYING_KINDS = ("conv2d", "linear", "bmm", "recurrent")
+ALIKE_KINDS = ("add", "mul", "tanh", "reduce_sum", "transpose")
+ORIGINS = ("T4", "V100", "tpu-v5e", "cpu-host")
+
+
+class _StubMLP:
+    """Pure-NumPy fake MLP (prediction = linear functional of the raw
+    feature row): exact, so grid-tiling mistakes change the answer."""
+
+    uid = -1
+
+    def predict_ms(self, features):
+        x = np.atleast_2d(features)
+        return (x * np.arange(1, x.shape[1] + 1)).sum(axis=1) + 1e-3
+
+
+def _make_trace(rng: np.random.Generator, n_ops: int, origin: str,
+                label: str) -> TrackedTrace:
+    ops = []
+    for _ in range(n_ops):
+        if rng.uniform() < 0.4:
+            kind = VARYING_KINDS[int(rng.integers(len(VARYING_KINDS)))]
+            op = dataset_mod.sample_ops(kind, 1,
+                                        seed=int(rng.integers(2**31)))[0]
+        else:
+            kind = ALIKE_KINDS[int(rng.integers(len(ALIKE_KINDS)))]
+            nbytes = float(np.exp(rng.uniform(np.log(1e3), np.log(1e8))))
+            op = Op(name=kind, kind=kind,
+                    cost=OpCost(nbytes * rng.uniform(0.01, 2.0),
+                                nbytes * 0.6, nbytes * 0.4),
+                    multiplicity=int(rng.integers(1, 4)))
+        op.measured_ms = float(np.exp(rng.uniform(np.log(1e-3),
+                                                  np.log(1e2))))
+        ops.append(op)
+    return TrackedTrace(ops=ops, origin_device=origin, label=label)
+
+
+def _make_stack(seed: int, n_traces: int):
+    rng = np.random.default_rng(seed)
+    return [_make_trace(rng, int(rng.integers(1, 14)),
+                        ORIGINS[int(rng.integers(len(ORIGINS)))],
+                        label=f"prop-{seed}-{i}")
+            for i in range(n_traces)]
+
+
+def check_sweep_rows_match_fleet(traces, mlps=None, **pred_kwargs):
+    """The invariant: sweep row i == predict_fleet on trace i, bitwise.
+
+    Callers only pass configurations where bitwise equality is the
+    contract: wave-scaling/analytical pricing, or pure-NumPy stub MLPs
+    (real jitted forwards are only tolerance-close across batch shapes)."""
+    pred = HabitatPredictor(mlps=mlps, **pred_kwargs)
+    sweep = pred.predict_sweep(traces, DEVS)
+    totals = sweep.total_ms
+    assert totals.shape == (len(traces), len(DEVS))
+    for i, trace in enumerate(traces):
+        fleet = pred.predict_fleet(trace, DEVS)
+        np.testing.assert_array_equal(
+            sweep.row(i).op_ms, fleet.op_ms,
+            err_msg=f"trace {i} ({trace.label}) op grid diverged")
+        np.testing.assert_array_equal(
+            totals[i], fleet.total_ms,
+            err_msg=f"trace {i} ({trace.label}) totals diverged")
+
+
+# ---------------------------------------------------------------------------
+# deterministic seeded cases (always run)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed,n_traces", [(0, 1), (1, 2), (2, 4), (3, 6)])
+def test_sweep_rows_match_fleet_analytical(seed, n_traces):
+    check_sweep_rows_match_fleet(_make_stack(seed, n_traces))
+
+
+@pytest.mark.parametrize("seed,n_traces", [(4, 3), (5, 5)])
+def test_sweep_rows_match_fleet_exact_wave(seed, n_traces):
+    check_sweep_rows_match_fleet(_make_stack(seed, n_traces),
+                                 exact_wave=True)
+
+
+@pytest.mark.parametrize("seed,n_traces", [(6, 3), (7, 5)])
+def test_sweep_rows_match_fleet_overhead(seed, n_traces):
+    check_sweep_rows_match_fleet(_make_stack(seed, n_traces),
+                                 model_overhead=True)
+
+
+@pytest.mark.parametrize("seed,n_traces", [(8, 2), (9, 4)])
+def test_sweep_rows_match_fleet_stub_mlps(seed, n_traces):
+    """The MLP feature-tiling path, exact through pure-NumPy stub MLPs."""
+    check_sweep_rows_match_fleet(
+        _make_stack(seed, n_traces),
+        mlps={"linear": _StubMLP(), "bmm": _StubMLP(),
+              "conv2d": _StubMLP()})
+
+
+def test_sweep_single_op_traces():
+    """Degenerate ragged stack: every segment is one op."""
+    rng = np.random.default_rng(10)
+    traces = [_make_trace(rng, 1, o, f"one-{o}") for o in ORIGINS]
+    check_sweep_rows_match_fleet(traces)
+
+
+def test_sweep_rejects_empty_stack():
+    with pytest.raises(ValueError, match="at least one trace"):
+        HabitatPredictor().predict_sweep([], DEVS)
+
+
+def test_sweep_rejects_empty_trace():
+    empty = TrackedTrace(ops=[], origin_device="T4", label="empty")
+    with pytest.raises(ValueError, match="has no ops"):
+        HabitatPredictor().predict_sweep([empty], DEVS)
+
+
+def test_sweep_unmeasured_alike_op_fails_loudly():
+    traces = _make_stack(11, 2)
+    bad = Op(name="add", kind="add", cost=OpCost(1e6, 6e5, 4e5))
+    traces[1].ops.append(bad)
+    traces[1]._arrays = None
+    with pytest.raises(ValueError, match="no origin measurement"):
+        HabitatPredictor().predict_sweep(traces, DEVS)
+
+
+# ---------------------------------------------------------------------------
+# fused scorer vs per-kind jitted forwards
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tiny_mlps():
+    """Architecture-uniform tiny MLPs for all four kinds (seconds)."""
+    from repro.core import mlp
+    cfg = mlp.MLPConfig(hidden_layers=2, hidden_size=32, epochs=2)
+    out = {}
+    for kind in VARYING_KINDS:
+        ds = dataset_mod.build_dataset(kind, 60, device_names=["T4"])
+        out[kind] = mlp.train(ds, cfg)
+    return out
+
+
+def check_scorer_matches_forwards(tiny_mlps, feats_by_kind, impl):
+    scorer = FusedMLPScorer(tiny_mlps, block_m=8, impl=impl)
+    scored = scorer.score_ms(feats_by_kind)
+    for kind, feats in feats_by_kind.items():
+        direct = tiny_mlps[kind].predict_ms(feats)
+        np.testing.assert_allclose(scored[kind], direct, rtol=2e-4,
+                                   err_msg=f"{kind} ({impl})")
+
+
+@pytest.mark.parametrize("impl", ["jnp", "interpret"])
+def test_fused_scorer_matches_per_kind_forwards(tiny_mlps, impl):
+    feats = {}
+    for i, kind in enumerate(VARYING_KINDS):
+        ops = dataset_mod.sample_ops(kind, 3 + i, seed=i)
+        dev = devices.get("V100")
+        feats[kind] = np.stack([dataset_mod.op_features(op, dev)
+                                for op in ops])
+    check_scorer_matches_forwards(tiny_mlps, feats, impl)
+
+
+@pytest.mark.parametrize("impl", ["jnp", "interpret"])
+def test_sweep_with_fused_scorer_matches_per_kind_path(tiny_mlps, impl):
+    """predict_sweep(scorer=impl) == the default per-kind sweep."""
+    traces = _make_stack(12, 3)
+    pred = HabitatPredictor(mlps=tiny_mlps)
+    base = pred.predict_sweep(traces, DEVS)          # per-kind on CPU
+    fused = pred.predict_sweep(traces, DEVS, scorer=impl)
+    np.testing.assert_allclose(fused.op_ms, base.op_ms, rtol=2e-4)
+
+
+def test_fused_scorer_rejects_mixed_architectures(tiny_mlps):
+    from repro.core import mlp
+    ds = dataset_mod.build_dataset("bmm", 60, device_names=["T4"])
+    odd = mlp.train(ds, mlp.MLPConfig(hidden_layers=1, hidden_size=16,
+                                      epochs=1))
+    mixed = dict(tiny_mlps)
+    mixed["bmm"] = odd
+    with pytest.raises(ValueError, match="architecture-uniform"):
+        FusedMLPScorer(mixed)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties (dev-only dependency; the deterministic cases above
+# must keep running when it is absent, so no module-level importorskip)
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # runtime-only install: properties skip, helpers ran
+    given = None
+
+if given is not None:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 5),
+           st.sampled_from(["default", "exact", "overhead"]))
+    def test_property_sweep_rows_match_fleet(seed, n_traces, mode):
+        kwargs = {"default": {}, "exact": {"exact_wave": True},
+                  "overhead": {"model_overhead": True}}[mode]
+        check_sweep_rows_match_fleet(_make_stack(seed, n_traces), **kwargs)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 4))
+    def test_property_sweep_rows_match_fleet_stub_mlps(seed, n_traces):
+        check_sweep_rows_match_fleet(
+            _make_stack(seed, n_traces),
+            mlps={k: _StubMLP() for k in VARYING_KINDS})
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2**31 - 1),
+           st.lists(st.integers(1, 12), min_size=1, max_size=4))
+    def test_property_fused_scorer_matches_forwards(tiny_mlps, seed,
+                                                    counts):
+        rng = np.random.default_rng(seed)
+        dev = devices.get(DEVS[int(rng.integers(len(DEVS)))])
+        feats = {}
+        for n in counts:
+            kind = VARYING_KINDS[int(rng.integers(len(VARYING_KINDS)))]
+            if kind in feats:
+                continue
+            ops = dataset_mod.sample_ops(kind, n,
+                                         seed=int(rng.integers(2**31)))
+            feats[kind] = np.stack([dataset_mod.op_features(op, dev)
+                                    for op in ops])
+        check_scorer_matches_forwards(tiny_mlps, feats, "interpret")
