@@ -1,0 +1,199 @@
+"""Prediction-service benchmark: coalesced concurrent queries vs a loop.
+
+Acceptance gate for the coalescing layer (`serve/service.py`): K
+concurrent rank queries (distinct serving-shaped traces, full device
+registry, the trained-MLP Habitat predictor) kept in flight against a
+``PredictionService`` must be
+
+* answered in **far fewer engine passes than K** — the service stacks
+  the burst into ragged ``predict_sweep`` passes (expected: 1), and
+* **>= 3x faster** end-to-end than answering the same K queries with a
+  sequential per-request ``FleetPlanner.rank`` loop (median of paired
+  per-round ratios, same policy as ``bench_sweep``).
+
+The MLP path is where coalescing pays: every per-request ``rank()``
+dispatches one jitted forward per op kind, and the coalesced pass
+dispatches the same forwards once for the whole batch.  MLP rankings are
+compared at 1e-5 (co-batched float32 forwards are tolerance-close, not
+bitwise — same caveat as ``bench_sweep``).
+
+The analytical (wave-scaling) path is additionally checked for
+**bitwise-identical rankings** between the coalesced service and the
+direct planner — coalescing must not change the answer (the golden-trace
+suite pins the same property for the ragged engine itself) — and its
+speedup is reported for transparency: per-request dispatch is already so
+cheap there that coalescing buys little on 2 CPU cores.
+
+Both sides start each round with a cold result cache, so the ratio
+measures engine-dispatch amortization, not cache hits.  The service side
+includes ALL of its overhead: submission, coalescing, fingerprint dedup,
+and result fan-out.
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+if __package__ in (None, ""):   # direct invocation: python benchmarks/...
+    _ROOT = Path(__file__).resolve().parents[1]
+    sys.path.insert(0, str(_ROOT))
+    sys.path.insert(0, str(_ROOT / "src"))
+
+import gc
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import Csv
+from benchmarks.bench_fleet import synthetic_trace
+from repro.core import HabitatPredictor, devices
+from repro.core import dataset as dataset_mod, mlp
+from repro.serve.fleet import FleetPlanner
+from repro.serve.service import PredictionService
+
+K = 32                  #: concurrent rank queries per burst
+_N_CLIENTS = 4          #: client threads keeping the K queries in flight
+_BATCH = 32
+
+
+def _tiny_mlps():
+    """Seconds-not-minutes MLPs: enough to exercise the real per-kind
+    jitted inference path; accuracy is irrelevant to a dispatch bench."""
+    cfg = mlp.MLPConfig(hidden_layers=2, hidden_size=32, epochs=3)
+    return {k: mlp.train(dataset_mod.build_dataset(k, 120,
+                                                   device_names=["T4"]),
+                         cfg)
+            for k in ("conv2d", "linear", "bmm", "recurrent")}
+
+
+def _loop_round(planner: FleetPlanner, traces):
+    """The per-request baseline: one rank (= one engine pass) per query."""
+    return [planner.rank(t, batch_size=_BATCH) for t in traces]
+
+
+def _burst_round(service: PredictionService, traces):
+    """K queries in flight from a few persistent client threads.
+
+    Each client thread submits its share of the burst without blocking
+    (``submit_rank``) and then collects the handles — the arrival
+    pattern of a threaded HTTP front end, without charging the bench
+    for an OS thread per request."""
+    results = [None] * len(traces)
+    errors = []
+    barrier = threading.Barrier(_N_CLIENTS + 1)
+    chunks = [range(i, len(traces), _N_CLIENTS) for i in range(_N_CLIENTS)]
+
+    def client(idxs):
+        barrier.wait()
+        try:
+            handles = [(i, service.submit_rank(traces[i], _BATCH))
+                       for i in idxs]
+            for i, h in handles:
+                results[i] = h.get(timeout=60)
+        except BaseException as e:
+            errors.append(e)
+
+    threads = [threading.Thread(target=client, args=(c,)) for c in chunks]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    dt = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    return results, dt
+
+
+def _paired_rounds(loop_planner, service, traces, reps):
+    ratios, t_loop, t_burst, passes = [], [], [], []
+    for _ in range(reps):
+        loop_planner.clear_cache()
+        service.planner.clear_cache()
+        t0 = time.perf_counter()
+        _loop_round(loop_planner, traces)
+        t1 = time.perf_counter()
+        _, dt_burst = _burst_round(service, traces)
+        ratios.append((t1 - t0) / dt_burst)
+        t_loop.append(t1 - t0)
+        t_burst.append(dt_burst)
+        passes.append(service.planner.engine_passes)
+    return (float(np.median(ratios)), min(t_loop), min(t_burst),
+            float(np.median(passes)))
+
+
+def _report(tag, speedup, t_loop, t_burst, med_passes, reps):
+    print(f"  {tag} loop  : {t_loop * 1e3:9.2f} ms ({K} engine passes)")
+    print(f"  {tag} burst : {t_burst * 1e3:9.2f} ms "
+          f"(median {med_passes:.0f} engine pass(es))")
+    print(f"  {tag} ratio : {speedup:9.1f}x median-of-{reps}-pairs")
+
+
+def run(csv: Csv, smoke: bool = False) -> None:
+    reps = 7 if smoke else 15
+    traces = [synthetic_trace(10 + 2 * (i % 16), origin="T4", seed=100 + i)
+              for i in range(K)]
+    for t in traces:            # SoA builds amortize outside both sides
+        t.to_arrays()
+        t.fingerprint()
+    dests = sorted(devices.all_devices())
+    print(f"  burst shape: {K} concurrent rank queries "
+          f"({_N_CLIENTS} client threads) x {len(dests)} devices")
+
+    # -- analytical path: bitwise parity + transparency numbers -----------
+    loop_planner = FleetPlanner(predictor=HabitatPredictor())
+    service = PredictionService(predictor=HabitatPredictor(),
+                                coalesce_window_ms=100.0, flush_at=K)
+    expect = _loop_round(loop_planner, traces)      # warmup + oracle
+    got, _ = _burst_round(service, traces)
+    for i, (a, b) in enumerate(zip(expect, got)):
+        if a != b:
+            raise AssertionError(
+                f"analytical coalesced ranking for trace {i} differs "
+                f"from the per-request answer (must be bitwise-identical)")
+    gc.collect()
+    speedup, t_loop, t_burst, med_passes = _paired_rounds(
+        loop_planner, service, traces, reps)
+    _report("analytical", speedup, t_loop, t_burst, med_passes, reps)
+    if med_passes > K / 4:
+        raise AssertionError(
+            f"coalescing failed on the analytical path: {med_passes:.0f} "
+            f"engine passes for {K} concurrent queries (expected << {K})")
+    csv.add("service_loop_analytical", t_loop * 1e6, f"{K}queries")
+    csv.add("service_burst_analytical", t_burst * 1e6, f"{speedup:.1f}x")
+
+    # -- MLP path (the Habitat predictor): the >= 3x throughput gate ------
+    mlps = _tiny_mlps()
+    loop_planner = FleetPlanner(predictor=HabitatPredictor(mlps=mlps))
+    service = PredictionService(predictor=HabitatPredictor(mlps=mlps),
+                                coalesce_window_ms=100.0, flush_at=K)
+    expect = _loop_round(loop_planner, traces)      # warmup (jit shapes)
+    got, _ = _burst_round(service, traces)
+    for i, (a, b) in enumerate(zip(expect, got)):   # tolerance parity
+        av = {c.device: c.iter_ms for c in a}
+        bv = {c.device: c.iter_ms for c in b}
+        for d in av:
+            np.testing.assert_allclose(bv[d], av[d], rtol=1e-5,
+                                       err_msg=f"trace {i} device {d}")
+    gc.collect()
+    speedup, t_loop, t_burst, med_passes = _paired_rounds(
+        loop_planner, service, traces, reps)
+    _report("MLP       ", speedup, t_loop, t_burst, med_passes, reps)
+    if med_passes > K / 4:
+        raise AssertionError(
+            f"coalescing failed: {med_passes:.0f} engine passes for {K} "
+            f"concurrent queries (expected << {K})")
+    if speedup < 3.0:
+        raise AssertionError(
+            f"coalesced service only {speedup:.1f}x faster than the "
+            f"per-request loop on the MLP path (gate: >= 3x)")
+    csv.add("service_loop_mlp", t_loop * 1e6, f"{K}queries")
+    csv.add("service_burst_mlp", t_burst * 1e6,
+            f"{speedup:.1f}x_{med_passes:.0f}passes")
+
+
+if __name__ == "__main__":
+    run(Csv(), smoke="--smoke" in sys.argv)

@@ -47,10 +47,12 @@ BENCHES = [
      "Fleet engine: vectorized vs scalar prediction loop (>=10x gate)"),
     ("sweep", "benchmarks.bench_sweep",
      "Multi-trace ragged sweep vs per-trace fleet loop (>=3x gate)"),
+    ("service", "benchmarks.bench_service",
+     "Coalescing prediction service vs per-request loop (>=3x gate)"),
 ]
 
 #: the subset (and reduced sizes) run by CI's bench-smoke job
-SMOKE_KEYS = ("fleet", "sweep", "kernels")
+SMOKE_KEYS = ("fleet", "sweep", "service", "kernels")
 
 
 def main() -> None:

@@ -247,15 +247,21 @@ def stack_traces(traces: Union["RaggedTraceArrays",
     for t, p in zip(traces, per):
         if p.n_ops == 0:
             raise ValueError(f"trace {t.label!r} has no ops")
-    kinds = sorted(set().union(*(p.kinds for p in per)))
-    kmap = {k: i for i, k in enumerate(kinds)}
     lengths = np.asarray([p.n_ops for p in per], np.int64)
     offsets = np.zeros(len(per) + 1, np.int64)
     np.cumsum(lengths, out=offsets[1:])
     cat = lambda field: np.concatenate([getattr(p, field) for p in per])
-    kind_ids = np.concatenate([
-        np.asarray([kmap[k] for k in p.kinds], np.int32)[p.kind_ids]
-        for p in per])
+    if all(p.kinds == per[0].kinds for p in per[1:]):
+        # fast path: one shared kind vocabulary (the common serving case —
+        # traces of one model family), no per-trace id remap needed
+        kinds = list(per[0].kinds)
+        kind_ids = cat("kind_ids")
+    else:
+        kinds = sorted(set().union(*(p.kinds for p in per)))
+        kmap = {k: i for i, k in enumerate(kinds)}
+        kind_ids = np.concatenate([
+            np.asarray([kmap[k] for k in p.kinds], np.int32)[p.kind_ids]
+            for p in per])
     return RaggedTraceArrays(
         offsets=offsets,
         trace_ids=np.repeat(np.arange(len(per), dtype=np.int32), lengths),

@@ -22,7 +22,12 @@ def throughput(batch_size: int, iter_ms: float) -> float:
 
 def cost_normalized_throughput(batch_size: int, iter_ms: float,
                                cost_per_hour: float) -> float:
-    """Samples per dollar (samples/s divided by $/s)."""
+    """Samples per dollar (samples/s divided by $/s).
+
+    A price of 0.0 (free tier / hardware already owned) yields ``inf`` —
+    a legitimately free device dominates every paid one on samples/$."""
+    if cost_per_hour == 0.0:
+        return float("inf")
     return throughput(batch_size, iter_ms) / (cost_per_hour / 3600.0)
 
 

@@ -279,11 +279,18 @@ def train_mlps(kinds: Sequence[str] = ("conv2d", "linear", "bmm",
                cache_dir: Optional[Path] = None,
                force: bool = False,
                verbose: bool = False) -> Dict[str, mlp.TrainedMLP]:
-    """Train (or load cached) MLP predictors for the given op kinds."""
+    """Train (or load cached) MLP predictors for the given op kinds.
+
+    Artifacts live in a content-addressed store
+    (:mod:`repro.core.artifacts`): the file name embeds a hash of the
+    MLP config, dataset spec, and device specs, so a cached artifact can
+    never be served for a semantically different training run — and
+    refactors that do not change training semantics keep the cache
+    warm (the CI cache key is the same hash)."""
+    from repro.core import artifacts
+
     cfg = cfg or DEFAULT_MLP_CFG
     cache_dir = cache_dir or ARTIFACT_DIR
-    tag = (f"h{cfg.hidden_layers}x{cfg.hidden_size}"
-           f"_e{cfg.epochs}_n{n_configs}")
     out: Dict[str, mlp.TrainedMLP] = {}
     if device_names is None:
         # Default: the whole registry (paper GPUs + accelerators + host), so
@@ -291,7 +298,8 @@ def train_mlps(kinds: Sequence[str] = ("conv2d", "linear", "bmm",
         # parity benchmarks pass devices.PAPER_GPUS explicitly.
         device_names = sorted(devices.all_devices())
     for kind in kinds:
-        path = cache_dir / f"{kind}_{tag}.pkl"
+        path = artifacts.artifact_path(cache_dir, kind, cfg, n_configs,
+                                       device_names)
         if path.exists() and not force:
             out[kind] = mlp.TrainedMLP.load(path)
             continue

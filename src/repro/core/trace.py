@@ -58,20 +58,25 @@ class Op:
         return self.kind in KERNEL_VARYING_KINDS
 
     def to_dict(self) -> Dict[str, Any]:
-        """JSON-safe record (golden-trace files, cross-process shipping)."""
+        """JSON-safe record (golden-trace files, service wire format).
+
+        Every numeric field is coerced to a native Python number, so an
+        op whose times/costs came back as numpy scalars (calibration,
+        array math) still serializes — and Python floats round-trip
+        through ``json`` bitwise (shortest-repr encoding)."""
         return {
             "name": self.name, "kind": self.kind,
-            "cost": {"flops": self.cost.flops,
-                     "bytes_read": self.cost.bytes_read,
-                     "bytes_written": self.cost.bytes_written},
+            "cost": {"flops": float(self.cost.flops),
+                     "bytes_read": float(self.cost.bytes_read),
+                     "bytes_written": float(self.cost.bytes_written)},
             "multiplicity": int(self.multiplicity),
             "params": {str(k): _json_safe(v)
                        for k, v in self.params.items()},
-            "in_shapes": [list(s) for s in self.in_shapes],
-            "out_shapes": [list(s) for s in self.out_shapes],
+            "in_shapes": [[int(x) for x in s] for s in self.in_shapes],
+            "out_shapes": [[int(x) for x in s] for s in self.out_shapes],
             "dtype": self.dtype,
-            "measured_ms": self.measured_ms,
-            "predicted_ms": self.predicted_ms,
+            "measured_ms": _json_safe(self.measured_ms),
+            "predicted_ms": _json_safe(self.predicted_ms),
         }
 
     @staticmethod
@@ -83,11 +88,15 @@ class Op:
                         bytes_written=float(d["cost"]["bytes_written"])),
             multiplicity=int(d["multiplicity"]),
             params=dict(d["params"]),
-            in_shapes=tuple(tuple(s) for s in d["in_shapes"]),
-            out_shapes=tuple(tuple(s) for s in d["out_shapes"]),
+            in_shapes=tuple(tuple(int(x) for x in s)
+                            for s in d["in_shapes"]),
+            out_shapes=tuple(tuple(int(x) for x in s)
+                             for s in d["out_shapes"]),
             dtype=d["dtype"],
-            measured_ms=d["measured_ms"],
-            predicted_ms=d["predicted_ms"])
+            measured_ms=(None if d["measured_ms"] is None
+                         else float(d["measured_ms"])),
+            predicted_ms=(None if d["predicted_ms"] is None
+                          else float(d["predicted_ms"])))
 
     def feature_vector(self) -> List[float]:
         """Kind-specific op features for the MLP predictors (Sec. 3.4).
@@ -268,19 +277,27 @@ class TraceArrays:
     kind_ids: np.ndarray         # (n_ops,) int32 index into ``kinds``
     kinds: List[str]             # unique kinds, sorted
     op_features: np.ndarray      # (n_ops, 9) raw MLP op features
+    _fingerprint: Optional[str] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def n_ops(self) -> int:
         return int(self.flops.shape[0])
 
     def fingerprint(self) -> str:
-        """Stable content hash, used as a result-cache key."""
-        h = hashlib.sha1()
-        for arr in (self.flops, self.bytes_accessed, self.measured_ms,
-                    self.multiplicity, self.kind_ids, self.op_features):
-            h.update(np.ascontiguousarray(arr).tobytes())
-        h.update("|".join(self.kinds).encode())
-        return h.hexdigest()
+        """Stable content hash, used as a result-cache key.
+
+        Memoized: the serving path fingerprints every trace of every
+        query (cache keys, sweep dedup), and the arrays are treated as
+        immutable once built."""
+        if self._fingerprint is None:
+            h = hashlib.sha1()
+            for arr in (self.flops, self.bytes_accessed, self.measured_ms,
+                        self.multiplicity, self.kind_ids, self.op_features):
+                h.update(np.ascontiguousarray(arr).tobytes())
+            h.update("|".join(self.kinds).encode())
+            self._fingerprint = h.hexdigest()
+        return self._fingerprint
 
 
 @dataclasses.dataclass
@@ -290,6 +307,8 @@ class TrackedTrace:
     origin_device: str
     label: str = "iteration"
     _arrays: Optional[TraceArrays] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _fp: Optional[str] = dataclasses.field(
         default=None, repr=False, compare=False)
 
     # ---- aggregate views -------------------------------------------------
@@ -326,6 +345,7 @@ class TrackedTrace:
         Pass ``refresh=True`` after mutating ops by hand."""
         if self._arrays is not None and not refresh:
             return self._arrays
+        self._fp = None                 # fingerprint follows the arrays
         n = len(self.ops)
         kinds = sorted({op.kind for op in self.ops})
         kind_index = {k: i for i, k in enumerate(kinds)}
@@ -354,14 +374,26 @@ class TrackedTrace:
         return self._arrays
 
     def fingerprint(self) -> str:
-        """Content hash of the trace (ops + origin), for result caches."""
-        h = hashlib.sha1(self.to_arrays().fingerprint().encode())
-        h.update(self.origin_device.encode())
-        return h.hexdigest()
+        """Content hash of the trace (ops + origin), for result caches.
+
+        Memoized alongside the SoA cache (``to_arrays``); invalidated by
+        :meth:`measure` and by ``to_arrays(refresh=True)``."""
+        if self._fp is None:
+            h = hashlib.sha1(self.to_arrays().fingerprint().encode())
+            h.update(self.origin_device.encode())
+            self._fp = h.hexdigest()
+        return self._fp
 
     # ---- serialization ---------------------------------------------------
+    # Wire-format guarantees (the prediction service ships traces as
+    # these documents): from_json(to_json(t)) reproduces t's fingerprint,
+    # run_time_ms, and every prediction BITWISE — Python floats survive
+    # json round-trips exactly (shortest-repr), and to_dict coerces all
+    # numerics to native Python numbers.  to_dict(from_dict(d)) == d, so
+    # re-serialization is idempotent.  Pinned by tests/test_trace_wire.py.
     def to_dict(self) -> Dict[str, Any]:
-        """JSON-safe record: the golden-trace on-disk format."""
+        """JSON-safe record: the golden-trace on-disk and service wire
+        format (see the round-trip guarantees above)."""
         return {"origin_device": self.origin_device, "label": self.label,
                 "ops": [op.to_dict() for op in self.ops]}
 
@@ -383,6 +415,7 @@ class TrackedTrace:
     def measure(self, method: str = "simulate") -> "TrackedTrace":
         """Fill ``measured_ms`` for every op on the origin device."""
         self._arrays = None  # measured_ms changes under the SoA cache
+        self._fp = None
         if method == "simulate":
             from repro.core import simulator
             dev = devices.get(self.origin_device)

@@ -13,13 +13,28 @@ predicted against the whole fleet in ONE ragged pass
 (``FleetPlanner.sweep``), printing the (n_traces x n_devices) grid and the
 per-trace best device; a repeat query demonstrates the per-trace
 fingerprint cache.
+
+``--serve`` switches to prediction-service mode: an HTTP front end
+(``repro.serve.http``) answering ``/rank``, ``/sweep`` and ``/stats``
+queries with request coalescing.  ``--workers N`` runs a pool of N
+worker processes on consecutive ports sharing ONE sqlite result cache
+(``--cache``, auto-created when omitted), so a trace priced by any
+worker is a cache hit for all of them::
+
+  PYTHONPATH=src python -m repro.launch.serve --serve --workers 2 \\
+      --port 8100 --coalesce-ms 5
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
+import subprocess
+import sys
+import tempfile
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +44,60 @@ from repro.configs import ARCHS, get_config
 from repro.models import init_params
 from repro.models.config import smoke_config
 from repro.serve.engine import Request, ServingEngine
+
+
+def serve_http(args) -> None:
+    """Run the prediction service: in-process for one worker, a
+    subprocess pool (sharing one sqlite cache) for several."""
+    from repro.serve.http import PredictionServer, build_service
+
+    cache = args.cache
+    if args.workers > 1 and args.port == 0:
+        # each child would bind an unrelated ephemeral port and the
+        # "consecutive ports" contract (and our printed range) would lie
+        sys.exit("--port 0 (ephemeral) is only valid with --workers 1; "
+                 "pick a base port for a worker pool")
+    if args.workers > 1 and cache is None:
+        cache = str(Path(tempfile.mkdtemp(prefix="fleet-cache-"))
+                    / "cache.sqlite")
+        print(f"shared result cache: {cache}", flush=True)
+
+    if args.workers == 1:
+        service = build_service(cache=cache, coalesce_ms=args.coalesce_ms,
+                                mlps=args.fleet_mlps)
+        server = PredictionServer(service, host=args.host, port=args.port)
+        print(f"serving on {server.url}", flush=True)
+        try:
+            server.serve_forever()
+        except KeyboardInterrupt:
+            pass
+        return
+
+    env = dict(os.environ)
+    src = str(Path(__file__).resolve().parents[2])
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (src, env.get("PYTHONPATH")) if p)
+    procs = []
+    for i in range(args.workers):
+        cmd = [sys.executable, "-m", "repro.serve.http",
+               "--host", args.host,
+               "--port", str(args.port + i if args.port else 0),
+               "--coalesce-ms", str(args.coalesce_ms),
+               "--cache", cache]
+        if args.fleet_mlps:
+            cmd.append("--mlps")
+        procs.append(subprocess.Popen(cmd, env=env))
+    print(f"launched {args.workers} workers on ports "
+          f"{args.port}..{args.port + args.workers - 1} "
+          f"(shared cache: {cache})", flush=True)
+    try:
+        for p in procs:
+            p.wait()
+    except KeyboardInterrupt:
+        for p in procs:
+            p.terminate()
+        for p in procs:
+            p.wait()
 
 
 def main():
@@ -52,7 +121,24 @@ def main():
                          "fleet in one ragged pass")
     ap.add_argument("--sweep-batches", default="1,2,4",
                     help="comma-separated decode batch sizes for --sweep")
+    ap.add_argument("--serve", action="store_true",
+                    help="run the HTTP prediction service instead of the "
+                         "token-serving demo")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="HTTP worker processes (consecutive ports, one "
+                         "shared sqlite result cache)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8100)
+    ap.add_argument("--cache", default=None, metavar="PATH",
+                    help="sqlite path for the shared result cache "
+                         "(auto-created under /tmp when --workers > 1)")
+    ap.add_argument("--coalesce-ms", type=float, default=5.0,
+                    help="request-coalescing window for --serve")
     args = ap.parse_args()
+
+    if args.serve:
+        serve_http(args)
+        return
 
     cfg = get_config(args.arch)
     if args.smoke:

@@ -1,6 +1,9 @@
+from repro.serve.cache import CacheStats, LRUCache, SqliteCache, make_backend
 from repro.serve.engine import ServingEngine, Request
-from repro.serve.fleet import (CacheStats, FleetChoice, FleetPlanner,
-                               format_fleet, format_sweep)
+from repro.serve.fleet import (FleetChoice, FleetPlanner, format_fleet,
+                               format_sweep, rank_rows)
+from repro.serve.service import PredictionService
 
 __all__ = ["ServingEngine", "Request", "CacheStats", "FleetChoice",
-           "FleetPlanner", "format_fleet", "format_sweep"]
+           "FleetPlanner", "LRUCache", "PredictionService", "SqliteCache",
+           "format_fleet", "format_sweep", "make_backend", "rank_rows"]

@@ -1,0 +1,255 @@
+"""Pluggable result-cache backends for the prediction service.
+
+The fleet/sweep result cache used to live inline in ``FleetPlanner`` as a
+private ``OrderedDict``.  This module extracts it behind a small backend
+protocol so the *same* planner/service code can run against:
+
+* :class:`LRUCache` — the original in-process ``OrderedDict`` LRU, byte-
+  for-byte the previous semantics (hit moves to tail, plain assignment
+  appends, overflow pops the head, every probe counted);
+* :class:`SqliteCache` — a cross-process shared store (one sqlite file in
+  WAL mode), so N worker processes serving the same models share one
+  result set: a (trace, device) cell priced by worker A is a cache hit
+  for worker B.  Hit/miss/eviction accounting stays **per worker**
+  (in-memory), so each worker's ``/stats`` reports its own traffic while
+  the entries themselves are shared.
+
+Keys are the planner's ``(fingerprint, device, config_key, fleet_token)``
+tuples — primitives only, so their ``repr`` is a stable cross-process
+encoding.  Values are float64 milliseconds; sqlite REAL is an IEEE double,
+so shared-cache round-trips are bitwise exact.
+
+``make_backend`` maps a spelling (``None``, a path, or a ready backend)
+to a backend instance — the one resolver used by the planner, the
+service, and the HTTP CLI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import sqlite3
+import threading
+from collections import OrderedDict
+from pathlib import Path
+from typing import Iterable, List, Optional, Sequence, Tuple, Union
+
+#: a planner cache key: (trace fingerprint, device, config_key, fleet_token)
+Key = Tuple
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Per-worker hit/miss/eviction counters (shared backends included)."""
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def as_dict(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "hit_rate": round(self.hit_rate, 4)}
+
+
+class LRUCache:
+    """In-process LRU backend (the original ``FleetPlanner`` cache).
+
+    Thread-safe: every operation takes the backend lock, so concurrent
+    ``rank()`` / ``sweep()`` calls cannot corrupt the ``OrderedDict`` or
+    lose stats increments.
+    """
+
+    def __init__(self, capacity: int = 4096):
+        self.capacity = capacity
+        self.data: "OrderedDict[Key, float]" = OrderedDict()
+        self.stats = CacheStats()
+        self._lock = threading.Lock()
+
+    def describe(self) -> str:
+        return f"lru(capacity={self.capacity})"
+
+    def get(self, key: Key) -> Optional[float]:
+        """Hit-or-miss with stats accounting (hit refreshes LRU order)."""
+        with self._lock:
+            if key in self.data:
+                self.data.move_to_end(key)
+                self.stats.hits += 1
+                return self.data[key]
+            self.stats.misses += 1
+            return None
+
+    def get_many(self, keys: Sequence[Key]) -> List[Optional[float]]:
+        """Batched :meth:`get`: one lock acquisition for a whole probe set.
+
+        Accounting and LRU refresh are per key, in order — byte-identical
+        to calling ``get`` in a loop, minus ~len(keys) lock round-trips
+        (the planner probes n_traces x n_devices cells per query, so the
+        lock traffic is measurable on the serving hot path)."""
+        out: List[Optional[float]] = []
+        with self._lock:
+            for key in keys:
+                if key in self.data:
+                    self.data.move_to_end(key)
+                    self.stats.hits += 1
+                    out.append(self.data[key])
+                else:
+                    self.stats.misses += 1
+                    out.append(None)
+        return out
+
+    def put_many(self, items: Iterable[Tuple[Key, float]]) -> None:
+        """Insert computed cells, then evict LRU overflow.
+
+        Plain assignment appends fresh keys at the LRU tail — identical
+        insertion/eviction order to the pre-extraction planner cache."""
+        with self._lock:
+            for key, ms in items:
+                self.data[key] = ms
+            while len(self.data) > self.capacity:
+                self.data.popitem(last=False)
+                self.stats.evictions += 1
+
+    def clear(self) -> None:
+        with self._lock:
+            self.data.clear()
+            self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        return len(self.data)
+
+
+class SqliteCache:
+    """Cross-process shared backend: one sqlite file, N workers.
+
+    * WAL journaling + a busy timeout make concurrent reader/writer
+      workers safe without any cross-process lock of our own.
+    * Reads are PURE reads (no tick refresh): WAL allows any number of
+      concurrent readers but only one writer, so a hit must never queue
+      on the write lock — the hot path this cache exists to serve.
+      Eviction order is therefore write-recency (a monotone ``tick``
+      bumped on insert/overwrite), not strict LRU; each worker seeds its
+      tick counter from the table's current max, so ticks stay roughly
+      global across workers (eviction only has to be *sane*, not
+      identical to the in-proc LRU).
+    * ``stats`` counts only THIS worker's probes/evictions; the shared
+      entry count is ``len(backend)``.
+    """
+
+    _SCHEMA = ("CREATE TABLE IF NOT EXISTS cache ("
+               "k TEXT PRIMARY KEY, ms REAL NOT NULL, "
+               "tick INTEGER NOT NULL)")
+
+    def __init__(self, path: Union[str, Path], capacity: int = 262144):
+        self.path = Path(path)
+        self.capacity = capacity
+        self.stats = CacheStats()
+        self._lock = threading.Lock()   # serializes this worker's conn
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self._conn = sqlite3.connect(self.path, timeout=30.0,
+                                     check_same_thread=False)
+        with self._lock:
+            self._conn.execute("PRAGMA journal_mode=WAL")
+            self._conn.execute("PRAGMA synchronous=NORMAL")
+            self._conn.execute(self._SCHEMA)
+            self._conn.commit()
+            row = self._conn.execute(
+                "SELECT COALESCE(MAX(tick), 0) FROM cache").fetchone()
+        self._tick = int(row[0])
+
+    def describe(self) -> str:
+        return f"sqlite({self.path}, capacity={self.capacity})"
+
+    @staticmethod
+    def _encode(key: Key) -> str:
+        # planner keys hold only str/bool/int/tuple primitives, whose repr
+        # is deterministic and identical across worker processes
+        return repr(key)
+
+    def get(self, key: Key) -> Optional[float]:
+        with self._lock:
+            row = self._conn.execute(
+                "SELECT ms FROM cache WHERE k = ?",
+                (self._encode(key),)).fetchone()
+        if row is None:
+            self.stats.misses += 1
+            return None
+        self.stats.hits += 1
+        return float(row[0])
+
+    def get_many(self, keys: Sequence[Key]) -> List[Optional[float]]:
+        """Batched :meth:`get` (pure reads, one lock hold)."""
+        out: List[Optional[float]] = []
+        with self._lock:
+            for key in keys:
+                row = self._conn.execute(
+                    "SELECT ms FROM cache WHERE k = ?",
+                    (self._encode(key),)).fetchone()
+                if row is None:
+                    self.stats.misses += 1
+                    out.append(None)
+                else:
+                    self.stats.hits += 1
+                    out.append(float(row[0]))
+        return out
+
+    def put_many(self, items: Sequence[Tuple[Key, float]]) -> None:
+        items = list(items)
+        if not items:
+            return
+        with self._lock:
+            rows = []
+            for key, ms in items:
+                self._tick += 1
+                rows.append((self._encode(key), float(ms), self._tick))
+            self._conn.executemany(
+                "INSERT INTO cache (k, ms, tick) VALUES (?, ?, ?) "
+                "ON CONFLICT(k) DO UPDATE SET ms=excluded.ms, "
+                "tick=excluded.tick", rows)
+            over = (self._conn.execute(
+                "SELECT COUNT(*) FROM cache").fetchone()[0] - self.capacity)
+            if over > 0:
+                cur = self._conn.execute(
+                    "DELETE FROM cache WHERE k IN (SELECT k FROM cache "
+                    "ORDER BY tick LIMIT ?)", (over,))
+                self.stats.evictions += cur.rowcount
+            self._conn.commit()
+
+    def clear(self) -> None:
+        """Drop all SHARED entries and reset this worker's counters."""
+        with self._lock:
+            self._conn.execute("DELETE FROM cache")
+            self._conn.commit()
+            self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return int(self._conn.execute(
+                "SELECT COUNT(*) FROM cache").fetchone()[0])
+
+    def close(self) -> None:
+        with self._lock:
+            self._conn.close()
+
+
+#: anything ``make_backend`` accepts
+BackendLike = Union[None, str, Path, LRUCache, SqliteCache]
+
+
+def make_backend(cache: BackendLike = None,
+                 capacity: int = 4096) -> Union[LRUCache, SqliteCache]:
+    """Resolve a cache spelling to a backend instance.
+
+    ``None`` -> fresh in-process LRU; a str/Path -> sqlite shared backend
+    at that file; a ready backend passes through (``capacity`` ignored).
+    """
+    if cache is None:
+        return LRUCache(capacity)
+    if isinstance(cache, (str, Path)):
+        return SqliteCache(cache, capacity=max(capacity, 4096))
+    if hasattr(cache, "get") and hasattr(cache, "put_many"):
+        return cache
+    raise TypeError(f"not a cache backend or path: {cache!r}")

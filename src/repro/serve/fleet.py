@@ -9,14 +9,21 @@ same question to many traces at once (batch sizes, model variants) through
 the ragged multi-trace engine — one (n_traces x n_devices) grid per query.
 
 Results are memoized per (trace fingerprint, device, predictor config,
-fleet token) in an LRU cache, so repeated queries — the common serving
-pattern, where many users ask about the same public model — only pay for
-devices not yet seen for that trace.  The fleet token hashes the fleet's
-membership *and* the member specs as resolved when the fleet was
-assigned, so swapping ``planner.fleet`` can never serve entries minted
-under the old membership.  (The device registry itself is append-only —
-``register`` refuses duplicates — so specs cannot drift *between*
-assignments within a process.)
+fleet token) in a pluggable cache backend (:mod:`repro.serve.cache`):
+the default in-process LRU, or a sqlite-backed store shared by several
+worker processes.  Repeated queries — the common serving pattern, where
+many users ask about the same public model — only pay for devices not
+yet seen for that trace.  The fleet token hashes the fleet's membership
+*and* the member specs as resolved when the fleet was assigned, so
+swapping ``planner.fleet`` can never serve entries minted under the old
+membership.  (The device registry itself is append-only — ``register``
+refuses duplicates — so specs cannot drift *between* assignments within
+a process.)
+
+Layering: this module is the *policy* layer — ranking objectives, fleet
+tokens, cache-key discipline.  Request coalescing and the wire format
+live one level up in :mod:`repro.serve.service`; transports above that
+(:mod:`repro.serve.http`).
 """
 
 from __future__ import annotations
@@ -24,7 +31,6 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import threading
-from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -32,6 +38,10 @@ import numpy as np
 from repro.core import cost as cost_mod
 from repro.core import devices
 from repro.core.trace import TrackedTrace
+from repro.serve.cache import BackendLike, CacheStats, make_backend
+
+__all__ = ["CacheStats", "FleetChoice", "FleetPlanner", "format_fleet",
+           "format_sweep", "rank_rows"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,37 +55,67 @@ class FleetChoice:
     speedup_vs_origin: float
 
 
-@dataclasses.dataclass
-class CacheStats:
-    hits: int = 0
-    misses: int = 0
-    evictions: int = 0
+def rank_rows(times: Dict[str, float], batch_size: int, origin_ms: float,
+              by: str = "throughput") -> List["FleetChoice"]:
+    """Turn a ``{device: iter_ms}`` row into a ranked fleet.
 
-    @property
-    def hit_rate(self) -> float:
-        total = self.hits + self.misses
-        return self.hits / total if total else 0.0
+    The ONE ranking spelling, shared by :meth:`FleetPlanner.rank` and the
+    coalescing service, so a coalesced answer is bitwise-identical to a
+    direct planner answer.  ``by`` is "throughput" (speed) or "cost"
+    (samples/$); devices with no rental price rank last under "cost".
+    A price of **0.0 is a real price** (free tier / already-owned
+    hardware): its samples/$ is ``inf`` and it ranks first — only
+    ``None`` means "not rentable" and ranks last."""
+    if by not in ("throughput", "cost"):
+        raise ValueError(f"unknown ranking objective {by!r}")
+    rows = []
+    for name, ms in times.items():
+        spec = devices.get(name)
+        tput = cost_mod.throughput(batch_size, ms)
+        cn = (cost_mod.cost_normalized_throughput(
+                  batch_size, ms, spec.cost_per_hour)
+              if spec.cost_per_hour is not None else None)
+        rows.append(FleetChoice(
+            device=name, iter_ms=ms, throughput=tput,
+            cost_per_hour=spec.cost_per_hour, cost_normalized=cn,
+            speedup_vs_origin=origin_ms / ms))
+    if by == "cost":
+        # secondary key (device name) makes equal-score ordering stable
+        rows.sort(key=lambda c: (-(c.cost_normalized or 0.0), c.device))
+    else:
+        rows.sort(key=lambda c: (-c.throughput, c.device))
+    return rows
 
 
 class FleetPlanner:
-    """Answer fleet queries with an LRU-cached vectorized predictor.
+    """Answer fleet queries with a cached vectorized predictor.
 
     ``predictor`` is any object exposing ``predict_fleet(trace, dests)``
     and ``config_key()`` (all predictors in :mod:`repro.core.predictor`
-    do); ``fleet`` defaults to every registered device."""
+    do); ``fleet`` defaults to every registered device.  ``cache``
+    accepts anything :func:`repro.serve.cache.make_backend` does: None
+    (fresh in-process LRU of ``cache_size`` entries), a sqlite path
+    (cross-process shared store), or a ready backend instance —
+    ``engine_passes`` counts how many times the underlying engine
+    actually ran (one per predict/sweep call with any cache miss)."""
 
     def __init__(self, predictor=None, fleet: Optional[Sequence[str]] = None,
-                 cache_size: int = 4096):
+                 cache_size: int = 4096, cache: BackendLike = None):
         if predictor is None:
             from repro.core.predictor import HabitatPredictor
             predictor = HabitatPredictor()
         self.predictor = predictor
         self.cache_size = cache_size
-        self.stats = CacheStats()
-        self._cache: "OrderedDict[Tuple, float]" = OrderedDict()
+        self.cache = make_backend(cache, cache_size)
+        self.engine_passes = 0
         self._lock = threading.Lock()   # before the fleet setter needs it
         self.fleet = (sorted(devices.all_devices()) if fleet is None
                       else list(fleet))
+
+    @property
+    def stats(self) -> CacheStats:
+        """This planner's cache accounting (per-worker for shared backends)."""
+        return self.cache.stats
 
     # -- fleet -------------------------------------------------------------
     @property
@@ -117,34 +157,46 @@ class FleetPlanner:
             return (list(self._fleet) if dests is None else list(dests),
                     self._fleet_token)
 
-    def _probe(self, key: Tuple) -> Optional[float]:
-        """LRU hit-or-miss with stats accounting.  Caller holds the lock.
+    @property
+    def _cache(self):
+        """The in-process LRU's backing ``OrderedDict`` (compat shim).
+
+        Pre-extraction code (and a couple of white-box tests) reached
+        into ``planner._cache`` directly; shared backends have no single
+        in-memory dict, so this shim only exists for :class:`LRUCache`."""
+        return self.cache.data
+
+    @_cache.setter
+    def _cache(self, data) -> None:
+        self.cache.data = data
+
+    def _probe_many(self, keys: Sequence[Tuple]) -> List[Optional[float]]:
+        """Backend hit-or-miss with stats accounting, one round-trip per
+        query rather than per cell.
 
         The ONE lookup used by both predict() and sweep(), so their
-        hit/miss semantics cannot drift."""
-        if key in self._cache:
-            self._cache.move_to_end(key)
-            self.stats.hits += 1
-            return self._cache[key]
-        self.stats.misses += 1
-        return None
+        hit/miss semantics cannot drift (falls back to per-key ``get``
+        for backends without ``get_many`` — accounting is identical
+        either way)."""
+        get_many = getattr(self.cache, "get_many", None)
+        if get_many is not None:
+            return list(get_many(keys))
+        return [self.cache.get(k) for k in keys]
 
     def _store(self, items: Sequence[Tuple[Tuple, float]]) -> None:
-        """Insert computed cells and evict LRU overflow, under the lock.
+        """Insert computed cells (backend evicts LRU overflow).
 
-        Plain assignment appends fresh keys at the LRU tail; the ONE
-        write path shared by predict() and sweep()."""
+        The ONE write path shared by predict() and sweep(); counts one
+        engine pass, since every store follows exactly one engine call."""
         with self._lock:
-            for key, ms in items:
-                self._cache[key] = ms
-            while len(self._cache) > self.cache_size:
-                self._cache.popitem(last=False)
-                self.stats.evictions += 1
+            self.engine_passes += 1
+        self.cache.put_many(items)
 
     def clear_cache(self) -> None:
+        """Reset cached results, stats, and the engine-pass counter."""
+        self.cache.clear()
         with self._lock:
-            self._cache.clear()
-            self.stats = CacheStats()
+            self.engine_passes = 0
 
     # -- queries -----------------------------------------------------------
     def predict(self, trace: TrackedTrace,
@@ -158,13 +210,13 @@ class FleetPlanner:
         ck = self.predictor.config_key()
         out: Dict[str, float] = {}
         missing: List[str] = []
-        with self._lock:
-            for name in dests:
-                ms = self._probe(self._key(fp, name, ck, token))
-                if ms is not None:
-                    out[name] = ms
-                else:
-                    missing.append(name)
+        probes = self._probe_many([self._key(fp, name, ck, token)
+                                   for name in dests])
+        for name, ms in zip(dests, probes):
+            if ms is not None:
+                out[name] = ms
+            else:
+                missing.append(name)
         if missing:
             fleet = self.predictor.predict_fleet(trace, missing)
             totals = fleet.total_ms
@@ -200,14 +252,16 @@ class FleetPlanner:
         fps = [t.fingerprint() for t in traces]
         out: List[Dict[str, float]] = [{} for _ in traces]
         missing: Dict[int, List[str]] = {}
-        with self._lock:
-            for i, fp in enumerate(fps):
-                for name in dests:
-                    ms = self._probe(self._key(fp, name, ck, token))
-                    if ms is not None:
-                        out[i][name] = ms
-                    else:
-                        missing.setdefault(i, []).append(name)
+        probes = self._probe_many([self._key(fp, name, ck, token)
+                                   for fp in fps for name in dests])
+        it = iter(probes)
+        for i in range(len(fps)):
+            for name in dests:
+                ms = next(it)
+                if ms is not None:
+                    out[i][name] = ms
+                else:
+                    missing.setdefault(i, []).append(name)
         if missing:
             # one RECTANGULAR ragged pass: [traces with any miss] x [union
             # of missed devices].  Cells of that grid that were cache hits
@@ -221,14 +275,27 @@ class FleetPlanner:
             totals = self._sweep_totals([traces[i] for i in run], union)
             items: List[Tuple[Tuple, float]] = []
             for row, i in enumerate(run):
+                vals = totals[row].tolist()   # C-level float conversion
+                if len(miss_sets[i]) == len(union) == len(dests):
+                    # fast path: the whole row was missing (cold sweep)
+                    out[i] = dict(zip(dests, vals))
+                    items.extend((self._key(fps[i], name, ck, token), ms)
+                                 for name, ms in zip(dests, vals))
+                    continue
                 for j, name in enumerate(union):
-                    if name not in miss_sets[i]:
-                        continue
-                    ms = float(totals[row, j])
-                    out[i][name] = ms
-                    items.append((self._key(fps[i], name, ck, token), ms))
+                    if name in miss_sets[i]:
+                        ms = vals[j]
+                        out[i][name] = ms
+                        items.append(
+                            (self._key(fps[i], name, ck, token), ms))
             self._store(items)
-        return [{name: row[name] for name in dests} for row in out]
+        # rows built on the hit path or the fast path are already in
+        # ``dests`` iteration order; only hit/miss-mixed rows need the
+        # reordering rebuild
+        mixed = {i for i, names in missing.items()
+                 if 0 < len(names) < len(dests)}
+        return [{name: row[name] for name in dests} if i in mixed else row
+                for i, row in enumerate(out)]
 
     def _sweep_totals(self, traces: Sequence[TrackedTrace],
                       dests: Sequence[str]):
@@ -248,28 +315,11 @@ class FleetPlanner:
              by: str = "throughput") -> List[FleetChoice]:
         """Ranked fleet: ``by`` is "throughput" (speed) or "cost" ($/sample).
 
-        Devices with no rental price rank last under ``by="cost"``."""
-        if by not in ("throughput", "cost"):
-            raise ValueError(f"unknown ranking objective {by!r}")
-        times = self.predict(trace, dests)
-        origin_ms = trace.run_time_ms
-        rows = []
-        for name, ms in times.items():
-            spec = devices.get(name)
-            tput = cost_mod.throughput(batch_size, ms)
-            cn = (cost_mod.cost_normalized_throughput(
-                      batch_size, ms, spec.cost_per_hour)
-                  if spec.cost_per_hour else None)
-            rows.append(FleetChoice(
-                device=name, iter_ms=ms, throughput=tput,
-                cost_per_hour=spec.cost_per_hour, cost_normalized=cn,
-                speedup_vs_origin=origin_ms / ms))
-        if by == "cost":
-            # secondary key (device name) makes equal-score ordering stable
-            rows.sort(key=lambda c: (-(c.cost_normalized or 0.0), c.device))
-        else:
-            rows.sort(key=lambda c: (-c.throughput, c.device))
-        return rows
+        Devices with no rental price rank last under ``by="cost"``; the
+        row math and ordering live in :func:`rank_rows` (shared with the
+        coalescing service, so both spellings are bitwise-identical)."""
+        return rank_rows(self.predict(trace, dests), batch_size,
+                         trace.run_time_ms, by)
 
 
 def format_fleet(choices: Sequence[FleetChoice]) -> str:

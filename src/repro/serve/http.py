@@ -1,0 +1,254 @@
+"""HTTP front end for the prediction service (stdlib only).
+
+One worker process = one :class:`PredictionServer` wrapping a
+:class:`~repro.serve.service.PredictionService` behind a threading
+``http.server``.  The threaded server matters: coalescing only happens
+when concurrent requests are *in flight* together, so each request must
+get its own handler thread.  Run several workers against one sqlite
+cache path (``launch/serve.py --serve --workers N``) and they share one
+result store while coalescing independently.
+
+Endpoints (all JSON):
+
+* ``POST /rank``  — ``{"trace": <TrackedTrace doc>, "batch_size": int,
+  "by"?: "throughput"|"cost", "dests"?: [device, ...]}`` ->
+  ``{"label", "ranking": [FleetChoice dicts, best first]}``
+* ``POST /sweep`` — ``{"traces": [<trace doc>, ...], "dests"?: [...]}``
+  -> ``{"labels", "times": [{device: ms}, ...]}``
+* ``GET /stats``  — request/coalescing/cache/engine-pass accounting
+* ``GET /healthz`` — liveness probe
+
+Trace docs are ``TrackedTrace.to_dict()`` objects (or ``to_json()``
+strings); numbers round-trip through ``json`` via shortest-repr floats,
+so an HTTP answer is bitwise-identical to the in-process answer.
+
+Module CLI (one worker)::
+
+    PYTHONPATH=src python -m repro.serve.http --port 0 \
+        --cache /tmp/fleet-cache.sqlite --coalesce-ms 5
+
+``--port 0`` binds an ephemeral port; the actual address is printed as
+``serving on http://host:port`` (machine-parsable, used by the
+multi-worker launcher and the tests).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import urllib.request
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Dict, List, Optional, Sequence
+
+from repro.serve.service import PredictionService
+
+__all__ = ["PredictionServer", "PredictionClient", "main"]
+
+_MAX_BODY = 64 * 1024 * 1024    # refuse absurd payloads, not big sweeps
+
+
+class _Handler(BaseHTTPRequestHandler):
+    # the service lives on the server object (set by PredictionServer)
+    protocol_version = "HTTP/1.1"
+
+    def _reply(self, code: int, payload: Dict) -> None:
+        # allow_nan=False: every body must be strict RFC-8259 JSON (the
+        # service spells non-finite numbers as strings on the wire); a
+        # stray inf/nan raises here and surfaces as a 400/500, never as
+        # an unparsable 200
+        body = json.dumps(payload, allow_nan=False).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _read_json(self) -> Optional[Dict]:
+        length = int(self.headers.get("Content-Length", 0))
+        if length <= 0 or length > _MAX_BODY:
+            self._reply(400, {"error": f"bad Content-Length {length}"})
+            return None
+        try:
+            return json.loads(self.rfile.read(length))
+        except (json.JSONDecodeError, UnicodeDecodeError) as e:
+            self._reply(400, {"error": f"invalid JSON body: {e}"})
+            return None
+
+    def do_GET(self) -> None:  # noqa: N802 (http.server API)
+        service: PredictionService = self.server.service
+        if self.path == "/healthz":
+            self._reply(200, {"ok": True})
+        elif self.path == "/stats":
+            self._reply(200, service.stats())
+        else:
+            self._reply(404, {"error": f"unknown path {self.path!r}"})
+
+    def do_POST(self) -> None:  # noqa: N802
+        service: PredictionService = self.server.service
+        if self.path not in ("/rank", "/sweep"):
+            self._reply(404, {"error": f"unknown path {self.path!r}"})
+            return
+        payload = self._read_json()
+        if payload is None:
+            return
+        try:
+            if self.path == "/rank":
+                self._reply(200, service.rank_request(payload))
+            else:
+                self._reply(200, service.sweep_request(payload))
+        except (KeyError, ValueError, TypeError) as e:
+            # malformed request / unknown device: client error, not 500
+            self._reply(400, {"error": f"{type(e).__name__}: {e}"})
+        except Exception as e:  # engine failure: do not kill the worker
+            self._reply(500, {"error": f"{type(e).__name__}: {e}"})
+
+    def log_message(self, fmt, *args) -> None:
+        pass    # request logging off: stdout is the launcher protocol
+
+
+class PredictionServer:
+    """A threading HTTP server bound to one PredictionService."""
+
+    def __init__(self, service: PredictionService,
+                 host: str = "127.0.0.1", port: int = 0):
+        self.service = service
+        self._httpd = ThreadingHTTPServer((host, port), _Handler)
+        self._httpd.daemon_threads = True
+        self._httpd.service = service
+        self._thread: Optional[threading.Thread] = None
+
+    @property
+    def host(self) -> str:
+        return self._httpd.server_address[0]
+
+    @property
+    def port(self) -> int:
+        return self._httpd.server_address[1]
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def serve_forever(self) -> None:
+        """Serve on the calling thread (the worker-process entry point)."""
+        self._httpd.serve_forever()
+
+    def start(self) -> "PredictionServer":
+        """Serve on a daemon thread (in-process embedding, examples)."""
+        self._thread = threading.Thread(target=self.serve_forever,
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def shutdown(self) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+
+
+class PredictionClient:
+    """Minimal JSON client for the endpoints above (stdlib urllib).
+
+    Traces are shipped as ``TrackedTrace`` objects (encoded via
+    ``to_dict``) or pre-encoded docs; responses come back as plain dicts
+    exactly as the service produced them."""
+
+    def __init__(self, url: str, timeout: float = 60.0):
+        self.url = url.rstrip("/")
+        self.timeout = timeout
+
+    @staticmethod
+    def _encode_trace(trace) -> Dict:
+        return trace.to_dict() if hasattr(trace, "to_dict") else trace
+
+    def _get(self, path: str) -> Dict:
+        with urllib.request.urlopen(self.url + path,
+                                    timeout=self.timeout) as resp:
+            return json.loads(resp.read())
+
+    def _post(self, path: str, payload: Dict) -> Dict:
+        req = urllib.request.Request(
+            self.url + path, data=json.dumps(payload).encode(),
+            headers={"Content-Type": "application/json"}, method="POST")
+        with urllib.request.urlopen(req, timeout=self.timeout) as resp:
+            return json.loads(resp.read())
+
+    def healthz(self) -> Dict:
+        return self._get("/healthz")
+
+    def stats(self) -> Dict:
+        return self._get("/stats")
+
+    def rank(self, trace, batch_size: int, by: str = "throughput",
+             dests: Optional[Sequence[str]] = None) -> List[Dict]:
+        """Ranked fleet rows (``FleetChoice`` dicts), best first."""
+        payload = {"trace": self._encode_trace(trace),
+                   "batch_size": batch_size, "by": by}
+        if dests is not None:
+            payload["dests"] = list(dests)
+        rows = self._post("/rank", payload)["ranking"]
+        for r in rows:      # decode the wire spelling of a free device
+            if r["cost_normalized"] == "Infinity":
+                r["cost_normalized"] = float("inf")
+        return rows
+
+    def sweep(self, traces, dests: Optional[Sequence[str]] = None
+              ) -> List[Dict[str, float]]:
+        """One ``{device: iter_ms}`` dict per trace, input order."""
+        payload = {"traces": [self._encode_trace(t) for t in traces]}
+        if dests is not None:
+            payload["dests"] = list(dests)
+        return self._post("/sweep", payload)["times"]
+
+
+def build_service(cache: Optional[str] = None, cache_size: int = 4096,
+                  coalesce_ms: float = 5.0, flush_at: int = 64,
+                  mlps: bool = False,
+                  fleet: Optional[Sequence[str]] = None
+                  ) -> PredictionService:
+    """Service factory shared by the CLI and the multi-worker launcher."""
+    from repro.core import HabitatPredictor, default_predictor
+    predictor = default_predictor() if mlps else HabitatPredictor()
+    return PredictionService(predictor=predictor, fleet=fleet, cache=cache,
+                            cache_size=cache_size,
+                            coalesce_window_ms=coalesce_ms,
+                            flush_at=flush_at)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> None:
+    ap = argparse.ArgumentParser(
+        description="one prediction-service HTTP worker")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8080,
+                    help="0 binds an ephemeral port (printed on stdout)")
+    ap.add_argument("--cache", default=None, metavar="PATH",
+                    help="sqlite file for the cross-process shared result "
+                         "cache (default: per-worker in-process LRU)")
+    ap.add_argument("--cache-size", type=int, default=262144)
+    ap.add_argument("--coalesce-ms", type=float, default=5.0,
+                    help="request-coalescing window in milliseconds")
+    ap.add_argument("--flush-at", type=int, default=64,
+                    help="queue length that fires a batch early")
+    ap.add_argument("--mlps", action="store_true",
+                    help="trained-MLP predictor (loads/trains artifacts)")
+    ap.add_argument("--fleet", default=None,
+                    help="comma-separated device subset (default: all)")
+    args = ap.parse_args(argv)
+
+    fleet = args.fleet.split(",") if args.fleet else None
+    service = build_service(cache=args.cache, cache_size=args.cache_size,
+                            coalesce_ms=args.coalesce_ms,
+                            flush_at=args.flush_at, mlps=args.mlps,
+                            fleet=fleet)
+    server = PredictionServer(service, host=args.host, port=args.port)
+    print(f"serving on {server.url}", flush=True)   # launcher/test protocol
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        pass
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,298 @@
+"""Transport-agnostic prediction service: coalesced fleet queries.
+
+``PredictionService`` sits between a transport (HTTP in
+:mod:`repro.serve.http`, or plain Python threads in-process) and the
+:class:`~repro.serve.fleet.FleetPlanner` policy layer.  Its job is
+**request coalescing**: concurrent rank/sweep queries arriving within a
+short window are stacked into ONE ragged ``predict_sweep`` pass instead
+of paying one engine dispatch per request.
+
+How a request flows::
+
+    rank()/sweep()/submit_*()  ->  enqueue on the pending list
+        the first request of a batch elects a LEADER (a daemon thread):
+        it waits out the coalescing window (or until ``flush_at``
+        requests queued), takes the whole queue, and executes it;
+        waiters block on their handle, non-blocking submitters collect
+        results later via ``PendingQuery.get``.
+    execute:  group by destination fleet -> dedupe traces by fingerprint
+              -> one planner.sweep() per group -> fan results back out.
+
+Answer fidelity: the ranking math is :func:`repro.serve.fleet.rank_rows`
+— the same function ``FleetPlanner.rank`` uses — and on the analytical
+prediction paths a ragged sweep row is bitwise-identical to a solo
+``predict_fleet`` call (pinned by the golden-trace suite), so a
+coalesced answer equals the direct planner answer bit for bit.
+Deduplication also makes cache accounting exact: K concurrent queries
+for the same trace cost exactly one miss per unique
+(trace, device, config, fleet) key.
+
+Wire format: ``rank_request``/``sweep_request`` accept JSON payloads
+whose traces are ``TrackedTrace.to_json``/``to_dict`` documents, so any
+transport that can move JSON can front this service.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import threading
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core.trace import TrackedTrace
+from repro.serve.cache import BackendLike
+from repro.serve.fleet import FleetChoice, FleetPlanner, rank_rows
+
+__all__ = ["PredictionService"]
+
+
+@dataclasses.dataclass
+class PendingQuery:
+    """A submitted query: wait on :meth:`get` (the async-submit handle)."""
+    kind: str                                   # "rank" | "sweep"
+    traces: List[TrackedTrace]
+    dests: Optional[Tuple[str, ...]]
+    batch_size: int = 0
+    by: str = "throughput"
+    done: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+    result: Any = None
+    error: Optional[BaseException] = None
+
+    def get(self, timeout: Optional[float] = None):
+        """Block until the batch containing this query executed."""
+        if not self.done.wait(timeout):
+            raise TimeoutError(f"{self.kind} query still pending")
+        if self.error is not None:
+            raise self.error
+        return self.result
+
+
+class PredictionService:
+    """Coalesce concurrent fleet queries into ragged engine passes.
+
+    Parameters
+    ----------
+    planner:
+        A ready :class:`FleetPlanner`; built from the remaining kwargs
+        when omitted.
+    predictor / fleet / cache / cache_size:
+        Forwarded to :class:`FleetPlanner` (``cache`` accepts a sqlite
+        path for the cross-process shared backend).
+    coalesce_window_ms:
+        How long the first request of a batch waits for company before
+        the batch executes.  0 still coalesces whatever queued while a
+        previous batch was executing; larger windows trade per-request
+        latency for fewer engine passes.
+    flush_at:
+        Queue length that fires the batch early — lets barrier-style
+        bursts (benchmarks, load tests) execute the instant the burst is
+        fully queued instead of waiting out the window.
+    """
+
+    def __init__(self, planner: Optional[FleetPlanner] = None,
+                 predictor=None, fleet: Optional[Sequence[str]] = None,
+                 cache: BackendLike = None, cache_size: int = 4096,
+                 coalesce_window_ms: float = 5.0, flush_at: int = 64):
+        if planner is None:
+            planner = FleetPlanner(predictor=predictor, fleet=fleet,
+                                   cache_size=cache_size, cache=cache)
+        self.planner = planner
+        self.coalesce_window_ms = float(coalesce_window_ms)
+        self.flush_at = max(int(flush_at), 1)
+        self._cond = threading.Condition()
+        self._pending: List[PendingQuery] = []
+        self._leader_active = False
+        # counters (mutated under self._cond)
+        self._requests = {"rank": 0, "sweep": 0}
+        self._batches = 0
+        self._coalesced_requests = 0    # requests that shared their batch
+        self._max_batch = 0
+
+    # -- public query API ---------------------------------------------------
+    def rank(self, trace: TrackedTrace, batch_size: int,
+             by: str = "throughput",
+             dests: Optional[Sequence[str]] = None) -> List[FleetChoice]:
+        """Coalesced equivalent of ``FleetPlanner.rank`` (same answer)."""
+        return self._submit(self.submit_rank(trace, batch_size, by, dests))
+
+    def sweep(self, traces: Sequence[TrackedTrace],
+              dests: Optional[Sequence[str]] = None
+              ) -> List[Dict[str, float]]:
+        """Coalesced equivalent of ``FleetPlanner.sweep`` (same answer)."""
+        return self._submit(self.submit_sweep(traces, dests))
+
+    # -- non-blocking submission --------------------------------------------
+    def submit_rank(self, trace: TrackedTrace, batch_size: int,
+                    by: str = "throughput",
+                    dests: Optional[Sequence[str]] = None) -> PendingQuery:
+        """Enqueue a rank query without blocking; ``handle.get()`` waits.
+
+        Lets a transport with its own event loop (or a burst generator)
+        keep many queries in flight from one thread — they coalesce
+        exactly like queries from concurrent threads."""
+        if by not in ("throughput", "cost"):    # fail before queueing: a
+            # bad request must never poison the batch it would share
+            raise ValueError(f"unknown ranking objective {by!r}")
+        req = PendingQuery(kind="rank", traces=[trace],
+                           dests=tuple(dests) if dests is not None else None,
+                           batch_size=int(batch_size), by=by)
+        self._enqueue(req)
+        return req
+
+    def submit_sweep(self, traces: Sequence[TrackedTrace],
+                     dests: Optional[Sequence[str]] = None) -> PendingQuery:
+        """Enqueue a sweep query without blocking; ``handle.get()`` waits."""
+        traces = list(traces)
+        if not traces:
+            raise ValueError("sweep needs at least one trace")
+        req = PendingQuery(kind="sweep", traces=traces,
+                           dests=tuple(dests) if dests is not None else None)
+        self._enqueue(req)
+        return req
+
+    # -- wire format --------------------------------------------------------
+    @staticmethod
+    def _trace_from_wire(doc: Union[str, Dict]) -> TrackedTrace:
+        """Decode one trace from its JSON wire spelling (str or dict)."""
+        if isinstance(doc, str):
+            return TrackedTrace.from_json(doc)
+        return TrackedTrace.from_dict(doc)
+
+    def rank_request(self, payload: Union[str, Dict]) -> Dict:
+        """Serve one wire-format rank query.
+
+        Payload: ``{"trace": <to_dict() doc or to_json() str>,
+        "batch_size": int, "by"?: "throughput"|"cost",
+        "dests"?: [device, ...]}``.  Returns ``{"label", "ranking"}``
+        where ranking rows are ``FleetChoice`` dicts, best first."""
+        p = json.loads(payload) if isinstance(payload, str) else payload
+        trace = self._trace_from_wire(p["trace"])
+        choices = self.rank(trace, int(p["batch_size"]),
+                            by=p.get("by", "throughput"),
+                            dests=p.get("dests"))
+        return {"label": trace.label,
+                "ranking": [self._wire_choice(c) for c in choices]}
+
+    @staticmethod
+    def _wire_choice(choice: FleetChoice) -> Dict:
+        """FleetChoice as a strictly-JSON-safe dict.
+
+        A free device's samples/$ is ``float("inf")`` (see
+        ``cost_normalized_throughput``), which ``json.dumps`` would emit
+        as the RFC-8259-invalid token ``Infinity`` — strict parsers
+        (browsers, jq, Go) reject the whole body.  The wire spelling is
+        the string ``"Infinity"``; ``PredictionClient`` decodes it back."""
+        d = dataclasses.asdict(choice)
+        if d["cost_normalized"] == float("inf"):
+            d["cost_normalized"] = "Infinity"
+        return d
+
+    def sweep_request(self, payload: Union[str, Dict]) -> Dict:
+        """Serve one wire-format sweep query.
+
+        Payload: ``{"traces": [<trace doc>, ...], "dests"?: [...]}``.
+        Returns ``{"labels": [...], "times": [{device: ms}, ...]}`` in
+        input trace order."""
+        p = json.loads(payload) if isinstance(payload, str) else payload
+        traces = [self._trace_from_wire(t) for t in p["traces"]]
+        rows = self.sweep(traces, dests=p.get("dests"))
+        return {"labels": [t.label for t in traces], "times": rows}
+
+    def stats(self) -> Dict:
+        """Service + cache accounting (the ``/stats`` payload)."""
+        with self._cond:
+            requests = dict(self._requests)
+            coalescing = {
+                "batches": self._batches,
+                "coalesced_requests": self._coalesced_requests,
+                "max_batch": self._max_batch,
+                "window_ms": self.coalesce_window_ms,
+                "flush_at": self.flush_at,
+            }
+        cache = self.planner.stats.as_dict()
+        cache["backend"] = self.planner.cache.describe()
+        cache["entries"] = len(self.planner.cache)
+        return {"requests": requests, "coalescing": coalescing,
+                "engine_passes": self.planner.engine_passes,
+                "cache": cache, "fleet": self.planner.fleet}
+
+    # -- coalescing core ----------------------------------------------------
+    def _enqueue(self, req: PendingQuery) -> None:
+        """Queue a request; the first request of a batch elects a leader.
+
+        The leader runs on its own daemon thread so non-blocking
+        submitters return immediately; a blocking caller simply waits on
+        the handle like everyone else."""
+        with self._cond:
+            self._pending.append(req)
+            self._requests[req.kind] += 1
+            if len(self._pending) >= self.flush_at:
+                self._cond.notify_all()
+            lead = not self._leader_active
+            if lead:
+                self._leader_active = True
+        if lead:
+            threading.Thread(target=self._lead_batch, daemon=True).start()
+
+    @staticmethod
+    def _submit(req: PendingQuery):
+        return req.get()
+
+    def _lead_batch(self) -> None:
+        """Leader: wait out the window, take the queue, execute it.
+
+        ``_leader_active`` flips off under the same lock that snapshots
+        the queue, so a request arriving mid-execution starts the NEXT
+        batch (with itself as leader) instead of being dropped."""
+        deadline = time.monotonic() + self.coalesce_window_ms / 1e3
+        with self._cond:
+            while len(self._pending) < self.flush_at:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                self._cond.wait(remaining)
+            batch, self._pending = self._pending, []
+            self._leader_active = False
+            self._batches += 1
+            self._max_batch = max(self._max_batch, len(batch))
+            if len(batch) > 1:
+                self._coalesced_requests += len(batch)
+        self._execute(batch)
+
+    def _execute(self, batch: List[PendingQuery]) -> None:
+        """One ragged engine pass per destination-fleet group.
+
+        Traces are deduplicated by fingerprint before stacking, so K
+        concurrent queries about one trace cost one engine row and
+        exactly one cache miss per unique key."""
+        groups: Dict[Optional[Tuple[str, ...]], List[PendingQuery]] = {}
+        for req in batch:
+            groups.setdefault(req.dests, []).append(req)
+        for dests, reqs in groups.items():
+            try:
+                uniq: Dict[str, TrackedTrace] = {}
+                for req in reqs:
+                    for t in req.traces:
+                        uniq.setdefault(t.fingerprint(), t)
+                order = list(uniq)
+                rows = self.planner.sweep(
+                    [uniq[fp] for fp in order],
+                    dests=list(dests) if dests is not None else None)
+                by_fp = dict(zip(order, rows))
+                for req in reqs:
+                    if req.kind == "rank":
+                        t = req.traces[0]
+                        req.result = rank_rows(
+                            dict(by_fp[t.fingerprint()]), req.batch_size,
+                            t.run_time_ms, req.by)
+                    else:
+                        req.result = [dict(by_fp[t.fingerprint()])
+                                      for t in req.traces]
+            except BaseException as e:  # propagate to every waiter
+                for req in reqs:
+                    req.error = e
+            finally:
+                for req in reqs:
+                    req.done.set()

@@ -1,0 +1,83 @@
+"""Content-addressed MLP artifact store tests."""
+
+import dataclasses
+
+import pytest
+
+from repro.core import artifacts, mlp
+from repro.core.predictor import train_mlps
+
+
+def test_content_key_deterministic(tiny_mlp_cfg):
+    k1 = artifacts.mlp_content_key("linear", tiny_mlp_cfg, 120, ["T4"])
+    k2 = artifacts.mlp_content_key("linear", tiny_mlp_cfg, 120, ["T4"])
+    assert k1 == k2 and len(k1) == 64
+
+
+def test_content_key_tracks_semantics_inputs(tiny_mlp_cfg):
+    """Anything that changes the trained weights changes the key: kind,
+    config, dataset size, device set, device SPEC, semantics version."""
+    base = artifacts.mlp_content_key("linear", tiny_mlp_cfg, 120, ["T4"])
+    assert artifacts.mlp_content_key("bmm", tiny_mlp_cfg, 120,
+                                     ["T4"]) != base
+    assert artifacts.mlp_content_key("linear", tiny_mlp_cfg, 240,
+                                     ["T4"]) != base
+    assert artifacts.mlp_content_key("linear", tiny_mlp_cfg, 120,
+                                     ["T4", "V100"]) != base
+    wider = dataclasses.replace(tiny_mlp_cfg, hidden_size=64)
+    assert artifacts.mlp_content_key("linear", wider, 120, ["T4"]) != base
+    reseeded = dataclasses.replace(tiny_mlp_cfg, seed=7)
+    assert artifacts.mlp_content_key("linear", reseeded, 120,
+                                     ["T4"]) != base
+
+
+def test_content_key_tracks_device_spec_edits(tiny_mlp_cfg, monkeypatch):
+    """Editing a registered device's numbers (new bandwidth measurement)
+    must invalidate artifacts trained on its old labels — this is what
+    raw-source hashing caught by accident and names alone cannot."""
+    from repro.core import devices
+    base = artifacts.mlp_content_key("linear", tiny_mlp_cfg, 120, ["T4"])
+    faster = dataclasses.replace(devices.get("T4"),
+                                 mem_bandwidth=2 * devices.get("T4")
+                                 .mem_bandwidth)
+    monkeypatch.setitem(devices._REGISTRY, "T4", faster)
+    assert artifacts.mlp_content_key("linear", tiny_mlp_cfg, 120,
+                                     ["T4"]) != base
+
+
+def test_artifact_path_embeds_tag_and_key(tiny_mlp_cfg, tmp_path):
+    p = artifacts.artifact_path(tmp_path, "bmm", tiny_mlp_cfg, 120, ["T4"])
+    assert p.parent == tmp_path
+    assert p.name.startswith("bmm_h2x32_e3_n120_")
+    assert p.suffix == ".pkl"
+    key = artifacts.mlp_content_key("bmm", tiny_mlp_cfg, 120, ["T4"])
+    assert p.stem.endswith(key[:12])
+
+
+def test_train_mlps_roundtrips_content_store(tiny_mlp_cfg, tmp_path,
+                                             monkeypatch):
+    """First call trains and writes the content-addressed file; second
+    call loads it without training (mlp.train is poisoned to prove it)."""
+    out = train_mlps(kinds=("bmm",), cfg=tiny_mlp_cfg, n_configs=60,
+                     device_names=["T4"], cache_dir=tmp_path)
+    path = artifacts.artifact_path(tmp_path, "bmm", tiny_mlp_cfg, 60,
+                                   ["T4"])
+    assert path.exists()
+
+    def boom(*a, **k):
+        raise AssertionError("cache miss: retrained despite warm store")
+
+    monkeypatch.setattr(mlp, "train", boom)
+    again = train_mlps(kinds=("bmm",), cfg=tiny_mlp_cfg, n_configs=60,
+                       device_names=["T4"], cache_dir=tmp_path)
+    assert again["bmm"].cfg.hidden_size == out["bmm"].cfg.hidden_size
+    # a different spec must NOT hit that artifact (and so must retrain)
+    with pytest.raises(AssertionError, match="cache miss"):
+        train_mlps(kinds=("bmm",), cfg=tiny_mlp_cfg, n_configs=61,
+                   device_names=["T4"], cache_dir=tmp_path)
+
+
+def test_ci_cache_key_stable_and_versioned():
+    key = artifacts.ci_cache_key()
+    assert key == artifacts.ci_cache_key()
+    assert key.startswith(f"mlps-v{artifacts.TRAINING_SEMANTICS_VERSION}-")

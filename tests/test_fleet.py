@@ -353,3 +353,24 @@ def test_fleet_breakdown_matches_trace_breakdown(trace):
     assert set(per_dev) == set(fleet_bd)
     for kind in per_dev:
         assert fleet_bd[kind] == pytest.approx(per_dev[kind], rel=1e-12)
+
+
+def test_zero_cost_device_is_rankable_by_cost(trace, monkeypatch):
+    """Regression: a legitimately FREE device (cost_per_hour == 0.0) used
+    to fall through `if spec.cost_per_hour` truthiness, get
+    cost_normalized=None, and become unrankable by samples/$.  It must
+    instead get infinite samples/$ and rank first under by="cost";
+    only cost_per_hour=None means "not rentable"."""
+    import dataclasses as _dc
+    free = _dc.replace(devices.get("T4"), name="free-T4",
+                       cost_per_hour=0.0)
+    monkeypatch.setitem(devices._REGISTRY, "free-T4", free)
+    planner = FleetPlanner(predictor=HabitatPredictor(),
+                           fleet=["free-T4", "V100", "P4000"])
+    by_cost = planner.rank(trace, batch_size=32, by="cost")
+    rows = {c.device: c for c in by_cost}
+    assert rows["free-T4"].cost_normalized == float("inf")
+    assert by_cost[0].device == "free-T4"          # free beats every price
+    # None (P4000) still means unrentable and ranks last
+    assert rows["P4000"].cost_normalized is None
+    assert by_cost[-1].device == "P4000"

@@ -1,0 +1,154 @@
+"""Cache backend tests: LRU semantics, stats, and the shared sqlite store."""
+
+import threading
+
+import pytest
+
+from repro.core import HabitatPredictor, OperationTracker, devices
+from repro.serve.cache import LRUCache, SqliteCache, make_backend
+from repro.serve.fleet import FleetPlanner
+
+import jax.numpy as jnp
+
+
+def _toy_step(w, x):
+    return jnp.sum(jnp.tanh(x @ w))
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return OperationTracker("T4").track(
+        _toy_step, jnp.zeros((64, 32)), jnp.zeros((8, 64)))
+
+
+# ---------------------------------------------------------------------------
+# in-process LRU backend
+# ---------------------------------------------------------------------------
+def test_lru_eviction_order():
+    c = LRUCache(capacity=2)
+    c.put_many([(("a",), 1.0), (("b",), 2.0), (("c",), 3.0)])
+    # a was the least-recently-used insert: evicted first
+    assert list(c.data) == [("b",), ("c",)]
+    assert c.stats.evictions == 1
+    assert c.get(("a",)) is None
+    # a hit refreshes recency: b survives the next overflow, c goes
+    assert c.get(("b",)) == 2.0
+    c.put_many([(("d",), 4.0)])
+    assert list(c.data) == [("b",), ("d",)]
+    assert c.stats.evictions == 2
+
+
+def test_lru_stats_accounting():
+    c = LRUCache(capacity=8)
+    assert c.get(("k",)) is None
+    c.put_many([(("k",), 1.5)])
+    assert c.get(("k",)) == 1.5
+    assert (c.stats.hits, c.stats.misses, c.stats.evictions) == (1, 1, 0)
+    assert c.stats.hit_rate == 0.5
+    d = c.stats.as_dict()
+    assert d["hits"] == 1 and d["misses"] == 1 and d["hit_rate"] == 0.5
+    c.clear()
+    assert len(c) == 0 and c.stats.misses == 0
+
+
+def test_lru_thread_safety():
+    """Concurrent probe/insert storms must not corrupt the OrderedDict or
+    lose stats increments (hits + misses == total probes)."""
+    c = LRUCache(capacity=64)
+    n_threads, n_ops = 8, 200
+    barrier = threading.Barrier(n_threads)
+
+    def worker(tid):
+        barrier.wait()
+        for i in range(n_ops):
+            key = ("k", i % 32)
+            if c.get(key) is None:
+                c.put_many([(key, float(i))])
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.stats.hits + c.stats.misses == n_threads * n_ops
+    assert len(c) <= 64
+
+
+# ---------------------------------------------------------------------------
+# sqlite shared backend
+# ---------------------------------------------------------------------------
+def test_sqlite_roundtrip_and_stats(tmp_path):
+    c = SqliteCache(tmp_path / "cache.sqlite", capacity=100)
+    key = ("fp", "T4", ("HabitatPredictor", False), "tok")
+    assert c.get(key) is None
+    c.put_many([(key, 12.25)])
+    assert c.get(key) == 12.25
+    assert (c.stats.hits, c.stats.misses) == (1, 1)
+    assert len(c) == 1
+
+
+def test_sqlite_value_bitwise_roundtrip(tmp_path):
+    """sqlite REAL is an IEEE double: stored ms come back bit-identical."""
+    c = SqliteCache(tmp_path / "cache.sqlite")
+    vals = [0.1, 1e-300, 123456.789e12, 2.0 / 3.0]
+    c.put_many([((f"k{i}",), v) for i, v in enumerate(vals)])
+    for i, v in enumerate(vals):
+        assert c.get((f"k{i}",)) == v   # exact, not approx
+
+
+def test_sqlite_eviction(tmp_path):
+    c = SqliteCache(tmp_path / "cache.sqlite", capacity=3)
+    c.put_many([((f"k{i}",), float(i)) for i in range(5)])
+    assert len(c) == 3
+    assert c.stats.evictions == 2
+    # oldest ticks went first
+    assert c.get(("k0",)) is None and c.get(("k4",)) == 4.0
+
+
+def test_sqlite_shared_between_instances(tmp_path):
+    """Two backends on one file (= two workers) share entries but keep
+    per-worker accounting."""
+    path = tmp_path / "shared.sqlite"
+    a, b = SqliteCache(path), SqliteCache(path)
+    a.put_many([(("fp", "V100"), 3.5)])
+    assert b.get(("fp", "V100")) == 3.5
+    assert b.stats.hits == 1 and b.stats.misses == 0
+    assert a.stats.hits == 0            # a never probed
+
+
+def test_planners_share_sqlite_backend(tmp_path):
+    """Two FleetPlanner instances on one sqlite file: entries minted by
+    one are hits for the other (the cross-process serving story, minus
+    the processes)."""
+    path = tmp_path / "fleet.sqlite"
+    dests = ["T4", "V100", "tpu-v5e"]
+    a = FleetPlanner(predictor=HabitatPredictor(), fleet=dests, cache=path)
+    b = FleetPlanner(predictor=HabitatPredictor(), fleet=dests, cache=path)
+    tr = OperationTracker("T4").track(
+        _toy_step, jnp.zeros((32, 16)), jnp.zeros((4, 32)))
+    first = a.predict(tr)
+    assert a.stats.misses == 3 and a.engine_passes == 1
+    second = b.predict(tr)
+    assert b.stats.hits == 3 and b.stats.misses == 0
+    assert b.engine_passes == 0
+    assert second == first              # bitwise via sqlite REAL
+
+
+def test_make_backend_spellings(tmp_path):
+    assert isinstance(make_backend(None, 16), LRUCache)
+    assert isinstance(make_backend(tmp_path / "x.sqlite"), SqliteCache)
+    lru = LRUCache(4)
+    assert make_backend(lru) is lru
+    with pytest.raises(TypeError, match="not a cache backend"):
+        make_backend(42)
+
+
+def test_planner_cache_compat_shim(trace):
+    """`planner._cache` still reads/writes the LRU's OrderedDict (white-box
+    compat used by older tests and debugging sessions)."""
+    planner = FleetPlanner(predictor=HabitatPredictor(), fleet=["T4"])
+    planner.predict(trace)
+    assert len(planner._cache) == 1
+    assert planner._cache is planner.cache.data
+    assert sorted(devices.all_devices())    # registry untouched by caching

@@ -1,0 +1,282 @@
+"""PredictionService tests: coalescing, parity, wire format, concurrency."""
+
+import json
+import threading
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import HabitatPredictor, OperationTracker, devices
+from repro.serve.fleet import FleetPlanner
+from repro.serve.service import PredictionService
+
+DEVS = sorted(devices.all_devices())
+
+
+def _toy_step(w, x):
+    return jnp.sum(jnp.tanh(x @ w))
+
+
+def _trace(n: int = 16, m: int = 32):
+    return OperationTracker("T4").track(
+        _toy_step, jnp.zeros((m, n)), jnp.zeros((8, m)),
+        label=f"toy-{n}x{m}")
+
+
+@pytest.fixture(scope="module")
+def traces():
+    return [_trace(16 + 8 * i) for i in range(6)]
+
+
+def _burst(service, calls):
+    """Fire ``calls`` (thunks) concurrently, barrier-started; return their
+    results in call order."""
+    barrier = threading.Barrier(len(calls))
+    results = [None] * len(calls)
+    errors = []
+
+    def run(i, fn):
+        barrier.wait()
+        try:
+            results[i] = fn()
+        except BaseException as e:   # surface in the test, not the thread
+            errors.append(e)
+
+    threads = [threading.Thread(target=run, args=(i, fn))
+               for i, fn in enumerate(calls)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    return results
+
+
+# ---------------------------------------------------------------------------
+# answer parity: coalesced == direct planner, bitwise
+# ---------------------------------------------------------------------------
+def test_rank_matches_planner_bitwise(traces):
+    service = PredictionService(predictor=HabitatPredictor(),
+                                coalesce_window_ms=0.0)
+    direct = FleetPlanner(predictor=HabitatPredictor())
+    for tr in traces[:3]:
+        assert service.rank(tr, batch_size=32) == direct.rank(tr, 32)
+        assert (service.rank(tr, batch_size=32, by="cost")
+                == direct.rank(tr, 32, by="cost"))
+
+
+def test_sweep_matches_planner(traces):
+    service = PredictionService(predictor=HabitatPredictor(),
+                                coalesce_window_ms=0.0)
+    direct = FleetPlanner(predictor=HabitatPredictor())
+    assert service.sweep(traces) == direct.sweep(traces)
+
+
+def test_rank_validates_objective(traces):
+    service = PredictionService(predictor=HabitatPredictor())
+    with pytest.raises(ValueError, match="ranking objective"):
+        service.rank(traces[0], batch_size=32, by="latency")
+    # the bad request never reached the queue
+    assert service.stats()["requests"]["rank"] == 0
+
+
+# ---------------------------------------------------------------------------
+# coalescing
+# ---------------------------------------------------------------------------
+def test_concurrent_identical_ranks_one_miss_per_key(traces):
+    """Barrier-started threads asking about the SAME trace: coalesced into
+    one batch, deduped to one engine row, exactly one miss per unique
+    (trace, device, config, fleet) key — and every thread gets the same
+    bitwise answer."""
+    n_threads = 8
+    service = PredictionService(predictor=HabitatPredictor(),
+                                coalesce_window_ms=200.0,
+                                flush_at=n_threads)
+    tr = traces[0]
+    results = _burst(service, [lambda: service.rank(tr, batch_size=32)
+                               for _ in range(n_threads)])
+    assert all(r == results[0] for r in results)
+    stats = service.stats()
+    assert stats["cache"]["misses"] == len(DEVS)     # one per unique key
+    assert stats["cache"]["hits"] == 0
+    assert stats["engine_passes"] == 1
+    assert stats["requests"]["rank"] == n_threads
+    assert stats["coalescing"]["batches"] == 1
+    assert stats["coalescing"]["max_batch"] == n_threads
+    assert stats["coalescing"]["coalesced_requests"] == n_threads
+
+
+def test_concurrent_distinct_ranks_one_engine_pass(traces):
+    """Distinct traces coalesce into ONE ragged pass (not one per trace)."""
+    service = PredictionService(predictor=HabitatPredictor(),
+                                coalesce_window_ms=200.0,
+                                flush_at=len(traces))
+    results = _burst(
+        service, [lambda tr=tr: service.rank(tr, batch_size=32)
+                  for tr in traces])
+    stats = service.stats()
+    assert stats["engine_passes"] == 1
+    assert stats["cache"]["misses"] == len(traces) * len(DEVS)
+    # and each answer matches the direct planner
+    direct = FleetPlanner(predictor=HabitatPredictor())
+    for tr, res in zip(traces, results):
+        assert res == direct.rank(tr, 32)
+
+
+def test_mixed_rank_and_sweep_coalesce(traces):
+    """rank + sweep requests in one window share one engine pass; the
+    sweep's duplicate of a ranked trace is deduped, not re-priced."""
+    service = PredictionService(predictor=HabitatPredictor(),
+                                coalesce_window_ms=200.0, flush_at=2)
+    calls = [lambda: service.rank(traces[0], batch_size=16),
+             lambda: service.sweep([traces[0], traces[1]])]
+    rank_res, sweep_res = _burst(service, calls)
+    stats = service.stats()
+    assert stats["engine_passes"] == 1
+    assert stats["cache"]["misses"] == 2 * len(DEVS)   # 2 unique traces
+    assert [c.device for c in rank_res]                # ranked rows exist
+    assert sweep_res[0] == dict(
+        zip(DEVS, [sweep_res[0][d] for d in DEVS]))    # all devices priced
+
+
+def test_requests_with_different_dests_grouped_separately(traces):
+    """Different destination fleets cannot share a ragged grid: they form
+    separate groups (cache keys carry different fleet tokens)."""
+    service = PredictionService(predictor=HabitatPredictor(),
+                                coalesce_window_ms=200.0, flush_at=2)
+    calls = [
+        lambda: service.rank(traces[0], batch_size=8,
+                             dests=["T4", "V100"]),
+        lambda: service.rank(traces[1], batch_size=8,
+                             dests=["tpu-v5e"]),
+    ]
+    res_a, res_b = _burst(service, calls)
+    assert {c.device for c in res_a} == {"T4", "V100"}
+    assert {c.device for c in res_b} == {"tpu-v5e"}
+    stats = service.stats()
+    assert stats["coalescing"]["batches"] == 1      # one batch ...
+    assert stats["engine_passes"] == 2              # ... two grids
+
+
+def test_error_isolated_to_group(traces):
+    """An engine failure in one dests-group fails only that group's
+    requests; the healthy group still answers."""
+    service = PredictionService(predictor=HabitatPredictor(),
+                                coalesce_window_ms=200.0, flush_at=2)
+    outcome = {}
+    barrier = threading.Barrier(2)
+
+    def good():
+        barrier.wait()
+        outcome["good"] = service.rank(traces[0], batch_size=8,
+                                       dests=["T4", "V100"])
+
+    def bad():
+        barrier.wait()
+        try:
+            service.rank(traces[1], batch_size=8, dests=["T4", "no-such"])
+        except KeyError as e:
+            outcome["bad"] = e
+
+    threads = [threading.Thread(target=good),
+               threading.Thread(target=bad)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert isinstance(outcome["bad"], KeyError)
+    assert {c.device for c in outcome["good"]} == {"T4", "V100"}
+
+
+def test_sequential_requests_still_answered(traces):
+    """window=0 and no concurrency: every request is its own batch —
+    the degenerate case must behave exactly like the planner."""
+    service = PredictionService(predictor=HabitatPredictor(),
+                                coalesce_window_ms=0.0)
+    a = service.rank(traces[0], batch_size=32)
+    b = service.rank(traces[0], batch_size=32)
+    assert a == b
+    stats = service.stats()
+    assert stats["coalescing"]["batches"] == 2
+    assert stats["coalescing"]["coalesced_requests"] == 0
+    assert stats["cache"]["hits"] == len(DEVS)      # second call from cache
+    assert stats["engine_passes"] == 1
+
+
+# ---------------------------------------------------------------------------
+# planner-level concurrency (no coalescing): consistency under racing
+# ---------------------------------------------------------------------------
+def test_planner_concurrent_rank_consistent(traces):
+    """Raw FleetPlanner.rank from many threads: accounting stays coherent
+    (hits + misses == probes) and every thread sees the same answer.
+    Duplicate misses are allowed here — single-miss semantics is the
+    service's job (see test_concurrent_identical_ranks_one_miss_per_key)."""
+    planner = FleetPlanner(predictor=HabitatPredictor())
+    tr = traces[0]
+    n_threads = 6
+    barrier = threading.Barrier(n_threads)
+    results = [None] * n_threads
+
+    def worker(i):
+        barrier.wait()
+        results[i] = planner.rank(tr, batch_size=32)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert all(r == results[0] for r in results)
+    s = planner.stats
+    assert s.hits + s.misses == n_threads * len(DEVS)
+    assert s.misses >= len(DEVS)
+
+
+# ---------------------------------------------------------------------------
+# wire format
+# ---------------------------------------------------------------------------
+def test_rank_request_wire_roundtrip(traces):
+    service = PredictionService(predictor=HabitatPredictor(),
+                                coalesce_window_ms=0.0)
+    tr = traces[0]
+    payload = json.dumps({"trace": json.loads(tr.to_json()),
+                          "batch_size": 32})
+    out = service.rank_request(payload)
+    assert out["label"] == tr.label
+    direct = FleetPlanner(predictor=HabitatPredictor()).rank(tr, 32)
+    assert [r["device"] for r in out["ranking"]] == \
+        [c.device for c in direct]
+    # wire-format decode must not perturb the numbers
+    assert [r["iter_ms"] for r in out["ranking"]] == \
+        [c.iter_ms for c in direct]
+
+
+def test_free_device_rank_is_strict_json(traces, monkeypatch):
+    """A free device's samples/$ is float('inf'); the wire must spell it
+    as the string "Infinity" so the body stays RFC-8259-valid for strict
+    clients (json.dumps would otherwise emit a bare Infinity token)."""
+    import dataclasses as _dc
+    free = _dc.replace(devices.get("T4"), name="free-T4",
+                       cost_per_hour=0.0)
+    monkeypatch.setitem(devices._REGISTRY, "free-T4", free)
+    service = PredictionService(predictor=HabitatPredictor(),
+                                fleet=["free-T4", "V100"],
+                                coalesce_window_ms=0.0)
+    out = service.rank_request({"trace": traces[0].to_dict(),
+                                "batch_size": 8, "by": "cost"})
+    json.dumps(out, allow_nan=False)        # strict encoding must succeed
+    assert out["ranking"][0]["device"] == "free-T4"
+    assert out["ranking"][0]["cost_normalized"] == "Infinity"
+
+
+def test_sweep_request_wire_roundtrip(traces):
+    service = PredictionService(predictor=HabitatPredictor(),
+                                coalesce_window_ms=0.0)
+    payload = {"traces": [t.to_json() for t in traces[:2]],
+               "dests": ["T4", "V100"]}
+    out = service.sweep_request(payload)
+    assert out["labels"] == [t.label for t in traces[:2]]
+    direct = FleetPlanner(predictor=HabitatPredictor()).sweep(
+        traces[:2], dests=["T4", "V100"])
+    assert out["times"] == direct

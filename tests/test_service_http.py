@@ -1,0 +1,178 @@
+"""HTTP service smoke tests (the CI fast-lane service gate).
+
+Spawns two real worker processes (``python -m repro.serve.http``) sharing
+one sqlite result cache, then exercises the service end to end: /rank and
+/stats round-trips, coalesced-batch accounting under concurrent clients,
+and the cross-process story — a trace first priced by worker A is a cache
+hit on worker B."""
+
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+import urllib.request
+from pathlib import Path
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import HabitatPredictor, OperationTracker, devices
+from repro.serve.fleet import FleetPlanner
+from repro.serve.http import PredictionClient
+
+DEVS = sorted(devices.all_devices())
+SRC = Path(__file__).resolve().parents[1] / "src"
+
+
+def _toy_step(w, x):
+    return jnp.sum(jnp.tanh(x @ w))
+
+
+def _trace(n, label):
+    return OperationTracker("T4").track(
+        _toy_step, jnp.zeros((n, 24)), jnp.zeros((8, n)), label=label)
+
+
+def _spawn_worker(cache_path, coalesce_ms=40.0, flush_at=64):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (str(SRC), env.get("PYTHONPATH")) if p)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.serve.http", "--port", "0",
+         "--cache", str(cache_path), "--coalesce-ms", str(coalesce_ms),
+         "--flush-at", str(flush_at)],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+        text=True)
+    deadline = time.monotonic() + 120
+    line = ""
+    while time.monotonic() < deadline:
+        line = proc.stdout.readline()
+        if line.startswith("serving on "):
+            return proc, line.split()[-1].strip()
+        if proc.poll() is not None:
+            break
+    proc.kill()
+    raise RuntimeError(f"worker failed to start: {line!r}")
+
+
+@pytest.fixture(scope="module")
+def workers(tmp_path_factory):
+    """Two HTTP workers sharing one sqlite cache file."""
+    cache = tmp_path_factory.mktemp("shared") / "cache.sqlite"
+    procs, urls = [], []
+    try:
+        for _ in range(2):
+            proc, url = _spawn_worker(cache)
+            procs.append(proc)
+            urls.append(url)
+        yield urls
+    finally:
+        for p in procs:
+            p.terminate()
+        for p in procs:
+            try:
+                p.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                p.kill()
+
+
+def test_healthz_and_stats_roundtrip(workers):
+    client = PredictionClient(workers[0])
+    assert client.healthz() == {"ok": True}
+    stats = client.stats()
+    assert stats["fleet"] == DEVS
+    assert {"requests", "coalescing", "cache", "engine_passes"} <= set(stats)
+    assert "sqlite" in stats["cache"]["backend"]
+
+
+def test_rank_roundtrip_matches_local_planner(workers):
+    """An HTTP answer is bitwise-identical to the in-process answer —
+    the wire format (JSON shortest-repr floats) loses nothing."""
+    client = PredictionClient(workers[0])
+    tr = _trace(16, "http-parity")
+    remote = client.rank(tr, batch_size=32)
+    local = FleetPlanner(predictor=HabitatPredictor()).rank(tr, 32)
+    assert [r["device"] for r in remote] == [c.device for c in local]
+    assert [r["iter_ms"] for r in remote] == [c.iter_ms for c in local]
+    assert [r["throughput"] for r in remote] == \
+        [c.throughput for c in local]
+
+
+def test_sweep_roundtrip(workers):
+    client = PredictionClient(workers[0])
+    traces = [_trace(12, "sw-a"), _trace(20, "sw-b")]
+    rows = client.sweep(traces, dests=["T4", "V100"])
+    local = FleetPlanner(predictor=HabitatPredictor()).sweep(
+        traces, dests=["T4", "V100"])
+    assert rows == local
+
+
+def test_bad_requests_are_client_errors(workers):
+    req = urllib.request.Request(
+        workers[0] + "/rank", data=b'{"nope": 1}',
+        headers={"Content-Type": "application/json"}, method="POST")
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        urllib.request.urlopen(req, timeout=30)
+    assert ei.value.code == 400
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        urllib.request.urlopen(workers[0] + "/no-such", timeout=30)
+    assert ei.value.code == 404
+
+
+def test_concurrent_requests_coalesce(workers):
+    """N concurrent /rank posts about one NEW trace land in few batches
+    and — deduped by fingerprint — cost at most one engine pass per
+    batch, with exactly one miss per unique cache key."""
+    client = PredictionClient(workers[0])
+    before = client.stats()
+    tr = _trace(28, "coalesce-burst")
+    n_clients = 6
+    barrier = threading.Barrier(n_clients)
+    results, errors = [None] * n_clients, []
+
+    def fire(i):
+        barrier.wait()
+        try:
+            results[i] = client.rank(tr, batch_size=16)
+        except BaseException as e:
+            errors.append(e)
+
+    threads = [threading.Thread(target=fire, args=(i,))
+               for i in range(n_clients)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    assert all(r == results[0] for r in results)
+    after = client.stats()
+    d_requests = (after["requests"]["rank"] - before["requests"]["rank"])
+    d_batches = after["coalescing"]["batches"] - \
+        before["coalescing"]["batches"]
+    d_misses = after["cache"]["misses"] - before["cache"]["misses"]
+    d_passes = after["engine_passes"] - before["engine_passes"]
+    assert d_requests == n_clients
+    assert d_batches < n_clients            # genuinely coalesced
+    assert d_passes <= d_batches            # dedup: <= one pass per batch
+    assert d_misses == len(DEVS)            # one miss per unique key
+    assert after["coalescing"]["max_batch"] >= 2
+
+
+def test_cross_process_shared_cache_hit(workers):
+    """End-to-end acceptance: a trace first predicted by worker A is a
+    cache HIT on worker B (shared sqlite backend), with identical
+    numbers and zero engine passes on B."""
+    a, b = PredictionClient(workers[0]), PredictionClient(workers[1])
+    tr = _trace(36, "cross-worker")
+    b_before = b.stats()
+    from_a = a.rank(tr, batch_size=8)
+    from_b = b.rank(tr, batch_size=8)
+    assert from_b == from_a                 # bitwise through sqlite REAL
+    b_after = b.stats()
+    assert (b_after["cache"]["hits"] - b_before["cache"]["hits"]
+            == len(DEVS))
+    assert b_after["cache"]["misses"] == b_before["cache"]["misses"]
+    assert b_after["engine_passes"] == b_before["engine_passes"]

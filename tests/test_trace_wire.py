@@ -1,0 +1,95 @@
+"""Trace wire-format round-trip guarantees.
+
+The prediction service ships traces as ``TrackedTrace.to_json`` documents
+(HTTP bodies, golden-trace files).  These tests pin the contract: a
+round-tripped trace is indistinguishable from the original — same
+fingerprint (so cross-process cache keys match), same run time, same
+predictions bitwise — and serialization is idempotent."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import HabitatPredictor, OperationTracker
+from repro.core.costmodel import OpCost
+from repro.core.trace import Op, TrackedTrace
+
+
+def _step(w, x):
+    h = jnp.tanh(x @ w)
+    return jnp.sum(jax.nn.softmax(h @ w.T))
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return OperationTracker("T4").track(
+        _step, jnp.zeros((96, 128)), jnp.zeros((16, 96)), label="wire")
+
+
+def test_roundtrip_preserves_fingerprint(trace):
+    back = TrackedTrace.from_json(trace.to_json())
+    assert back.fingerprint() == trace.fingerprint()
+    assert back.label == trace.label
+    assert back.origin_device == trace.origin_device
+
+
+def test_roundtrip_preserves_run_time_bitwise(trace):
+    back = TrackedTrace.from_json(trace.to_json())
+    assert back.run_time_ms == trace.run_time_ms      # ==, not approx
+
+
+def test_roundtrip_preserves_predictions_bitwise(trace):
+    pred = HabitatPredictor()
+    back = TrackedTrace.from_json(trace.to_json())
+    a = pred.predict_fleet(trace, ["V100", "tpu-v5e"])
+    b = pred.predict_fleet(back, ["V100", "tpu-v5e"])
+    np.testing.assert_array_equal(b.op_ms, a.op_ms)
+
+
+def test_double_roundtrip_idempotent(trace):
+    doc = trace.to_dict()
+    again = TrackedTrace.from_dict(doc).to_dict()
+    assert again == doc
+    assert json.loads(trace.to_json()) == doc
+
+
+def test_numpy_scalars_serialize():
+    """Ops whose numerics are numpy scalars (calibration paths, array
+    math) must serialize and round-trip to the same bits."""
+    op = Op(name="x", kind="add",
+            cost=OpCost(np.float64(1e9), np.float64(6e5), np.float64(4e5)),
+            multiplicity=np.int64(3),
+            in_shapes=((np.int64(8), np.int64(16)),),
+            out_shapes=((np.int64(8),),),
+            measured_ms=np.float64(0.1234567890123456789))
+    tr = TrackedTrace(ops=[op], origin_device="T4")
+    back = TrackedTrace.from_json(tr.to_json())
+    assert back.ops[0].measured_ms == float(op.measured_ms)
+    assert back.ops[0].multiplicity == 3
+    assert back.ops[0].in_shapes == ((8, 16),)
+    assert back.fingerprint() == tr.fingerprint()
+
+
+def test_unmeasured_ops_roundtrip():
+    """measured_ms=None (untracked origin) survives the wire."""
+    op = Op(name="x", kind="add", cost=OpCost(1e6, 6e5, 4e5))
+    back = TrackedTrace.from_json(
+        TrackedTrace(ops=[op], origin_device="T4").to_json())
+    assert back.ops[0].measured_ms is None
+    assert back.ops[0].predicted_ms is None
+
+
+def test_fingerprint_invalidation_on_measure(trace):
+    """The fingerprint memo must follow mutation: re-measuring changes
+    the arrays, so the fingerprint is recomputed, and a wire round-trip
+    of the new state matches the new fingerprint."""
+    tr = TrackedTrace.from_json(trace.to_json())
+    fp1 = tr.fingerprint()
+    tr.ops[0].measured_ms = (tr.ops[0].measured_ms or 0.0) + 1.0
+    tr.to_arrays(refresh=True)
+    fp2 = tr.fingerprint()
+    assert fp2 != fp1
+    assert TrackedTrace.from_json(tr.to_json()).fingerprint() == fp2
