@@ -49,10 +49,12 @@ BENCHES = [
      "Multi-trace ragged sweep vs per-trace fleet loop (>=3x gate)"),
     ("service", "benchmarks.bench_service",
      "Coalescing prediction service vs per-request loop (>=3x gate)"),
+    ("union", "benchmarks.bench_union",
+     "Union-grid coalescing (>=3x) + cell-masked warm sweeps (>=2x)"),
 ]
 
 #: the subset (and reduced sizes) run by CI's bench-smoke job
-SMOKE_KEYS = ("fleet", "sweep", "service", "kernels")
+SMOKE_KEYS = ("fleet", "sweep", "service", "union", "kernels")
 
 
 def main() -> None:

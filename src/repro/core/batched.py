@@ -36,8 +36,10 @@ different shapes in the two spellings.
 from __future__ import annotations
 
 import dataclasses
+import threading
+from collections import OrderedDict
 from types import SimpleNamespace
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -51,16 +53,43 @@ _EFF_COMPUTE = (0.50, 0.70)   # (kernel-alike, kernel-varying)
 _EFF_MEMORY = (0.82, 0.75)
 
 
+def _roofline_core(flops, bytes_accessed, kernel_varying, peak_flops,
+                   mem_bandwidth) -> np.ndarray:
+    """Paleo-style roofline on broadcast-ready arrays.
+
+    The one roofline expression behind both the grid and flat-cell
+    spellings (the same drift guard ``_gamma_core`` provides for γ):
+    every output element is produced by the same IEEE operation sequence
+    regardless of input shapes, so the cell-masked sweep's bitwise
+    parity with the full grid cannot be broken by editing one copy."""
+    eff_c = np.where(kernel_varying, _EFF_COMPUTE[1], _EFF_COMPUTE[0])
+    eff_m = np.where(kernel_varying, _EFF_MEMORY[1], _EFF_MEMORY[0])
+    flops_t = (flops * (1.0 / eff_c)) / peak_flops
+    mem_t = (bytes_accessed * (1.0 / eff_m)) / mem_bandwidth
+    return np.maximum(flops_t, mem_t) * 1e3
+
+
 def analytical_ms_vec(arrays: Union[TraceArrays, "RaggedTraceArrays"],
                       dests: DeviceArrays) -> np.ndarray:
     """Vectorized Paleo-style roofline estimate, shape (n_ops, n_dev)."""
-    eff_c = np.where(arrays.kernel_varying, _EFF_COMPUTE[1], _EFF_COMPUTE[0])
-    eff_m = np.where(arrays.kernel_varying, _EFF_MEMORY[1], _EFF_MEMORY[0])
-    flops_t = (arrays.flops * (1.0 / eff_c))[:, None] \
-        / dests.peak_flops[None, :]
-    mem_t = (arrays.bytes_accessed * (1.0 / eff_m))[:, None] \
-        / dests.mem_bandwidth[None, :]
-    return np.maximum(flops_t, mem_t) * 1e3
+    return _roofline_core(
+        arrays.flops[:, None], arrays.bytes_accessed[:, None],
+        np.asarray(arrays.kernel_varying)[:, None],
+        dests.peak_flops[None, :], dests.mem_bandwidth[None, :])
+
+
+def analytical_ms_flat(arrays, dests: DeviceArrays,
+                       dest_idx: np.ndarray) -> np.ndarray:
+    """Flat-cell spelling of :func:`analytical_ms_vec`, shape (M,).
+
+    ``arrays`` rows are already gathered per cell; ``dest_idx[k]`` selects
+    cell ``k``'s device.  The roofline formula is element-wise, so each
+    cell equals the corresponding full-grid element bitwise — the
+    cell-masked sweep relies on that to keep cached values history-free."""
+    j = np.asarray(dest_idx, np.intp)
+    return _roofline_core(arrays.flops, arrays.bytes_accessed,
+                          arrays.kernel_varying, dests.peak_flops[j],
+                          dests.mem_bandwidth[j])
 
 
 def mlp_features_grid(arrays: Union[TraceArrays, "RaggedTraceArrays"],
@@ -69,12 +98,92 @@ def mlp_features_grid(arrays: Union[TraceArrays, "RaggedTraceArrays"],
     """MLP query features for ops ``idx`` x all devices, device-major rows.
 
     Row ``i * n_dev + j`` is op ``idx[i]`` queried against device ``j`` —
-    the same log1p transform as :func:`repro.core.dataset.op_features`."""
+    the same log1p transform as :func:`repro.core.dataset.op_features`.
+
+    This is the allocate-per-call reference spelling (kept as the
+    ``feature_buffers=False`` compat path and as the oracle the buffered
+    builder is tested against); the sweep hot path uses the preallocated
+    split-transform builders below, which produce bitwise-identical rows
+    without re-tiling or re-transforming the full grid per pass."""
     n_idx, n_dev = len(idx), dests.n
     op_part = np.repeat(arrays.op_features[idx], n_dev, axis=0)
     dev_part = np.tile(dests.feature_matrix, (n_idx, 1))
     raw = np.concatenate([op_part, dev_part], axis=1)
     return dataset_mod.transform_features(raw)
+
+
+class _FeatureBufferPool:
+    """Reusable float32 row buffers for the MLP feature grids.
+
+    ``mlp_features_grid`` used to allocate (and log1p-transform) the full
+    device-major grid on every sweep; this pool checks buffers out for
+    the duration of one scoring call and back in afterwards, so repeated
+    passes reuse storage instead of churning the allocator.  Checkout is
+    exclusive (a buffer is never visible to two callers), which keeps
+    concurrent planner/service threads safe without thread-local state —
+    the service's coalescing leaders are short-lived threads, so
+    thread-local buffers would never be reused."""
+
+    _MAX_FREE = 8               # buffers kept per row width
+    _MAX_BYTES = 16 << 20       # never retain one buffer above 16 MiB
+
+    def __init__(self):
+        self._free: Dict[int, List[np.ndarray]] = {}
+        self._lock = threading.Lock()
+
+    def acquire(self, n_rows: int, n_cols: int) -> np.ndarray:
+        with self._lock:
+            free = self._free.get(n_cols, [])
+            for i, buf in enumerate(free):
+                if buf.shape[0] >= n_rows:
+                    return free.pop(i)
+        cap = 1 << max(int(n_rows) - 1, 0).bit_length()
+        return np.empty((max(cap, 1), n_cols), np.float32)
+
+    def release(self, buf: np.ndarray) -> None:
+        if buf.nbytes > self._MAX_BYTES:
+            return      # one-off giant grids go back to the allocator
+        with self._lock:
+            free = self._free.setdefault(buf.shape[1], [])
+            if len(free) < self._MAX_FREE:
+                free.append(buf)
+
+
+_FEATURE_BUFFERS = _FeatureBufferPool()
+
+
+def _features_grid_into(buf: np.ndarray, op_feats_t: np.ndarray,
+                        dev_feats_t: np.ndarray) -> np.ndarray:
+    """Fill ``buf`` with the device-major feature grid, zero fresh allocs.
+
+    ``op_feats_t``/``dev_feats_t`` are the *already transformed* op and
+    device feature blocks: log1p is element-wise, so transforming each
+    block once and broadcasting the results into the row grid yields the
+    same bits as ``mlp_features_grid``'s transform-the-tiled-grid
+    spelling, at 1/n_dev (op side) and 1/n_ops (device side) of the
+    transform work."""
+    n_idx, n_op_f = op_feats_t.shape
+    n_dev, n_dev_f = dev_feats_t.shape
+    rows = buf[:n_idx * n_dev]
+    grid = rows.reshape(n_idx, n_dev, n_op_f + n_dev_f)
+    grid[:, :, :n_op_f] = op_feats_t[:, None, :]
+    grid[:, :, n_op_f:] = dev_feats_t[None, :, :]
+    return rows
+
+
+def _features_pairs_into(buf: np.ndarray, op_feats_t: np.ndarray,
+                         dev_feats_t: np.ndarray, rows: np.ndarray,
+                         cols: np.ndarray) -> np.ndarray:
+    """Feature rows for an explicit (op, device) cell list (masked sweeps).
+
+    Row ``k`` is op ``rows[k]`` x device ``cols[k]`` — identical bits to
+    the corresponding ``mlp_features_grid`` row, but only the requested
+    cells are materialized."""
+    n_op_f = op_feats_t.shape[1]
+    out = buf[:len(rows)]
+    out[:, :n_op_f] = op_feats_t[rows]
+    out[:, n_op_f:] = dev_feats_t[cols]
+    return out
 
 
 @dataclasses.dataclass
@@ -88,8 +197,18 @@ class FleetPrediction:
 
     @property
     def total_ms(self) -> np.ndarray:
-        """Predicted iteration time per destination device, shape (n_dev,)."""
-        return (self.op_ms * self.arrays.multiplicity[:, None]).sum(axis=0)
+        """Predicted iteration time per destination device, shape (n_dev,).
+
+        Reduced with ``np.add.reduceat`` (strictly sequential row
+        accumulation) rather than ``.sum(axis=0)`` (pairwise): the ragged
+        sweep reduces its segments the same way, so a sweep row's totals
+        equal this single-trace spelling BITWISE at any op count —
+        pairwise association varies with segment size and would break
+        that parity for traces over a few rows."""
+        weighted = self.op_ms * self.arrays.multiplicity[:, None]
+        if not weighted.shape[0]:
+            return np.zeros(weighted.shape[1], weighted.dtype)
+        return np.add.reduceat(weighted, [0], axis=0)[0]
 
     def time_for(self, dest: str) -> float:
         return float(self.total_ms[self.dests.index(dest)])
@@ -106,23 +225,48 @@ class FleetPrediction:
         return {k: float(t) for k, t in zip(self.arrays.kinds, totals)}
 
 
-def _mlp_scores_per_kind(arrays, da: DeviceArrays, mlps: Dict,
-                         out: np.ndarray) -> None:
-    """Kernel-varying MLP rows: one jitted forward per kind, covering every
-    destination device in the same batch.  Shared by the single-trace and
-    ragged paths: the feature rows are identical, so pure-NumPy MLPs agree
-    bitwise; real jitted forwards agree to float32 tolerance (the ragged
-    batch pads to a different shape)."""
+def _mlp_kind_rows(arrays, mlps: Dict):
+    """Yield (kind, row indices) for each op kind with a trained MLP and
+    at least one kernel-varying row — the one filter shared by the
+    per-kind, fused, and masked scoring paths."""
     for kid, kind in enumerate(arrays.kinds):
         if kind not in mlps:
             continue
         idx = np.flatnonzero(arrays.kernel_varying
                              & (arrays.kind_ids == kid))
-        if not len(idx):
-            continue
-        feats = mlp_features_grid(arrays, idx, da)
-        preds = mlps[kind].predict_ms(feats).reshape(len(idx), da.n)
-        out[idx] = preds
+        if len(idx):
+            yield kind, idx
+
+
+def _mlp_scores_per_kind(arrays, da: DeviceArrays, mlps: Dict,
+                         out: np.ndarray,
+                         feature_buffers: bool = True) -> None:
+    """Kernel-varying MLP rows: one jitted forward per kind, covering every
+    destination device in the same batch.  Shared by the single-trace and
+    ragged paths: the feature rows are identical, so pure-NumPy MLPs agree
+    bitwise; real jitted forwards agree to float32 tolerance (the ragged
+    batch pads to a different shape).
+
+    ``feature_buffers=True`` routes the grid build through the pooled
+    split-transform spelling (same bits, no per-pass reallocation);
+    ``False`` keeps the allocate-per-call :func:`mlp_features_grid`
+    reference path (benchmark baseline / kill switch)."""
+    dev_t = (dataset_mod.transform_features(da.feature_matrix)
+             if feature_buffers else None)
+    n_feat = arrays.op_features.shape[1] + da.feature_matrix.shape[1]
+    for kind, idx in _mlp_kind_rows(arrays, mlps):
+        if feature_buffers:
+            op_t = dataset_mod.transform_features(arrays.op_features[idx])
+            buf = _FEATURE_BUFFERS.acquire(len(idx) * da.n, n_feat)
+            try:
+                feats = _features_grid_into(buf, op_t, dev_t)
+                preds = mlps[kind].predict_ms(feats)
+            finally:
+                _FEATURE_BUFFERS.release(buf)
+        else:
+            preds = mlps[kind].predict_ms(mlp_features_grid(arrays, idx,
+                                                            da))
+        out[idx] = preds.reshape(len(idx), da.n)
 
 
 def predict_trace_batch(trace: TrackedTrace,
@@ -130,7 +274,8 @@ def predict_trace_batch(trace: TrackedTrace,
                                      Sequence[DeviceSpec]],
                         mlps: Optional[Dict] = None,
                         exact: bool = False,
-                        model_overhead: bool = False) -> FleetPrediction:
+                        model_overhead: bool = False,
+                        feature_buffers: bool = True) -> FleetPrediction:
     """Predict one trace's per-op times on every destination at once."""
     origin = devices.get(trace.origin_device)
     da = devices.as_arrays(dests)
@@ -158,7 +303,8 @@ def predict_trace_batch(trace: TrackedTrace,
     if no_mlp.any():
         out[no_mlp] = analytical_ms_vec(arrays, da)[no_mlp]
 
-    _mlp_scores_per_kind(arrays, da, mlps, out)
+    _mlp_scores_per_kind(arrays, da, mlps, out,
+                         feature_buffers=feature_buffers)
 
     return FleetPrediction(origin_device=trace.origin_device,
                            dests=list(da.names), op_ms=out, arrays=arrays,
@@ -193,6 +339,10 @@ class RaggedTraceArrays:
     op_features: np.ndarray      # (total_ops, 9) raw MLP op features
     _alike_origin: Optional[devices.OriginArrays] = dataclasses.field(
         default=None, repr=False, compare=False)
+    _wave_factors: Dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+    _wave_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
 
     @property
     def n_traces(self) -> int:
@@ -230,17 +380,189 @@ class RaggedTraceArrays:
                 self.origin_arrays().take(~self.kernel_varying)
         return self._alike_origin
 
+    def alike_wave_factor(self, da: DeviceArrays, exact: bool,
+                          model_overhead: bool):
+        """Cached wave-scaling factor grid for the kernel-alike rows x
+        ``da``: (factor (n_alike, n_dev), overheads-or-None).
+
+        The factor is a pure function of this (immutable) stack and the
+        destination fleet, so repeat sweeps of a cached stack skip the
+        pow-heavy recompute and pay only the ``t * factor`` combine —
+        the "recomputes every cell on each pass" half of the PR 3 hot
+        path.  Entries validate the ``DeviceArrays`` *instance* (the
+        memoized ``as_arrays`` returns one object per distinct spec
+        tuple), so a same-named fleet with different specs can never be
+        served a stale factor.  Reads are lock-free (concurrent fills
+        compute identical values); eviction + insert mutate under the
+        stack's lock so racing sweeps cannot corrupt the dict."""
+        key = (tuple(da.names), exact, model_overhead)
+        hit = self._wave_factors.get(key)
+        if hit is not None and hit[0] is da:
+            return hit[1], hit[2]
+        origin = self.alike_origin_arrays()
+        alike = ~self.kernel_varying
+        sub = SimpleNamespace(intensity=self.intensity[alike],
+                              bytes_accessed=self.bytes_accessed[alike])
+        factor = wave_scaling.wave_factor_vec(sub, origin, da, exact=exact)
+        overheads = (wave_scaling.dispatch_overheads(origin, da)
+                     if model_overhead else None)
+        with self._wave_lock:
+            while len(self._wave_factors) >= 4:  # a few fleets per stack
+                self._wave_factors.pop(next(iter(self._wave_factors)))
+            self._wave_factors[key] = (da, factor, overheads)
+        return factor, overheads
+
+    def peek_wave_factor(self, da: DeviceArrays, exact: bool,
+                         model_overhead: bool):
+        """The cached factor for ``da`` if warm, else None — masked
+        sweeps must not pay a full-grid factor build for partial work."""
+        hit = self._wave_factors.get((tuple(da.names), exact,
+                                      model_overhead))
+        if hit is not None and hit[0] is da:
+            return hit[1], hit[2]
+        return None
+
+    def extend(self, traces: Sequence[TrackedTrace]) -> "RaggedTraceArrays":
+        """Append traces, reusing this stack's arrays for the shared prefix.
+
+        Returns a NEW stack (stacks are immutable once built — the stack
+        cache hands one instance to many sweeps).  Concatenating the
+        ready prefix with just the new tail produces bit-identical arrays
+        to restacking everything: segment data is copied verbatim and the
+        unified kind vocabulary is the same sorted union either way."""
+        return _concat_stacks(self, _build_stack(list(traces)))
+
+
+def _concat_stacks(a: RaggedTraceArrays,
+                   b: RaggedTraceArrays) -> RaggedTraceArrays:
+    if a.kinds == b.kinds:
+        kinds, a_ids, b_ids = list(a.kinds), a.kind_ids, b.kind_ids
+    else:
+        kinds = sorted(set(a.kinds) | set(b.kinds))
+        kmap = {k: i for i, k in enumerate(kinds)}
+        a_ids = np.asarray([kmap[k] for k in a.kinds],
+                           np.int32)[a.kind_ids]
+        b_ids = np.asarray([kmap[k] for k in b.kinds],
+                           np.int32)[b.kind_ids]
+    cat = lambda f: np.concatenate([getattr(a, f), getattr(b, f)])
+    return RaggedTraceArrays(
+        offsets=np.concatenate([a.offsets, a.offsets[-1] + b.offsets[1:]]),
+        trace_ids=np.concatenate([a.trace_ids,
+                                  b.trace_ids + np.int32(a.n_traces)]),
+        origins=a.origins + b.origins, labels=a.labels + b.labels,
+        fingerprints=a.fingerprints + b.fingerprints,
+        flops=cat("flops"), bytes_accessed=cat("bytes_accessed"),
+        intensity=cat("intensity"), measured_ms=cat("measured_ms"),
+        multiplicity=cat("multiplicity"),
+        kernel_varying=cat("kernel_varying"),
+        kind_ids=np.concatenate([a_ids, b_ids]), kinds=kinds,
+        op_features=cat("op_features"))
+
+
+class _StackCache:
+    """Fingerprint-keyed LRU of built :class:`RaggedTraceArrays`.
+
+    Keys are ``((fingerprint, label), ...)`` tuples — the label rides
+    along because it is the one piece of sweep output not covered by the
+    fingerprint.  An exact hit skips stacking entirely (zero repack); a
+    request extending a cached *prefix* reuses the ready prefix arrays
+    and only stacks the new tail.  Bounded by entry count AND bytes
+    (prefix-extended supersets are independent copies, so an entry-only
+    LRU could pin many near-duplicates of a large trace set).
+    Thread-safe: the serving layer's coalescing leaders stack from
+    short-lived threads."""
+
+    def __init__(self, capacity: int = 16, max_bytes: int = 256 << 20):
+        self.capacity = capacity
+        self.max_bytes = max_bytes
+        self._data: "OrderedDict[Tuple, RaggedTraceArrays]" = OrderedDict()
+        self._bytes: Dict[Tuple, int] = {}
+        self._total_bytes = 0
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.extends = 0
+        self.builds = 0
+
+    @staticmethod
+    def _nbytes(stack: RaggedTraceArrays) -> int:
+        return sum(getattr(stack, f).nbytes
+                   for f in ("offsets", "trace_ids", "flops",
+                             "bytes_accessed", "intensity", "measured_ms",
+                             "multiplicity", "kernel_varying", "kind_ids",
+                             "op_features"))
+
+    def stack(self, traces: List[TrackedTrace]) -> RaggedTraceArrays:
+        key = tuple((t.fingerprint(), t.label) for t in traces)
+        with self._lock:
+            hit = self._data.get(key)
+            if hit is not None:
+                self._data.move_to_end(key)
+                self.hits += 1
+                return hit
+            best: Optional[Tuple] = None
+            for k in self._data:
+                if len(k) < len(key) and key[:len(k)] == k \
+                        and (best is None or len(k) > len(best)):
+                    best = k
+            base = self._data[best] if best is not None else None
+        if base is not None:
+            stack = base.extend(traces[len(best):])
+        else:
+            stack = _build_stack(traces)
+        nbytes = self._nbytes(stack)
+        with self._lock:
+            self.extends += base is not None
+            self.builds += base is None
+            if key in self._data:       # racing fill: replace accounting
+                self._total_bytes -= self._bytes.pop(key)
+            self._data[key] = stack
+            self._bytes[key] = nbytes
+            self._total_bytes += nbytes
+            self._data.move_to_end(key)
+            while self._data and (len(self._data) > self.capacity
+                                  or self._total_bytes > self.max_bytes):
+                old_key, _ = self._data.popitem(last=False)
+                self._total_bytes -= self._bytes.pop(old_key)
+        return stack
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()
+            self._bytes.clear()
+            self._total_bytes = 0
+            self.hits = self.extends = self.builds = 0
+
+
+#: the process-wide stack cache behind ``stack_traces(cache=True)``
+STACK_CACHE = _StackCache()
+
 
 def stack_traces(traces: Union["RaggedTraceArrays",
-                               Sequence[TrackedTrace]]
-                 ) -> RaggedTraceArrays:
+                               Sequence[TrackedTrace]],
+                 cache: bool = True) -> RaggedTraceArrays:
     """Stack several :class:`TrackedTrace` into one ragged SoA.
 
     Idempotent (a ready :class:`RaggedTraceArrays` passes through), so hot
-    callers can stack once and sweep many times."""
+    callers can stack once and sweep many times.  With ``cache=True``
+    (the default) the build is memoized in the process-wide
+    :data:`STACK_CACHE` keyed by trace fingerprints: repeat sweeps over
+    the same (or a superset of a cached) trace list skip the
+    ``np.concatenate`` repack entirely.  ``cache=False`` forces a fresh
+    build (benchmark baseline / kill switch)."""
     if isinstance(traces, RaggedTraceArrays):
         return traces
     traces = list(traces)
+    if not traces:
+        raise ValueError("stack_traces needs at least one trace")
+    if cache:
+        for t in traces:        # validate before keying the cache
+            if t.to_arrays().n_ops == 0:
+                raise ValueError(f"trace {t.label!r} has no ops")
+        return STACK_CACHE.stack(traces)
+    return _build_stack(traces)
+
+
+def _build_stack(traces: List[TrackedTrace]) -> RaggedTraceArrays:
     if not traces:
         raise ValueError("stack_traces needs at least one trace")
     per = [t.to_arrays() for t in traces]
@@ -296,17 +618,18 @@ class SweepPrediction:
     def total_ms(self) -> np.ndarray:
         """Iteration time grid, shape (n_traces, n_dev).
 
-        Summed per segment with the same ``.sum(axis=0)`` reduction the
-        single-trace ``FleetPrediction.total_ms`` uses, so row i is
-        bit-identical to predicting trace i alone (``np.add.reduceat``
-        would associate differently).  Memoized: cell-by-cell readers
-        (``time_for``) must not re-reduce the grid per access."""
+        One ``np.add.reduceat`` over the segment offsets instead of a
+        per-trace Python loop; ``FleetPrediction.total_ms`` uses the same
+        strictly-sequential reduceat accumulation, so row i stays
+        bit-identical to predicting trace i alone at any segment length.
+        Cell-masked sweeps leave NaN in uncomputed cells, which the
+        reduction propagates — readers must only consult computed cells.
+        Memoized: cell-by-cell readers (``time_for``) must not re-reduce
+        the grid per access."""
         if self._totals is None:
-            off = self.arrays.offsets
             weighted = self.op_ms * self.arrays.multiplicity[:, None]
-            self._totals = np.stack(
-                [weighted[off[i]:off[i + 1]].sum(axis=0)
-                 for i in range(self.n_traces)])
+            self._totals = np.add.reduceat(weighted,
+                                           self.arrays.offsets[:-1], axis=0)
         return self._totals
 
     def row(self, i: int) -> FleetPrediction:
@@ -322,9 +645,8 @@ class SweepPrediction:
         return float(self.total_ms[i, self.dests.index(dest)])
 
     def as_dicts(self) -> List[Dict[str, float]]:
-        totals = self.total_ms
-        return [dict(zip(self.dests, totals[i].tolist()))
-                for i in range(self.n_traces)]
+        # one C-level tolist() for the whole grid, not one per trace
+        return [dict(zip(self.dests, row)) for row in self.total_ms.tolist()]
 
 
 class FusedMLPScorer:
@@ -367,8 +689,16 @@ class FusedMLPScorer:
 
     def score_ms(self, feats_by_kind: Dict[str, np.ndarray]
                  ) -> Dict[str, np.ndarray]:
-        """Raw feature rows per kind -> predicted ms per kind, one launch."""
+        """Raw feature rows per kind -> predicted ms per kind, one launch.
+
+        The block count is padded to a jit bucket
+        (:func:`repro.kernels.fused_mlp_score.bucket_blocks`) before the
+        launch: coalesced service batches arrive at arbitrary sizes, and
+        without bucketing every distinct size would recompile the jitted
+        scorer.  Padding blocks carry zero rows through MLP 0 and are
+        sliced off before un-logging."""
         from repro.kernels import ops as kernel_ops
+        from repro.kernels.fused_mlp_score import bucket_blocks
         import jax.numpy as jnp
         bm = self.block_m
         blocks, kind_of_block, counts = [], [], []
@@ -381,6 +711,11 @@ class FusedMLPScorer:
             blocks.append(xp)
             kind_of_block.extend([self.kinds.index(kind)] * nb)
             counts.append(n)
+        pad_blocks = bucket_blocks(len(kind_of_block)) - len(kind_of_block)
+        if pad_blocks:
+            blocks.append(np.zeros((pad_blocks * bm, self.hidden),
+                                   np.float32))
+            kind_of_block.extend([0] * pad_blocks)
         log_ms = np.asarray(kernel_ops.fused_mlp_score(
             jnp.asarray(np.concatenate(blocks)),
             jnp.asarray(np.asarray(kind_of_block, np.int32)),
@@ -429,7 +764,10 @@ def predict_sweep(traces: Union[RaggedTraceArrays, Sequence[TrackedTrace]],
                   mlps: Optional[Dict] = None,
                   exact: bool = False,
                   model_overhead: bool = False,
-                  scorer=None) -> SweepPrediction:
+                  scorer=None,
+                  cell_mask: Optional[np.ndarray] = None,
+                  stack_cache: bool = True,
+                  feature_buffers: bool = True) -> SweepPrediction:
     """Predict every trace on every destination in one ragged pass.
 
     Row i of the result reproduces :func:`predict_trace_batch` on trace i
@@ -440,34 +778,51 @@ def predict_sweep(traces: Union[RaggedTraceArrays, Sequence[TrackedTrace]],
     is active) but batch all traces' ops together, so their jitted
     float32 batches pad to different shapes than the per-trace spelling —
     equal to ~1e-6 relative, not bit-for-bit.
+
+    ``cell_mask`` — bool (n_traces, n_dev), True = compute — enables
+    partial-compute sweeps: only masked-in cells are evaluated (wave
+    scaling and the analytical fallback via flat element-wise gathers,
+    bitwise-equal to the full grid; MLP rows via pair-gathered feature
+    rows, tolerance-equal like any re-batched MLP forward), and every
+    masked-out cell is left NaN.  The serve layer uses this to fill only
+    the cache-cold cells of a sweep.  ``stack_cache``/``feature_buffers``
+    select the zero-repack stack cache and pooled feature buffers
+    (defaults on; off is the allocate-everything compat spelling).
     """
-    ragged = stack_traces(traces)
+    ragged = stack_traces(traces, cache=stack_cache)
     da = devices.as_arrays(dests)
     mlps = mlps or {}
+    if cell_mask is not None:
+        cell_mask = np.asarray(cell_mask, bool)
+        if cell_mask.shape != (ragged.n_traces, da.n):
+            raise ValueError(
+                f"cell_mask shape {cell_mask.shape} != "
+                f"(n_traces, n_dev) = {(ragged.n_traces, da.n)}")
+        if cell_mask.all():
+            cell_mask = None    # the full grid is the fast spelling
+    if cell_mask is not None:
+        return _predict_sweep_masked(ragged, da, mlps, exact,
+                                     model_overhead, scorer, cell_mask,
+                                     feature_buffers=feature_buffers)
     out = np.empty((ragged.n_ops, da.n), np.float64)
 
-    # kernel-alike: segment-aware wave scaling over the whole ragged grid
+    # kernel-alike: segment-aware wave scaling over the whole ragged grid,
+    # with the t-independent factor cached on the stack — a repeat sweep
+    # of a cached stack pays only the t * factor combine
     alike = ~ragged.kernel_varying
     if alike.any():
         t_o = ragged.measured_ms[alike]
         if np.isnan(t_o).any():
-            bad = int(np.flatnonzero(alike)[np.isnan(t_o).argmax()])
-            tid = int(ragged.trace_ids[bad])
-            raise ValueError(
-                f"trace {ragged.labels[tid]!r} op row "
-                f"{bad - int(ragged.offsets[tid])} has no origin "
-                f"measurement")
-        sub = SimpleNamespace(intensity=ragged.intensity[alike],
-                              bytes_accessed=ragged.bytes_accessed[alike])
-        out[alike] = wave_scaling.scale_times_vec(
-            t_o, sub, ragged.alike_origin_arrays(), da, exact=exact,
-            model_overhead=model_overhead)
+            _raise_unmeasured(ragged, np.flatnonzero(alike), t_o)
+        factor, overheads = ragged.alike_wave_factor(da, exact,
+                                                     model_overhead)
+        out[alike] = wave_scaling.combine_wave_factor(t_o, factor,
+                                                      overheads)
 
     # kernel-varying without an MLP: vectorized analytical fallback,
     # computed on the masked rows only (the formula is element-wise, so
     # this matches predict_trace_batch's full-grid-then-mask bitwise)
-    kind_has_mlp = np.asarray([k in mlps for k in ragged.kinds], bool)
-    no_mlp = ragged.kernel_varying & ~kind_has_mlp[ragged.kind_ids]
+    no_mlp = _no_mlp_rows(ragged, mlps)
     if no_mlp.any():
         sub = SimpleNamespace(
             kernel_varying=ragged.kernel_varying[no_mlp],
@@ -481,20 +836,211 @@ def predict_sweep(traces: Union[RaggedTraceArrays, Sequence[TrackedTrace]],
     if fused is not None:
         feats_by_kind: Dict[str, np.ndarray] = {}
         idx_by_kind: Dict[str, np.ndarray] = {}
-        for kid, kind in enumerate(ragged.kinds):
-            if kind not in mlps:
-                continue
-            idx = np.flatnonzero(ragged.kernel_varying
-                                 & (ragged.kind_ids == kid))
-            if not len(idx):
-                continue
-            idx_by_kind[kind] = idx
-            feats_by_kind[kind] = mlp_features_grid(ragged, idx, da)
-        if feats_by_kind:
-            scored = fused.score_ms(feats_by_kind)
-            for kind, idx in idx_by_kind.items():
-                out[idx] = scored[kind].reshape(len(idx), da.n)
+        bufs: List[np.ndarray] = []
+        dev_t = (dataset_mod.transform_features(da.feature_matrix)
+                 if feature_buffers else None)
+        n_feat = ragged.op_features.shape[1] + da.feature_matrix.shape[1]
+        try:
+            for kind, idx in _mlp_kind_rows(ragged, mlps):
+                idx_by_kind[kind] = idx
+                if feature_buffers:
+                    op_t = dataset_mod.transform_features(
+                        ragged.op_features[idx])
+                    buf = _FEATURE_BUFFERS.acquire(len(idx) * da.n, n_feat)
+                    bufs.append(buf)
+                    feats_by_kind[kind] = _features_grid_into(buf, op_t,
+                                                              dev_t)
+                else:
+                    feats_by_kind[kind] = mlp_features_grid(ragged, idx, da)
+            if feats_by_kind:
+                scored = fused.score_ms(feats_by_kind)
+                for kind, idx in idx_by_kind.items():
+                    out[idx] = scored[kind].reshape(len(idx), da.n)
+        finally:
+            for buf in bufs:
+                _FEATURE_BUFFERS.release(buf)
     else:
-        _mlp_scores_per_kind(ragged, da, mlps, out)
+        _mlp_scores_per_kind(ragged, da, mlps, out,
+                             feature_buffers=feature_buffers)
+
+    return SweepPrediction(dests=list(da.names), op_ms=out, arrays=ragged)
+
+
+def _no_mlp_rows(ragged: RaggedTraceArrays, mlps: Dict) -> np.ndarray:
+    kind_has_mlp = np.asarray([k in mlps for k in ragged.kinds], bool)
+    return ragged.kernel_varying & ~kind_has_mlp[ragged.kind_ids]
+
+
+def _raise_unmeasured(ragged: RaggedTraceArrays, rows: np.ndarray,
+                      t_o: np.ndarray) -> None:
+    bad = int(rows[np.isnan(t_o).argmax()])
+    tid = int(ragged.trace_ids[bad])
+    raise ValueError(
+        f"trace {ragged.labels[tid]!r} op row "
+        f"{bad - int(ragged.offsets[tid])} has no origin measurement")
+
+
+#: mask-row pattern count up to which the masked sweep computes broadcast
+#: subgrids per pattern group instead of per-cell gathers.  Production
+#: warm structure clusters into a handful of patterns (clients warm a few
+#: distinct fleets), where subgrids skip all gather/scatter overhead; a
+#: fully random mask degenerates to one pattern per trace, where the flat
+#: per-cell path wins.
+_PATTERN_GROUP_LIMIT = 8
+
+
+def _predict_sweep_masked(ragged: RaggedTraceArrays, da: DeviceArrays,
+                          mlps: Dict, exact: bool, model_overhead: bool,
+                          scorer, cell_mask: np.ndarray,
+                          feature_buffers: bool = True) -> SweepPrediction:
+    """Partial-compute sweep: evaluate only the masked-in cells.
+
+    Every computed cell reproduces the full-grid value — bitwise on the
+    wave-scaling/analytical paths (both the pattern-grouped subgrids and
+    the flat per-cell gathers run the identical element-wise
+    expressions), to MLP-forward tolerance on trained-MLP cells (pair
+    batches pad differently, same caveat as any re-batched forward).
+    Masked-out cells stay NaN; callers (the planner's cell-level cache
+    fill) must only read computed cells."""
+    out = np.full((ragged.n_ops, da.n), np.nan)
+    op_mask = cell_mask[ragged.trace_ids]            # (n_ops, n_dev)
+    patterns, inverse = np.unique(cell_mask, axis=0, return_inverse=True)
+    inverse = np.asarray(inverse).reshape(-1)   # numpy 2.0 axis quirk
+    grouped = len(patterns) <= _PATTERN_GROUP_LIMIT
+    ao = ragged.alike_origin_arrays()
+    alike_ops = ~ragged.kernel_varying
+    no_mlp_ops = _no_mlp_rows(ragged, mlps)
+
+    cached = ragged.peek_wave_factor(da, exact, model_overhead)
+    if grouped:
+        # position of each global op row inside the alike subset (the
+        # origin arrays are stored alike-subset-major)
+        alike_index = np.cumsum(alike_ops) - 1
+        for p, pattern in enumerate(patterns):
+            cols = np.flatnonzero(pattern)
+            if not len(cols):
+                continue
+            in_group = (inverse == p)[ragged.trace_ids]
+            da_sub = da.take(cols)
+            rows = np.flatnonzero(in_group & alike_ops)
+            if len(rows):
+                t_o = ragged.measured_ms[rows]
+                if np.isnan(t_o).any():
+                    _raise_unmeasured(ragged, rows, t_o)
+                pos = alike_index[rows]
+                if cached is not None:
+                    # warm factor: slice the cached grid (same elements,
+                    # so the combine stays bitwise) instead of re-deriving
+                    factor, overheads = cached
+                    f_sub = factor[np.ix_(pos, cols)]
+                    oh = (None if overheads is None else
+                          (overheads[0][pos], overheads[1][cols]))
+                    out[np.ix_(rows, cols)] = \
+                        wave_scaling.combine_wave_factor(t_o, f_sub, oh)
+                else:
+                    sub = SimpleNamespace(
+                        intensity=ragged.intensity[rows],
+                        bytes_accessed=ragged.bytes_accessed[rows])
+                    origin_sub = devices.OriginArrays(
+                        kinds=([ao.kinds[i] for i in pos]
+                               if model_overhead else []),
+                        mem_bandwidth=ao.mem_bandwidth[pos],
+                        clock_hz=ao.clock_hz[pos],
+                        wave_size=ao.wave_size[pos])
+                    out[np.ix_(rows, cols)] = wave_scaling.scale_times_vec(
+                        t_o, sub, origin_sub, da_sub, exact=exact,
+                        model_overhead=model_overhead)
+            rows = np.flatnonzero(in_group & no_mlp_ops)
+            if len(rows):
+                sub = SimpleNamespace(
+                    kernel_varying=ragged.kernel_varying[rows],
+                    flops=ragged.flops[rows],
+                    bytes_accessed=ragged.bytes_accessed[rows])
+                out[np.ix_(rows, cols)] = analytical_ms_vec(sub, da_sub)
+    else:
+        # kernel-alike cells: flat element-wise wave scaling
+        alike_rows = np.flatnonzero(alike_ops)
+        if len(alike_rows):
+            r, c = np.nonzero(op_mask[alike_rows])
+            if len(r):
+                rows = alike_rows[r]
+                t_cells = ragged.measured_ms[rows]
+                if np.isnan(t_cells).any():
+                    _raise_unmeasured(ragged, rows, t_cells)
+                if cached is not None:
+                    factor, overheads = cached
+                    f_cells = factor[r, c]
+                    if overheads is None:
+                        out[rows, c] = t_cells * f_cells
+                    else:
+                        oh_o, oh_d = overheads
+                        out[rows, c] = (np.maximum(t_cells - oh_o[r], 0.0)
+                                        * f_cells + oh_d[c])
+                else:
+                    sub = SimpleNamespace(
+                        intensity=ragged.intensity[rows],
+                        bytes_accessed=ragged.bytes_accessed[rows])
+                    # gather origin fields directly: OriginArrays.take
+                    # would materialize a per-cell Python list of kind
+                    # strings, which only the overhead model reads
+                    origin_cells = devices.OriginArrays(
+                        kinds=([ao.kinds[i] for i in r]
+                               if model_overhead else []),
+                        mem_bandwidth=ao.mem_bandwidth[r],
+                        clock_hz=ao.clock_hz[r], wave_size=ao.wave_size[r])
+                    out[rows, c] = wave_scaling.scale_times_flat(
+                        t_cells, sub, origin_cells, da, c, exact=exact,
+                        model_overhead=model_overhead)
+
+        # kernel-varying cells without an MLP: flat analytical fallback
+        no_mlp_rows = np.flatnonzero(no_mlp_ops)
+        if len(no_mlp_rows):
+            r, c = np.nonzero(op_mask[no_mlp_rows])
+            if len(r):
+                rows = no_mlp_rows[r]
+                sub = SimpleNamespace(
+                    kernel_varying=ragged.kernel_varying[rows],
+                    flops=ragged.flops[rows],
+                    bytes_accessed=ragged.bytes_accessed[rows])
+                out[rows, c] = analytical_ms_flat(sub, da, c)
+
+    # kernel-varying cells with an MLP: pair-gathered feature rows
+    fused = _resolve_scorer(scorer, mlps)
+    dev_t = dataset_mod.transform_features(da.feature_matrix)
+    n_feat = ragged.op_features.shape[1] + da.feature_matrix.shape[1]
+    feats_by_kind: Dict[str, np.ndarray] = {}
+    cells_by_kind: Dict[str, Tuple[np.ndarray, np.ndarray]] = {}
+    bufs: List[np.ndarray] = []
+    try:
+        for kind, idx in _mlp_kind_rows(ragged, mlps):
+            r, c = np.nonzero(op_mask[idx])
+            if not len(r):
+                continue
+            rows = idx[r]
+            # transform only rows that actually appear in cold pairs —
+            # work stays proportional to cold cells, not to the kind's
+            # full op count (log1p per row is identical either way)
+            used, r_used = np.unique(r, return_inverse=True)
+            op_t = dataset_mod.transform_features(
+                ragged.op_features[idx[used]])
+            if feature_buffers:     # the pool is a kill-switchable opt
+                buf = _FEATURE_BUFFERS.acquire(len(r), n_feat)
+                bufs.append(buf)
+            else:
+                buf = np.empty((len(r), n_feat), np.float32)
+            feats_by_kind[kind] = _features_pairs_into(buf, op_t, dev_t,
+                                                       r_used, c)
+            cells_by_kind[kind] = (rows, c)
+        if feats_by_kind:
+            if fused is not None:
+                scored = fused.score_ms(feats_by_kind)
+            else:
+                scored = {kind: mlps[kind].predict_ms(feats)
+                          for kind, feats in feats_by_kind.items()}
+            for kind, (rows, c) in cells_by_kind.items():
+                out[rows, c] = scored[kind]
+    finally:
+        for buf in bufs:
+            _FEATURE_BUFFERS.release(buf)
 
     return SweepPrediction(dests=list(da.names), op_ms=out, arrays=ragged)

@@ -25,6 +25,7 @@ need:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -115,6 +116,22 @@ class DeviceArrays:
     def n(self) -> int:
         return len(self.names)
 
+    def take(self, idx) -> "DeviceArrays":
+        """Column subset (e.g. one mask-pattern group of a cell-masked
+        sweep).  Element [i, j] of a grid computed against the subset
+        equals element [i, idx[j]] against the full fleet bitwise — all
+        grid math is element-wise over these arrays."""
+        cols = [int(j) for j in idx]
+        return DeviceArrays(
+            names=[self.names[j] for j in cols],
+            kinds=[self.kinds[j] for j in cols],
+            peak_flops=self.peak_flops[idx],
+            mem_bandwidth=self.mem_bandwidth[idx],
+            clock_hz=self.clock_hz[idx], wave_size=self.wave_size[idx],
+            ridge_point=self.ridge_point[idx],
+            cost_per_hour=self.cost_per_hour[idx],
+            feature_matrix=self.feature_matrix[idx])
+
 
 @dataclasses.dataclass(frozen=True)
 class OriginArrays:
@@ -155,8 +172,18 @@ def repeat_origins(specs: Sequence[DeviceSpec],
         wave_size=rep([float(s.wave_size) for s in specs]))
 
 
-def spec_arrays(specs: Sequence[DeviceSpec]) -> DeviceArrays:
-    """Stack device specs into the SoA layout the batched engine consumes."""
+@functools.lru_cache(maxsize=256)
+def _spec_arrays_cached(specs: tuple) -> DeviceArrays:
+    """Memoized :func:`spec_arrays` body, keyed on the (frozen, hashable)
+    spec tuple itself rather than on names: a registry entry replaced by
+    tests (or a same-named spec with different numbers) can never be
+    served a stale SoA, while every repeated fleet spelling — the serving
+    hot path resolves its destination list on each request — reuses one
+    immutable ``DeviceArrays`` instead of rebuilding eight arrays."""
+    return _build_spec_arrays(specs)
+
+
+def _build_spec_arrays(specs: Sequence[DeviceSpec]) -> DeviceArrays:
     return DeviceArrays(
         names=[s.name for s in specs],
         kinds=[s.kind for s in specs],
@@ -172,6 +199,14 @@ def spec_arrays(specs: Sequence[DeviceSpec]) -> DeviceArrays:
         feature_matrix=np.asarray([s.feature_vector() for s in specs],
                                   np.float64),
     )
+
+
+def spec_arrays(specs: Sequence[DeviceSpec]) -> DeviceArrays:
+    """Stack device specs into the SoA layout the batched engine consumes.
+
+    Memoized on the spec tuple (LRU): callers must treat the result as
+    immutable — the engine only ever reads it."""
+    return _spec_arrays_cached(tuple(specs))
 
 
 def arrays_for(names: Sequence[str]) -> DeviceArrays:

@@ -92,7 +92,8 @@ class HabitatPredictor(_FleetTraceMixin):
 
     def __init__(self, mlps: Optional[Dict[str, mlp.TrainedMLP]] = None,
                  exact_wave: bool = False, model_overhead: bool = False,
-                 sweep_scorer: str = "auto"):
+                 sweep_scorer: str = "auto", stack_cache: bool = True,
+                 feature_buffers: bool = True):
         self.mlps = mlps or {}
         self.exact_wave = exact_wave
         self.model_overhead = model_overhead
@@ -100,6 +101,13 @@ class HabitatPredictor(_FleetTraceMixin):
         #: per-kind jitted forwards on CPU), "off", or a forced fused impl
         #: ("pallas" | "interpret" | "jnp").
         self.sweep_scorer = sweep_scorer
+        #: hot-path plumbing knobs (results are identical either way):
+        #: the fingerprint-keyed stack cache (skips ragged repacks) and
+        #: the pooled feature-grid buffers (skip per-pass reallocation).
+        #: Off together they reproduce the PR 3 allocate-per-pass engine —
+        #: kept as the benchmark baseline and as kill switches.
+        self.stack_cache = stack_cache
+        self.feature_buffers = feature_buffers
         self._scorer_cache: Dict = {}
 
     # -- per-op ------------------------------------------------------------
@@ -135,7 +143,8 @@ class HabitatPredictor(_FleetTraceMixin):
             dests = sorted(devices.all_devices())
         return batched.predict_trace_batch(
             trace, dests, mlps=self.mlps, exact=self.exact_wave,
-            model_overhead=self.model_overhead)
+            model_overhead=self.model_overhead,
+            feature_buffers=self.feature_buffers)
 
     # -- multi-trace ragged sweep ------------------------------------------
     def _fused_scorer(self, spelling):
@@ -155,19 +164,25 @@ class HabitatPredictor(_FleetTraceMixin):
         return self._scorer_cache["scorer"]
 
     def predict_sweep(self, traces, dests: Optional[Sequence[str]] = None,
-                      scorer=None) -> batched.SweepPrediction:
+                      scorer=None,
+                      cell_mask=None) -> batched.SweepPrediction:
         """One ragged pass: every trace x every destination device.
 
         ``traces`` is a sequence of ``TrackedTrace`` or a prebuilt
         :class:`~repro.core.batched.RaggedTraceArrays`; ``scorer`` defaults
-        to the predictor's ``sweep_scorer`` policy."""
+        to the predictor's ``sweep_scorer`` policy.  ``cell_mask`` (bool,
+        (n_traces, n_dests), True = compute) requests a partial-compute
+        sweep: only masked-in cells are evaluated, the rest stay NaN —
+        the planner's cell-level cache fill rides on this."""
         if dests is None:
             dests = sorted(devices.all_devices())
         spelling = self.sweep_scorer if scorer is None else scorer
         return batched.predict_sweep(
             traces, dests, mlps=self.mlps, exact=self.exact_wave,
             model_overhead=self.model_overhead,
-            scorer=self._fused_scorer(spelling))
+            scorer=self._fused_scorer(spelling), cell_mask=cell_mask,
+            stack_cache=self.stack_cache,
+            feature_buffers=self.feature_buffers)
 
     def sweep_config_key(self) -> tuple:
         """Cache-key identity of sweep() results.

@@ -97,23 +97,102 @@ def flops_ratio_heuristic(t_o_ms: float, origin: DeviceSpec,
 # ---------------------------------------------------------------------------
 # Vectorized fleet path: Eqs. 1-3 over an (n_ops x n_devices) grid at once.
 # ---------------------------------------------------------------------------
-def gamma_vec(intensity: np.ndarray, ridge: np.ndarray) -> np.ndarray:
-    """Eq. 3 for every (op, destination) pair.
+def _gamma_core(x: np.ndarray, r: np.ndarray) -> np.ndarray:
+    """Eq. 3 on broadcast-ready arrays.
 
-    ``intensity`` is (n_ops,) arithmetic intensities, ``ridge`` (n_dev,)
-    destination ridge points; returns γ with shape (n_ops, n_dev)."""
-    x = np.asarray(intensity, np.float64)[:, None]
-    r = np.asarray(ridge, np.float64)[None, :]
+    The one γ expression shared by the grid and flat-cell spellings: each
+    output element is produced by the same IEEE operation sequence
+    regardless of the input shapes, so ``gamma_vec(x, r)[i, j]`` equals
+    the flat evaluation on ``(x[i], r[j])`` bitwise."""
     with np.errstate(divide="ignore", invalid="ignore"):
         g = np.where(x < r, 1.0 - 0.5 * x / r,
                      0.5 * r / np.where(x > 0.0, x, 1.0))
     return np.where(x <= 0.0, 1.0, g)
 
 
+def gamma_vec(intensity: np.ndarray, ridge: np.ndarray) -> np.ndarray:
+    """Eq. 3 for every (op, destination) pair.
+
+    ``intensity`` is (n_ops,) arithmetic intensities, ``ridge`` (n_dev,)
+    destination ridge points; returns γ with shape (n_ops, n_dev)."""
+    return _gamma_core(np.asarray(intensity, np.float64)[:, None],
+                       np.asarray(ridge, np.float64)[None, :])
+
+
 def num_tiles_vec(bytes_accessed: np.ndarray) -> np.ndarray:
     """Vectorized ``num_tiles``: B per op, shape (n_ops,)."""
     b = np.ceil(np.asarray(bytes_accessed, np.float64) / TILE_BYTES)
     return np.maximum(b, 1.0)
+
+
+def wave_factor_vec(ops_arrays,
+                    origin: Union[DeviceSpec,
+                                  "devices_mod.OriginArrays"],
+                    dests: Union[DeviceArrays, Sequence[DeviceSpec]],
+                    exact: bool = False,
+                    gamma_override: Optional[float] = None) -> np.ndarray:
+    """The t-independent scaling-factor grid of :func:`scale_times_vec`.
+
+    Element [i, j] is the multiplier applied to op i's measured time to
+    land on device j — a pure function of the (immutable) op arrays and
+    the destination fleet, which is why the sweep engine caches it per
+    (stack, fleet) and repeat sweeps skip the pow-heavy recompute.
+    Splitting the factor out of :func:`scale_times_vec` changes no
+    operation order: the final ``t * factor`` combine is exactly the
+    expression the unsplit spelling ended with."""
+    da = devices_mod.as_arrays(dests)
+    if gamma_override is None:
+        g = gamma_vec(ops_arrays.intensity, da.ridge_point)
+    else:
+        g = np.full((len(np.atleast_1d(ops_arrays.intensity)), da.n),
+                    float(gamma_override))
+    # origin-side columns: (1, 1) for a single spec, (n_ops, 1) per-op
+    o_bw = np.atleast_1d(np.asarray(origin.mem_bandwidth,
+                                    np.float64))[:, None]
+    o_ck = np.atleast_1d(np.asarray(origin.clock_hz, np.float64))[:, None]
+    o_w = np.atleast_1d(np.asarray(origin.wave_size, np.float64))[:, None]
+    d_ratio = o_bw / da.mem_bandwidth[None, :]
+    c_ratio = o_ck / da.clock_hz[None, :]
+    w_d = da.wave_size
+    if exact:
+        b = num_tiles_vec(ops_arrays.bytes_accessed)           # (n_ops,)
+        waves_d = np.ceil(b[:, None] / w_d[None, :])
+        waves_o = np.ceil(b[:, None] / o_w)
+        return (waves_d
+                * (d_ratio * (w_d[None, :] / o_w)) ** g
+                * c_ratio ** (1.0 - g)
+                / waves_o)
+    return (d_ratio ** g
+            * (o_w / w_d[None, :]) ** (1.0 - g)
+            * c_ratio ** (1.0 - g))
+
+
+def dispatch_overheads(origin: Union[DeviceSpec,
+                                     "devices_mod.OriginArrays"],
+                       dests: DeviceArrays):
+    """(origin, destination) dispatch-overhead terms of the overhead
+    model: scalar-or-(n_ops,) on the origin side, (n_dev,) per dest."""
+    if isinstance(origin, DeviceSpec):
+        oh_o = DISPATCH_OVERHEAD_MS[origin.kind]
+    else:
+        oh_o = np.asarray([DISPATCH_OVERHEAD_MS[k] for k in origin.kinds],
+                          np.float64)
+    oh_d = np.asarray([DISPATCH_OVERHEAD_MS[k] for k in dests.kinds],
+                      np.float64)
+    return oh_o, oh_d
+
+
+def combine_wave_factor(t_o_ms: np.ndarray, factor: np.ndarray,
+                        overheads=None) -> np.ndarray:
+    """Apply a (possibly cached) factor grid to measured times — the
+    final combine of :func:`scale_times_vec`, shared so cached-factor
+    sweeps stay bitwise-identical to the unsplit spelling."""
+    t = np.atleast_1d(np.asarray(t_o_ms, np.float64))
+    if overheads is not None:
+        oh_o, oh_d = overheads
+        return (np.maximum(t - oh_o, 0.0)[:, None] * factor
+                + oh_d[None, :])
+    return t[:, None] * factor
 
 
 def scale_times_vec(t_o_ms: np.ndarray, ops_arrays,
@@ -137,39 +216,62 @@ def scale_times_vec(t_o_ms: np.ndarray, ops_arrays,
     operation sequence either way, so the two spellings agree bitwise.
     """
     da = devices_mod.as_arrays(dests)
-    t = np.atleast_1d(np.asarray(t_o_ms, np.float64))
-    per_op_origin = not isinstance(origin, DeviceSpec)
+    factor = wave_factor_vec(ops_arrays, origin, da, exact=exact,
+                             gamma_override=gamma_override)
+    overheads = dispatch_overheads(origin, da) if model_overhead else None
+    return combine_wave_factor(t_o_ms, factor, overheads)
+
+
+def scale_times_flat(t_o_ms: np.ndarray, ops_arrays,
+                     origin: "devices_mod.OriginArrays",
+                     dests: Union[DeviceArrays, Sequence[DeviceSpec]],
+                     dest_idx: np.ndarray,
+                     exact: bool = False,
+                     gamma_override: Optional[float] = None,
+                     model_overhead: bool = False) -> np.ndarray:
+    """Wave scaling over a flat list of (op, device) cells, shape (M,).
+
+    The partial-compute spelling of :func:`scale_times_vec` used by the
+    cell-masked sweep engine: every input is *per cell* — ``t_o_ms`` and
+    the ``ops_arrays`` rows are already gathered to one entry per cell,
+    ``origin`` is an :class:`~repro.core.devices.OriginArrays` with one
+    row per cell, and ``dest_idx[k]`` selects the destination device of
+    cell ``k``.  Cell ``k`` is computed by the exact same IEEE operation
+    sequence as grid element ``[i, j]`` of ``scale_times_vec`` (both are
+    pure element-wise broadcasts of the same ufuncs), so a masked sweep
+    reproduces the full-grid values BITWISE on this path.
+    """
+    da = devices_mod.as_arrays(dests)
+    j = np.asarray(dest_idx, np.intp)
+    t = np.asarray(t_o_ms, np.float64)
+    d_bw, d_ck = da.mem_bandwidth[j], da.clock_hz[j]
+    w_d = da.wave_size[j]
     if gamma_override is None:
-        g = gamma_vec(ops_arrays.intensity, da.ridge_point)
+        g = _gamma_core(np.asarray(ops_arrays.intensity, np.float64),
+                        da.ridge_point[j])
     else:
-        g = np.full((len(t), da.n), float(gamma_override))
-    # origin-side columns: (1, 1) for a single spec, (n_ops, 1) per-op
-    o_bw = np.atleast_1d(np.asarray(origin.mem_bandwidth,
-                                    np.float64))[:, None]
-    o_ck = np.atleast_1d(np.asarray(origin.clock_hz, np.float64))[:, None]
-    o_w = np.atleast_1d(np.asarray(origin.wave_size, np.float64))[:, None]
-    d_ratio = o_bw / da.mem_bandwidth[None, :]
-    c_ratio = o_ck / da.clock_hz[None, :]
-    w_d = da.wave_size
+        g = np.full(t.shape, float(gamma_override))
+    o_bw = np.asarray(origin.mem_bandwidth, np.float64)
+    o_ck = np.asarray(origin.clock_hz, np.float64)
+    o_w = np.asarray(origin.wave_size, np.float64)
+    d_ratio = o_bw / d_bw
+    c_ratio = o_ck / d_ck
     if exact:
-        b = num_tiles_vec(ops_arrays.bytes_accessed)           # (n_ops,)
-        waves_d = np.ceil(b[:, None] / w_d[None, :])
-        waves_o = np.ceil(b[:, None] / o_w)
+        b = num_tiles_vec(ops_arrays.bytes_accessed)
+        waves_d = np.ceil(b / w_d)
+        waves_o = np.ceil(b / o_w)
         factor = (waves_d
-                  * (d_ratio * (w_d[None, :] / o_w)) ** g
+                  * (d_ratio * (w_d / o_w)) ** g
                   * c_ratio ** (1.0 - g)
                   / waves_o)
     else:
         factor = (d_ratio ** g
-                  * (o_w / w_d[None, :]) ** (1.0 - g)
+                  * (o_w / w_d) ** (1.0 - g)
                   * c_ratio ** (1.0 - g))
     if model_overhead:
-        if per_op_origin:
-            oh_o = np.asarray([DISPATCH_OVERHEAD_MS[k]
-                               for k in origin.kinds], np.float64)
-        else:
-            oh_o = DISPATCH_OVERHEAD_MS[origin.kind]
-        oh_d = np.asarray([DISPATCH_OVERHEAD_MS[k] for k in da.kinds],
+        oh_o = np.asarray([DISPATCH_OVERHEAD_MS[k] for k in origin.kinds],
                           np.float64)
-        return (np.maximum(t - oh_o, 0.0)[:, None] * factor + oh_d[None, :])
-    return t[:, None] * factor
+        oh_d = np.asarray([DISPATCH_OVERHEAD_MS[k] for k in da.kinds],
+                          np.float64)[j]
+        return np.maximum(t - oh_o, 0.0) * factor + oh_d
+    return t * factor

@@ -100,7 +100,8 @@ class FleetPlanner:
     actually ran (one per predict/sweep call with any cache miss)."""
 
     def __init__(self, predictor=None, fleet: Optional[Sequence[str]] = None,
-                 cache_size: int = 4096, cache: BackendLike = None):
+                 cache_size: int = 4096, cache: BackendLike = None,
+                 cell_fill: bool = True):
         if predictor is None:
             from repro.core.predictor import HabitatPredictor
             predictor = HabitatPredictor()
@@ -108,9 +109,35 @@ class FleetPlanner:
         self.cache_size = cache_size
         self.cache = make_backend(cache, cache_size)
         self.engine_passes = 0
+        #: cell-level partial-compute sweeps: pass the cold-cell mask down
+        #: to ``predict_sweep`` so warm (trace, device) cells never hit
+        #: wave scaling or the MLP scorer again.  ``False`` restores the
+        #: PR 3 rectangular recompute (benchmark baseline / kill switch);
+        #: predictors whose ``predict_sweep`` lacks ``cell_mask`` fall
+        #: back to the rectangle automatically.
+        self.cell_fill = cell_fill
+        self._cell_mask_ok = self._supports_cell_mask(predictor)
         self._lock = threading.Lock()   # before the fleet setter needs it
         self.fleet = (sorted(devices.all_devices()) if fleet is None
                       else list(fleet))
+
+    @staticmethod
+    def _supports_cell_mask(predictor) -> bool:
+        import inspect
+        fn = getattr(predictor, "predict_sweep", None)
+        if fn is None:
+            return False
+        try:
+            return "cell_mask" in inspect.signature(fn).parameters
+        except (TypeError, ValueError):
+            return False
+
+    def engine_pass_count(self) -> int:
+        """Locked read of the engine-pass counter (for ``stats()``
+        snapshots; the attribute itself is only written under
+        ``self._lock``)."""
+        with self._lock:
+            return self.engine_passes
 
     @property
     def stats(self) -> CacheStats:
@@ -263,16 +290,29 @@ class FleetPlanner:
                 else:
                     missing.setdefault(i, []).append(name)
         if missing:
-            # one RECTANGULAR ragged pass: [traces with any miss] x [union
-            # of missed devices].  Cells of that grid that were cache hits
-            # are priced as a byproduct but NOT stored or returned — the
-            # hit kept its served value, so hit accounting stays truthful
-            # and cached values never churn within one key.
+            # one ragged pass: [traces with any miss] x [union of missed
+            # devices].  With cell-level fills (the default) a cold-cell
+            # mask rides along, so warm cells of that rectangle are NOT
+            # recomputed — they stay NaN in the engine grid and keep their
+            # served values; without mask support the full rectangle is
+            # priced and the warm byproducts are simply dropped.  Either
+            # way hit accounting stays truthful and cached values never
+            # churn within one key.
             run = sorted(missing)
             miss_sets = {i: set(missing[i]) for i in run}
             union: List[str] = [d for d in dests
                                 if any(d in miss_sets[i] for i in run)]
-            totals = self._sweep_totals([traces[i] for i in run], union)
+            mask: Optional[np.ndarray] = None
+            if self.cell_fill and self._cell_mask_ok:
+                col = {name: j for j, name in enumerate(union)}
+                mask = np.zeros((len(run), len(union)), bool)
+                for row, i in enumerate(run):
+                    for name in miss_sets[i]:
+                        mask[row, col[name]] = True
+                if mask.all():
+                    mask = None     # cold rectangle: full grid is faster
+            totals = self._sweep_totals([traces[i] for i in run], union,
+                                        cell_mask=mask)
             items: List[Tuple[Tuple, float]] = []
             for row, i in enumerate(run):
                 vals = totals[row].tolist()   # C-level float conversion
@@ -298,14 +338,19 @@ class FleetPlanner:
                 for i, row in enumerate(out)]
 
     def _sweep_totals(self, traces: Sequence[TrackedTrace],
-                      dests: Sequence[str]):
+                      dests: Sequence[str], cell_mask=None):
         """(n_traces, n_dests) grid via the predictor's ragged engine.
 
         The documented predictor contract is only ``predict_fleet`` +
         ``config_key``; predictors without a ``predict_sweep`` (all
         in-repo ones have it via ``_FleetTraceMixin``) fall back to one
-        fleet grid per trace."""
+        fleet grid per trace.  ``cell_mask`` is only ever non-None when
+        the predictor advertises support (masked-out totals come back
+        NaN and the caller must not read them)."""
         if hasattr(self.predictor, "predict_sweep"):
+            if cell_mask is not None:
+                return self.predictor.predict_sweep(
+                    traces, dests, cell_mask=cell_mask).total_ms
             return self.predictor.predict_sweep(traces, dests).total_ms
         return np.stack([self.predictor.predict_fleet(t, dests).total_ms
                          for t in traces])

@@ -15,8 +15,18 @@ How a request flows::
         requests queued), takes the whole queue, and executes it;
         waiters block on their handle, non-blocking submitters collect
         results later via ``PendingQuery.get``.
-    execute:  group by destination fleet -> dedupe traces by fingerprint
-              -> one planner.sweep() per group -> fan results back out.
+    execute:  stack ALL destination fleets into one deduped union device
+              axis -> dedupe traces by fingerprint -> ONE planner.sweep()
+              over the union grid -> slice each request's columns out.
+
+Union coalescing (vs the PR 3 spelling-grouped batcher, retained as
+``union_grid=False``): requests no longer need identically-spelled
+destination fleets to share an engine pass — subset, superset, and
+partially-overlapping fleets all land in the same ragged grid, and the
+per-cell math is independent of which columns co-batch, so a sliced
+answer still equals the direct planner answer (bitwise on the analytical
+paths).  Requests naming unknown devices fail individually at validation
+time and never poison the shared grid.
 
 Answer fidelity: the ranking math is :func:`repro.serve.fleet.rank_rows`
 — the same function ``FleetPlanner.rank`` uses — and on the analytical
@@ -89,26 +99,37 @@ class PredictionService:
         Queue length that fires the batch early — lets barrier-style
         bursts (benchmarks, load tests) execute the instant the burst is
         fully queued instead of waiting out the window.
+    union_grid:
+        Stack heterogeneous destination fleets into one union device
+        axis and slice per-request columns out (the default).  ``False``
+        restores the PR 3 batcher that only merged identically-spelled
+        fleets — kept as the benchmark baseline and as a kill switch.
     """
 
     def __init__(self, planner: Optional[FleetPlanner] = None,
                  predictor=None, fleet: Optional[Sequence[str]] = None,
                  cache: BackendLike = None, cache_size: int = 4096,
-                 coalesce_window_ms: float = 5.0, flush_at: int = 64):
+                 coalesce_window_ms: float = 5.0, flush_at: int = 64,
+                 union_grid: bool = True):
         if planner is None:
             planner = FleetPlanner(predictor=predictor, fleet=fleet,
                                    cache_size=cache_size, cache=cache)
         self.planner = planner
         self.coalesce_window_ms = float(coalesce_window_ms)
         self.flush_at = max(int(flush_at), 1)
+        self.union_grid = bool(union_grid)
         self._cond = threading.Condition()
         self._pending: List[PendingQuery] = []
         self._leader_active = False
-        # counters (mutated under self._cond)
+        # counters (every mutation AND every read happens under
+        # self._cond — including the union counters bumped from the
+        # leader's _execute, which runs outside the queue lock)
         self._requests = {"rank": 0, "sweep": 0}
         self._batches = 0
         self._coalesced_requests = 0    # requests that shared their batch
         self._max_batch = 0
+        self._union_batches = 0         # union engine passes executed
+        self._sliced_columns = 0        # device columns served by slicing
 
     # -- public query API ---------------------------------------------------
     def rank(self, trace: TrackedTrace, batch_size: int,
@@ -201,21 +222,32 @@ class PredictionService:
         return {"labels": [t.label for t in traces], "times": rows}
 
     def stats(self) -> Dict:
-        """Service + cache accounting (the ``/stats`` payload)."""
+        """Service + cache accounting (the ``/stats`` payload).
+
+        Every coalescing counter is snapshot under the queue lock in one
+        critical section — the leader thread increments them under the
+        same lock (including the union counters, bumped from
+        ``_execute`` which otherwise runs unlocked), so a reader can
+        never observe a torn batch (e.g. ``union_batches`` ahead of
+        ``batches``).  The engine-pass counter is read under the
+        planner's own lock for the same reason."""
         with self._cond:
             requests = dict(self._requests)
             coalescing = {
                 "batches": self._batches,
                 "coalesced_requests": self._coalesced_requests,
                 "max_batch": self._max_batch,
+                "union_batches": self._union_batches,
+                "sliced_columns": self._sliced_columns,
                 "window_ms": self.coalesce_window_ms,
                 "flush_at": self.flush_at,
+                "union_grid": self.union_grid,
             }
         cache = self.planner.stats.as_dict()
         cache["backend"] = self.planner.cache.describe()
         cache["entries"] = len(self.planner.cache)
         return {"requests": requests, "coalescing": coalescing,
-                "engine_passes": self.planner.engine_passes,
+                "engine_passes": self.planner.engine_pass_count(),
                 "cache": cache, "fleet": self.planner.fleet}
 
     # -- coalescing core ----------------------------------------------------
@@ -262,11 +294,105 @@ class PredictionService:
         self._execute(batch)
 
     def _execute(self, batch: List[PendingQuery]) -> None:
-        """One ragged engine pass per destination-fleet group.
+        """One union-grid engine pass for the whole batch.
 
-        Traces are deduplicated by fingerprint before stacking, so K
-        concurrent queries about one trace cost one engine row and
-        exactly one cache miss per unique key."""
+        All requests' destination fleets are stacked into one deduped
+        union device axis and all traces are deduplicated by fingerprint,
+        so K concurrent queries — however heterogeneous their fleets —
+        cost ONE ragged ``planner.sweep`` and exactly one cache miss per
+        unique (trace, device, config, fleet) key.  Each request's answer
+        is sliced back out of the union row; cell values are independent
+        of which columns co-batched, so the slice equals the direct
+        planner answer (bitwise on the analytical paths)."""
+        if not self.union_grid:
+            return self._execute_grouped(batch)
+        from repro.core import devices
+
+        fleet: Optional[List[str]] = None
+        resolved: List[Tuple[PendingQuery, List[str]]] = []
+        for req in batch:
+            try:
+                if req.dests is None:
+                    if fleet is None:
+                        fleet = self.planner.fleet
+                    dlist = fleet
+                else:
+                    for name in req.dests:  # unknown devices fail THIS
+                        devices.get(name)   # request, not the shared grid
+                    dlist = list(req.dests)
+                resolved.append((req, dlist))
+            except BaseException as e:
+                req.error = e
+                req.done.set()
+        if not resolved:
+            return
+        union: List[str] = []
+        seen = set()
+        for _, dlist in resolved:
+            for name in dlist:
+                if name not in seen:
+                    seen.add(name)
+                    union.append(name)
+        try:
+            uniq: Dict[str, TrackedTrace] = {}
+            for req, _ in resolved:
+                for t in req.traces:
+                    uniq.setdefault(t.fingerprint(), t)
+            order = list(uniq)
+            rows = self.planner.sweep([uniq[fp] for fp in order],
+                                      dests=union)
+            by_fp = dict(zip(order, rows))
+            sliced = 0
+            for req, dlist in resolved:
+                if len(dlist) != len(union):
+                    sliced += len(dlist)
+                if req.kind == "rank":
+                    t = req.traces[0]
+                    row = by_fp[t.fingerprint()]
+                    req.result = rank_rows(
+                        {name: row[name] for name in dlist},
+                        req.batch_size, t.run_time_ms, req.by)
+                else:
+                    req.result = [
+                        {name: by_fp[t.fingerprint()][name]
+                         for name in dlist}
+                        for t in req.traces]
+            with self._cond:
+                self._union_batches += 1
+                self._sliced_columns += sliced
+        except BaseException:
+            # a trace-level engine error (e.g. an unmeasured op) must not
+            # fate-share across the union batch the way a per-fleet group
+            # confined it before: retry each request alone so only the
+            # culprit sees its error.  Errors are the rare path — the
+            # retry costs nothing in steady state.
+            self._execute_singly(resolved)
+        finally:
+            for req, _ in resolved:
+                req.done.set()
+
+    def _execute_singly(self,
+                        resolved: List[Tuple[PendingQuery, List[str]]]
+                        ) -> None:
+        """Per-request fallback after a failed union pass: isolate the
+        failing request(s), answer the healthy ones."""
+        for req, dlist in resolved:
+            try:
+                rows = self.planner.sweep(req.traces, dests=dlist)
+                if req.kind == "rank":
+                    t = req.traces[0]
+                    req.result = rank_rows(dict(rows[0]), req.batch_size,
+                                           t.run_time_ms, req.by)
+                else:
+                    req.result = [dict(r) for r in rows]
+            except BaseException as e:
+                req.error = e
+
+    def _execute_grouped(self, batch: List[PendingQuery]) -> None:
+        """The PR 3 batcher: one engine pass per destination-fleet
+        *spelling*.  Kept verbatim as the ``union_grid=False`` baseline so
+        ``bench_union`` can quantify the union grid's win (and as a kill
+        switch)."""
         groups: Dict[Optional[Tuple[str, ...]], List[PendingQuery]] = {}
         for req in batch:
             groups.setdefault(req.dests, []).append(req)

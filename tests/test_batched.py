@@ -1,0 +1,353 @@
+"""Engine-level tests for the union-grid sweep machinery.
+
+Covers the PR 4 hot-path work in ``core/batched.py``:
+
+  * ``cell_mask`` partial-compute sweeps — masked-in cells must reproduce
+    the full-grid values (bitwise on analytical paths, exactly for
+    pure-NumPy stub MLPs) and masked-out cells must stay NaN,
+  * the fingerprint-keyed stack cache + ``RaggedTraceArrays.extend``
+    (zero-repack restacking must be bit-identical to a fresh build),
+  * the reduceat segment totals (sweep row == single-trace fleet totals),
+  * the pooled split-transform feature builders vs the allocate-per-call
+    ``mlp_features_grid`` reference.
+
+Deterministic cases always run; hypothesis properties ride on the same
+helpers (dev-only dependency, skipped when absent)."""
+
+import numpy as np
+import pytest
+
+from repro.core import HabitatPredictor, devices, stack_traces
+from repro.core import batched
+from repro.core import dataset as dataset_mod
+from repro.core.costmodel import OpCost
+from repro.core.trace import Op
+from repro.kernels.fused_mlp_score import bucket_blocks
+from test_sweep_properties import _StubMLP, _make_stack, VARYING_KINDS
+
+DEVS = sorted(devices.all_devices())
+
+
+def _mask(rng: np.random.Generator, n_traces: int, n_dev: int,
+          p: float) -> np.ndarray:
+    m = rng.random((n_traces, n_dev)) < p
+    m[~m.any(axis=1), 0] = True     # every trace keeps >= 1 computed cell
+    return m
+
+
+def check_cell_mask_matches_full(traces, mask, mlps=None, exact_mlp=True,
+                                 **pred_kwargs):
+    """Masked sweep == full sweep on masked-in cells, NaN elsewhere.
+
+    ``exact_mlp`` is True for pure-NumPy stub MLPs (per-row math, so
+    pair batching cannot change the bits) and False for real jitted
+    forwards (pair batches pad differently: tolerance-close)."""
+    pred = HabitatPredictor(mlps=mlps, **pred_kwargs)
+    full = pred.predict_sweep(traces, DEVS)
+    masked = pred.predict_sweep(traces, DEVS, cell_mask=mask)
+    op_mask = mask[masked.arrays.trace_ids]
+    if exact_mlp:
+        np.testing.assert_array_equal(masked.op_ms[op_mask],
+                                      full.op_ms[op_mask])
+    else:
+        np.testing.assert_allclose(masked.op_ms[op_mask],
+                                   full.op_ms[op_mask], rtol=1e-5)
+    assert np.isnan(masked.op_ms[~op_mask]).all()
+    # totals of fully-computed rows match the full sweep the same way
+    full_rows = np.flatnonzero(mask.all(axis=1))
+    if len(full_rows) and exact_mlp:
+        np.testing.assert_array_equal(masked.total_ms[full_rows],
+                                      full.total_ms[full_rows])
+
+
+# ---------------------------------------------------------------------------
+# cell_mask parity: deterministic seeded cases
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed,n_traces,p", [(0, 3, 0.5), (1, 5, 0.3),
+                                             (2, 2, 0.9), (3, 6, 0.5)])
+def test_cell_mask_matches_full_analytical(seed, n_traces, p):
+    rng = np.random.default_rng(seed + 1000)
+    check_cell_mask_matches_full(
+        _make_stack(seed, n_traces), _mask(rng, n_traces, len(DEVS), p))
+
+
+@pytest.mark.parametrize("seed,n_traces", [(4, 3), (5, 4)])
+def test_cell_mask_matches_full_exact_wave(seed, n_traces):
+    rng = np.random.default_rng(seed + 1000)
+    check_cell_mask_matches_full(
+        _make_stack(seed, n_traces), _mask(rng, n_traces, len(DEVS), 0.5),
+        exact_wave=True)
+
+
+@pytest.mark.parametrize("seed,n_traces", [(6, 3), (7, 5)])
+def test_cell_mask_matches_full_overhead(seed, n_traces):
+    rng = np.random.default_rng(seed + 1000)
+    check_cell_mask_matches_full(
+        _make_stack(seed, n_traces), _mask(rng, n_traces, len(DEVS), 0.5),
+        model_overhead=True)
+
+
+@pytest.mark.parametrize("seed,n_traces", [(8, 3), (9, 5)])
+def test_cell_mask_matches_full_stub_mlps(seed, n_traces):
+    """Pair-gathered MLP feature rows carry the same bits as the grid
+    rows, so exact stub MLPs prove the gather/scatter indexing."""
+    rng = np.random.default_rng(seed + 1000)
+    check_cell_mask_matches_full(
+        _make_stack(seed, n_traces), _mask(rng, n_traces, len(DEVS), 0.5),
+        mlps={k: _StubMLP() for k in VARYING_KINDS})
+
+
+@pytest.mark.parametrize("limit", [0, 64])
+def test_cell_mask_both_strategies_match(limit, monkeypatch):
+    """The pattern-grouped subgrid strategy and the flat per-cell gather
+    strategy must produce identical grids — force each in turn."""
+    monkeypatch.setattr(batched, "_PATTERN_GROUP_LIMIT", limit)
+    rng = np.random.default_rng(99)
+    traces = _make_stack(13, 4)
+    check_cell_mask_matches_full(
+        traces, _mask(rng, 4, len(DEVS), 0.5),
+        mlps={k: _StubMLP() for k in VARYING_KINDS})
+
+
+def test_cell_mask_pattern_structured_warm():
+    """Block-structured masks (a few distinct warm fleets — the serving
+    pattern the grouped strategy exists for)."""
+    traces = _make_stack(14, 6)
+    mask = np.ones((6, len(DEVS)), bool)
+    mask[::2, : len(DEVS) // 2] = False     # two distinct patterns
+    check_cell_mask_matches_full(traces, mask, exact_wave=True)
+
+
+def test_cell_mask_many_patterns_flat_path():
+    """More distinct mask rows than _PATTERN_GROUP_LIMIT: the flat
+    per-cell path runs (each row pattern unique by construction)."""
+    n = batched._PATTERN_GROUP_LIMIT + 2
+    traces = _make_stack(15, n)
+    mask = np.zeros((n, len(DEVS)), bool)
+    for i in range(n):
+        mask[i, i % len(DEVS)] = True
+        mask[i, (i + 3) % len(DEVS)] = True
+        mask[i, : i % 5] = True
+    assert len(np.unique(mask, axis=0)) > batched._PATTERN_GROUP_LIMIT
+    check_cell_mask_matches_full(traces, mask)
+
+
+def test_cell_mask_all_true_is_full_sweep():
+    traces = _make_stack(10, 3)
+    pred = HabitatPredictor()
+    full = pred.predict_sweep(traces, DEVS)
+    masked = pred.predict_sweep(
+        traces, DEVS, cell_mask=np.ones((3, len(DEVS)), bool))
+    np.testing.assert_array_equal(masked.op_ms, full.op_ms)
+    assert not np.isnan(masked.op_ms).any()
+
+
+def test_cell_mask_shape_validated():
+    traces = _make_stack(11, 2)
+    with pytest.raises(ValueError, match="cell_mask shape"):
+        HabitatPredictor().predict_sweep(
+            traces, DEVS, cell_mask=np.ones((3, 2), bool))
+
+
+def test_cell_mask_skips_unmeasured_warm_traces():
+    """An unmeasured op in a fully-warm (masked-out) trace must not fail
+    the masked sweep — its rows are never computed."""
+    traces = _make_stack(12, 3)
+    traces[1].ops.append(Op(name="add", kind="add",
+                            cost=OpCost(1e6, 6e5, 4e5)))   # unmeasured
+    traces[1]._arrays = None
+    mask = np.ones((3, len(DEVS)), bool)
+    mask[1, :] = False
+    pred = HabitatPredictor()
+    sweep = pred.predict_sweep(traces, DEVS, cell_mask=mask)
+    assert np.isnan(sweep.op_ms[sweep.arrays.trace_ids == 1]).all()
+    # ... while computing that trace still fails loudly
+    with pytest.raises(ValueError, match="no origin measurement"):
+        pred.predict_sweep(traces, DEVS)
+
+
+# ---------------------------------------------------------------------------
+# stack cache + extend
+# ---------------------------------------------------------------------------
+def test_stack_cache_exact_hit_returns_same_object():
+    traces = _make_stack(20, 4)
+    a = stack_traces(traces)
+    b = stack_traces(traces)
+    assert a is b
+
+
+def test_stack_cache_prefix_extend_matches_fresh_build():
+    traces = _make_stack(21, 6)
+    prefix = stack_traces(traces[:4])
+    extended = stack_traces(traces)         # extends the cached prefix
+    fresh = batched._build_stack(traces)
+    assert extended.fingerprints == fresh.fingerprints
+    assert extended.kinds == fresh.kinds
+    np.testing.assert_array_equal(extended.offsets, fresh.offsets)
+    np.testing.assert_array_equal(extended.trace_ids, fresh.trace_ids)
+    for field in ("flops", "bytes_accessed", "intensity", "measured_ms",
+                  "multiplicity", "kernel_varying", "kind_ids",
+                  "op_features"):
+        np.testing.assert_array_equal(getattr(extended, field),
+                                      getattr(fresh, field))
+    # the shared prefix was reused, not restacked
+    assert extended.n_traces == 6 and prefix.n_traces == 4
+
+
+def test_extend_is_immutable():
+    traces = _make_stack(22, 5)
+    base = batched._build_stack(traces[:3])
+    before = base.offsets.copy()
+    ext = base.extend(traces[3:])
+    np.testing.assert_array_equal(base.offsets, before)
+    assert base.n_traces == 3 and ext.n_traces == 5
+
+
+def test_stack_cache_bypass_flag():
+    traces = _make_stack(23, 3)
+    a = stack_traces(traces)
+    b = stack_traces(traces, cache=False)
+    assert a is not b
+    np.testing.assert_array_equal(a.flops, b.flops)
+
+
+def test_stack_cache_sweep_results_identical():
+    """A cached (or prefix-extended) stack predicts identically to a
+    fresh build — the whole point of zero-repack restacking."""
+    traces = _make_stack(24, 5)
+    pred = HabitatPredictor()
+    stack_traces(traces[:3])                # seed a prefix
+    via_cache = pred.predict_sweep(traces, DEVS)
+    via_fresh = batched.predict_sweep(traces, DEVS, stack_cache=False)
+    np.testing.assert_array_equal(via_cache.op_ms, via_fresh.op_ms)
+
+
+# ---------------------------------------------------------------------------
+# reduceat totals
+# ---------------------------------------------------------------------------
+def test_sweep_totals_match_fleet_totals_bitwise_large_segments():
+    """The reduceat parity at segment sizes where pairwise ``.sum``
+    would associate differently (the reason both reductions moved to
+    reduceat together)."""
+    traces = [t for t in _make_stack(25, 2)]
+    for t in traces:            # inflate to >128 ops per segment
+        while len(t.ops) < 150:
+            t.ops.extend([op for op in t.ops[:10]])
+        t._arrays = None
+        t._fp = None
+    pred = HabitatPredictor()
+    sweep = pred.predict_sweep(traces, DEVS)
+    for i, tr in enumerate(traces):
+        np.testing.assert_array_equal(
+            sweep.total_ms[i], pred.predict_fleet(tr, DEVS).total_ms)
+
+
+# ---------------------------------------------------------------------------
+# buffered feature builders vs the reference grid
+# ---------------------------------------------------------------------------
+def test_buffered_feature_grid_matches_reference():
+    ragged = stack_traces(_make_stack(26, 4))
+    da = devices.arrays_for(DEVS)
+    idx = np.flatnonzero(ragged.kernel_varying)
+    if not len(idx):
+        pytest.skip("stack has no kernel-varying ops")
+    ref = batched.mlp_features_grid(ragged, idx, da)
+    op_t = dataset_mod.transform_features(ragged.op_features[idx])
+    dev_t = dataset_mod.transform_features(da.feature_matrix)
+    buf = batched._FEATURE_BUFFERS.acquire(len(idx) * da.n, ref.shape[1])
+    try:
+        got = batched._features_grid_into(buf, op_t, dev_t)
+        np.testing.assert_array_equal(got, ref)
+        # pair spelling: every (op, device) cell row matches the grid row
+        rows = np.repeat(np.arange(len(idx)), da.n)
+        cols = np.tile(np.arange(da.n), len(idx))
+        pair_buf = batched._FEATURE_BUFFERS.acquire(len(rows),
+                                                    ref.shape[1])
+        try:
+            pairs = batched._features_pairs_into(pair_buf, op_t, dev_t,
+                                                 rows, cols)
+            np.testing.assert_array_equal(pairs, ref)
+        finally:
+            batched._FEATURE_BUFFERS.release(pair_buf)
+    finally:
+        batched._FEATURE_BUFFERS.release(buf)
+
+
+def test_feature_buffers_flag_changes_nothing():
+    traces = _make_stack(27, 3)
+    mlps = {k: _StubMLP() for k in VARYING_KINDS}
+    buffered = batched.predict_sweep(traces, DEVS, mlps=mlps)
+    plain = batched.predict_sweep(traces, DEVS, mlps=mlps,
+                                  feature_buffers=False,
+                                  stack_cache=False)
+    np.testing.assert_array_equal(buffered.op_ms, plain.op_ms)
+    # the kill switch also covers the masked and single-trace paths
+    rng = np.random.default_rng(27)
+    mask = _mask(rng, 3, len(DEVS), 0.5)
+    m_buf = batched.predict_sweep(traces, DEVS, mlps=mlps, cell_mask=mask)
+    m_plain = batched.predict_sweep(traces, DEVS, mlps=mlps,
+                                    cell_mask=mask, feature_buffers=False,
+                                    stack_cache=False)
+    np.testing.assert_array_equal(m_buf.op_ms, m_plain.op_ms)
+    f_buf = batched.predict_trace_batch(traces[0], DEVS, mlps=mlps)
+    f_plain = batched.predict_trace_batch(traces[0], DEVS, mlps=mlps,
+                                          feature_buffers=False)
+    np.testing.assert_array_equal(f_buf.op_ms, f_plain.op_ms)
+
+
+def test_bucket_blocks_shapes():
+    assert [bucket_blocks(n) for n in (1, 2, 3, 5, 31, 32, 33, 64, 65)] \
+        == [1, 2, 4, 8, 32, 32, 64, 64, 96]
+    # bounded compiled-shape count: buckets are monotone and idempotent
+    for n in range(1, 200):
+        b = bucket_blocks(n)
+        assert b >= n and bucket_blocks(b) == b
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties (dev-only dependency)
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    given = None
+
+if given is not None:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 5),
+           st.floats(0.05, 0.95),
+           st.sampled_from(["default", "exact", "overhead"]))
+    def test_property_cell_mask_matches_full(seed, n_traces, p, mode):
+        kwargs = {"default": {}, "exact": {"exact_wave": True},
+                  "overhead": {"model_overhead": True}}[mode]
+        rng = np.random.default_rng(seed)
+        check_cell_mask_matches_full(
+            _make_stack(seed, n_traces),
+            _mask(rng, n_traces, len(DEVS), p), **kwargs)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 4),
+           st.floats(0.1, 0.9))
+    def test_property_cell_mask_matches_full_stub_mlps(seed, n_traces, p):
+        rng = np.random.default_rng(seed)
+        check_cell_mask_matches_full(
+            _make_stack(seed, n_traces),
+            _mask(rng, n_traces, len(DEVS), p),
+            mlps={k: _StubMLP() for k in VARYING_KINDS})
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(2, 6),
+           st.integers(1, 5))
+    def test_property_prefix_extend_matches_fresh(seed, n_traces, n_pre):
+        traces = _make_stack(seed, n_traces)
+        n_pre = min(n_pre, n_traces - 1) or 1
+        base = batched._build_stack(traces[:n_pre])
+        if n_pre < n_traces:
+            ext = base.extend(traces[n_pre:])
+        else:
+            ext = base
+        fresh = batched._build_stack(traces)
+        assert ext.kinds == fresh.kinds
+        np.testing.assert_array_equal(ext.kind_ids, fresh.kind_ids)
+        np.testing.assert_array_equal(ext.offsets, fresh.offsets)
+        np.testing.assert_array_equal(ext.op_features, fresh.op_features)

@@ -139,9 +139,9 @@ def test_mixed_rank_and_sweep_coalesce(traces):
         zip(DEVS, [sweep_res[0][d] for d in DEVS]))    # all devices priced
 
 
-def test_requests_with_different_dests_grouped_separately(traces):
-    """Different destination fleets cannot share a ragged grid: they form
-    separate groups (cache keys carry different fleet tokens)."""
+def test_requests_with_different_dests_share_one_union_pass(traces):
+    """Disjoint destination fleets stack into ONE union grid; each answer
+    only contains its own devices."""
     service = PredictionService(predictor=HabitatPredictor(),
                                 coalesce_window_ms=200.0, flush_at=2)
     calls = [
@@ -155,7 +155,68 @@ def test_requests_with_different_dests_grouped_separately(traces):
     assert {c.device for c in res_b} == {"tpu-v5e"}
     stats = service.stats()
     assert stats["coalescing"]["batches"] == 1      # one batch ...
+    assert stats["engine_passes"] == 1              # ... ONE union grid
+    assert stats["coalescing"]["union_batches"] == 1
+    # both fleets are strict subsets of the 3-device union: every served
+    # column was sliced out of the shared grid
+    assert stats["coalescing"]["sliced_columns"] == 3
+
+
+def test_grouped_mode_still_splits_by_spelling(traces):
+    """The retained PR 3 batcher (union_grid=False): different fleet
+    spellings cannot share a grid — one engine pass per spelling."""
+    service = PredictionService(predictor=HabitatPredictor(),
+                                coalesce_window_ms=200.0, flush_at=2,
+                                union_grid=False)
+    calls = [
+        lambda: service.rank(traces[0], batch_size=8,
+                             dests=["T4", "V100"]),
+        lambda: service.rank(traces[1], batch_size=8,
+                             dests=["tpu-v5e"]),
+    ]
+    res_a, res_b = _burst(service, calls)
+    assert {c.device for c in res_a} == {"T4", "V100"}
+    assert {c.device for c in res_b} == {"tpu-v5e"}
+    stats = service.stats()
+    assert stats["coalescing"]["batches"] == 1      # one batch ...
     assert stats["engine_passes"] == 2              # ... two grids
+    assert stats["coalescing"]["union_batches"] == 0
+
+
+def test_heterogeneous_fleets_one_pass_bitwise(traces):
+    """The tentpole contract: concurrent queries with subset, superset,
+    overlapping, and default (None) fleets coalesce into exactly one
+    engine pass, and every answer is bitwise-identical to a direct
+    ``FleetPlanner`` call on the analytical path."""
+    fleets = [
+        None,                                       # the full fleet
+        ("T4", "V100"),                             # subset
+        ("T4", "V100", "tpu-v5e", "tpu-v5p"),       # superset of subset
+        ("P100", "trainium1"),                      # disjoint from above
+        tuple(DEVS),                                # full fleet, spelled out
+    ]
+    service = PredictionService(predictor=HabitatPredictor(),
+                                coalesce_window_ms=500.0,
+                                flush_at=len(fleets) + 1)
+    calls = [lambda f=f: service.rank(traces[0], batch_size=16,
+                                      dests=f)
+             for f in fleets]
+    calls.append(lambda: service.sweep(traces[:3], dests=["T4", "P4000"]))
+    results = _burst(service, calls)
+    stats = service.stats()
+    assert stats["engine_passes"] == 1
+    assert stats["coalescing"]["batches"] == 1
+    assert stats["coalescing"]["union_batches"] == 1
+    direct = FleetPlanner(predictor=HabitatPredictor())
+    for f, res in zip(fleets, results[:-1]):
+        assert res == direct.rank(traces[0], 16,
+                                  dests=list(f) if f else None)
+    assert results[-1] == direct.sweep(traces[:3], dests=["T4", "P4000"])
+    # dedup held: one miss per unique (trace, device) cell, where the
+    # rank trace was priced on the whole union and the two sweep-only
+    # traces on every device the union contains (T4/P4000 are subsets)
+    union_n = len(DEVS)
+    assert stats["cache"]["misses"] == 3 * union_n
 
 
 def test_error_isolated_to_group(traces):
@@ -186,6 +247,43 @@ def test_error_isolated_to_group(traces):
         t.join()
     assert isinstance(outcome["bad"], KeyError)
     assert {c.device for c in outcome["good"]} == {"T4", "V100"}
+
+
+def test_trace_error_isolated_in_union_batch(traces):
+    """A trace-level engine error (unmeasured op) coalesced into a union
+    batch fails only its own request: the union pass aborts, the batch
+    re-executes per request, and the healthy query still answers."""
+    from repro.core.costmodel import OpCost
+    from repro.core.trace import Op, TrackedTrace
+    bad_trace = TrackedTrace(
+        ops=[Op(name="add", kind="add", cost=OpCost(1e6, 6e5, 4e5))],
+        origin_device="T4", label="unmeasured")        # measured_ms=None
+    service = PredictionService(predictor=HabitatPredictor(),
+                                coalesce_window_ms=200.0, flush_at=2)
+    outcome = {}
+    barrier = threading.Barrier(2)
+
+    def good():
+        barrier.wait()
+        outcome["good"] = service.rank(traces[0], batch_size=8)
+
+    def bad():
+        barrier.wait()
+        try:
+            service.sweep([bad_trace])
+        except ValueError as e:
+            outcome["bad"] = e
+
+    threads = [threading.Thread(target=good),
+               threading.Thread(target=bad)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert "no origin measurement" in str(outcome["bad"])
+    assert [c.device for c in outcome["good"]] == \
+        [c.device for c in FleetPlanner(
+            predictor=HabitatPredictor()).rank(traces[0], 8)]
 
 
 def test_sequential_requests_still_answered(traces):
