@@ -51,10 +51,13 @@ BENCHES = [
      "Coalescing prediction service vs per-request loop (>=3x gate)"),
     ("union", "benchmarks.bench_union",
      "Union-grid coalescing (>=3x) + cell-masked warm sweeps (>=2x)"),
+    ("dispatch", "benchmarks.bench_dispatch",
+     "Single-dispatch hot path: row-mapped scorer (>=2x, 1 dispatch) + "
+     "warm wave factor (>=3x) + union/split planner (never slower)"),
 ]
 
 #: the subset (and reduced sizes) run by CI's bench-smoke job
-SMOKE_KEYS = ("fleet", "sweep", "service", "union", "kernels")
+SMOKE_KEYS = ("fleet", "sweep", "service", "union", "dispatch", "kernels")
 
 
 def main() -> None:

@@ -36,6 +36,7 @@ different shapes in the two spellings.
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
 from collections import OrderedDict
 from types import SimpleNamespace
@@ -51,6 +52,187 @@ from repro.core.trace import TraceArrays, TrackedTrace
 #: Paleo-fallback efficiencies, matching ``predictor._analytical_ms``.
 _EFF_COMPUTE = (0.50, 0.70)   # (kernel-alike, kernel-varying)
 _EFF_MEMORY = (0.82, 0.75)
+
+
+def _env_num(name: str, default, cast):
+    """A numeric knob from the environment, falling back on bad input.
+
+    The ONE parse-or-keep-the-default policy for every env knob in the
+    engine and the serve layer (cache bounds here, the split-planner
+    seeds in ``serve.service``): a malformed or negative override must
+    not take a worker down — the documented default applies instead."""
+    raw = os.environ.get(name)
+    if raw is None:
+        return default
+    try:
+        value = cast(raw)
+    except ValueError:
+        return default
+    return value if value >= 0 else default
+
+
+def env_int(name: str, default: int) -> int:
+    return _env_num(name, default, int)
+
+
+def env_float(name: str, default: float) -> float:
+    return _env_num(name, default, float)
+
+
+class _DispatchCounters:
+    """Process-wide MLP scorer-dispatch accounting.
+
+    ``fused`` counts one-launch scorer calls (``fused_mlp_score`` /
+    ``fused_mlp_score_rows``); ``per_kind`` counts individual per-kind
+    ``predict_ms`` forwards.  The dispatch-count model of the hot path
+    (README "Performance") is asserted against these by the tests and
+    ``benchmarks/bench_dispatch.py`` — a refactor that silently
+    re-introduces a per-kind loop fails the counter gates, not just a
+    timing gate."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.fused = 0
+        self.per_kind = 0
+
+    def bump(self, which: str, n: int = 1) -> None:
+        with self._lock:
+            setattr(self, which, getattr(self, which) + n)
+
+    def snapshot(self) -> Dict[str, int]:
+        with self._lock:
+            return {"fused": self.fused, "per_kind": self.per_kind}
+
+    def reset(self) -> None:
+        with self._lock:
+            self.fused = 0
+            self.per_kind = 0
+
+
+#: dispatch accounting for every MLP scoring path (see class docstring)
+SCORER_DISPATCHES = _DispatchCounters()
+
+
+class _WaveFactorCache:
+    """Cross-stack LRU of t-independent wave-scaling factor grids.
+
+    The factor grid (``wave_scaling.wave_factor_vec``) is a pure function
+    of the kernel-alike op arrays and the destination fleet — it carries
+    all of the pow-heavy work, while the final ``t * factor`` combine is
+    a single multiply.  PR 4 cached it per ``RaggedTraceArrays``, so the
+    factor died with its stack: repeat single-trace ``predict()`` traffic
+    and freshly-restacked sweeps recomputed it from scratch.  This cache
+    is module-level and keyed by
+
+        (content token, fleet names, exact, overhead-model token)
+
+    where the content token is the tuple of trace fingerprints (a single
+    trace is the 1-tuple, so ``predict()`` and a 1-trace sweep SHARE the
+    entry).  Every entry stores the ``DeviceArrays`` instance AND the
+    origin ``DeviceSpec`` tuple it was minted against; a lookup only
+    hits when the caller presents the *same* destination instance
+    (``devices.as_arrays`` memoizes one instance per distinct spec
+    tuple, so identity implies spec content) and value-equal origin
+    specs (the fingerprint names the origin but does not hash its
+    numbers, so a replaced registry entry must invalidate).  Either way
+    a same-named device with different specs can never be served a
+    stale factor — the stale entry is simply overwritten on recompute.
+
+    Bounded by entry count AND bytes (env ``REPRO_FACTOR_CACHE_ENTRIES``
+    / ``REPRO_FACTOR_CACHE_BYTES``, defaults 64 entries / 128 MiB);
+    thread-safe (the serving layer's coalescing leaders are concurrent
+    short-lived threads)."""
+
+    def __init__(self, capacity: Optional[int] = None,
+                 max_bytes: Optional[int] = None):
+        self.capacity = (env_int("REPRO_FACTOR_CACHE_ENTRIES", 64)
+                         if capacity is None else capacity)
+        self.max_bytes = (env_int("REPRO_FACTOR_CACHE_BYTES", 128 << 20)
+                          if max_bytes is None else max_bytes)
+        self._data: "OrderedDict[Tuple, Tuple]" = OrderedDict()
+        self._lock = threading.Lock()
+        self._total_bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.inserts = 0
+        self.evictions = 0
+
+    @staticmethod
+    def _entry_bytes(factor: np.ndarray, overheads) -> int:
+        n = factor.nbytes
+        if overheads is not None:
+            n += overheads[0].nbytes + overheads[1].nbytes
+        return n
+
+    def get(self, key: Tuple, da: DeviceArrays, origins: Tuple):
+        """(factor, overheads) when warm for this exact ``DeviceArrays``
+        instance and value-equal origin specs, else None (counted as a
+        miss)."""
+        return self._lookup(key, da, origins, count_miss=True)
+
+    def peek(self, key: Tuple, da: DeviceArrays, origins: Tuple):
+        """Like :meth:`get` but a cold probe is NOT counted as a miss:
+        masked sweeps probe opportunistically and by design never insert
+        on a miss (a partial fill must not pay the full-grid factor
+        build), so counting those probes would poison the hit ratio the
+        shutdown log tells operators to tune bounds by."""
+        return self._lookup(key, da, origins, count_miss=False)
+
+    def _lookup(self, key: Tuple, da: DeviceArrays, origins: Tuple,
+                count_miss: bool):
+        with self._lock:
+            entry = self._data.get(key)
+            if entry is not None and entry[0] is da and entry[1] == origins:
+                self._data.move_to_end(key)
+                self.hits += 1
+                return entry[2], entry[3]
+            if count_miss:
+                self.misses += 1
+            return None
+
+    def insert(self, key: Tuple, da: DeviceArrays, origins: Tuple,
+               factor: np.ndarray, overheads) -> None:
+        nbytes = self._entry_bytes(factor, overheads)
+        with self._lock:
+            old = self._data.pop(key, None)
+            if old is not None:
+                self._total_bytes -= old[4]
+            self._data[key] = (da, origins, factor, overheads, nbytes)
+            self._total_bytes += nbytes
+            self.inserts += 1
+            while self._data and (len(self._data) > self.capacity
+                                  or self._total_bytes > self.max_bytes):
+                _, evicted = self._data.popitem(last=False)
+                self._total_bytes -= evicted[4]
+                self.evictions += 1
+
+    def stats(self) -> Dict[str, int]:
+        """Counter snapshot under the lock (the ``/stats`` payload)."""
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "inserts": self.inserts, "evictions": self.evictions,
+                    "entries": len(self._data),
+                    "bytes": self._total_bytes,
+                    "capacity": self.capacity,
+                    "max_bytes": self.max_bytes}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()
+            self._total_bytes = 0
+            self.hits = self.misses = self.inserts = self.evictions = 0
+
+
+#: the process-wide cross-stack wave-factor cache (see class docstring)
+WAVE_FACTOR_CACHE = _WaveFactorCache()
+
+
+def _factor_key(content: Tuple, da: DeviceArrays, exact: bool,
+                model_overhead: bool) -> Tuple:
+    """The one factor-cache key spelling shared by the single-trace and
+    ragged paths, so a 1-trace stack and ``predict()`` on that trace hit
+    the same entry."""
+    return (content, tuple(da.names), exact, model_overhead)
 
 
 def _roofline_core(flops, bytes_accessed, kernel_varying, peak_flops,
@@ -255,6 +437,7 @@ def _mlp_scores_per_kind(arrays, da: DeviceArrays, mlps: Dict,
              if feature_buffers else None)
     n_feat = arrays.op_features.shape[1] + da.feature_matrix.shape[1]
     for kind, idx in _mlp_kind_rows(arrays, mlps):
+        SCORER_DISPATCHES.bump("per_kind")
         if feature_buffers:
             op_t = dataset_mod.transform_features(arrays.op_features[idx])
             buf = _FEATURE_BUFFERS.acquire(len(idx) * da.n, n_feat)
@@ -275,15 +458,26 @@ def predict_trace_batch(trace: TrackedTrace,
                         mlps: Optional[Dict] = None,
                         exact: bool = False,
                         model_overhead: bool = False,
-                        feature_buffers: bool = True) -> FleetPrediction:
-    """Predict one trace's per-op times on every destination at once."""
+                        feature_buffers: bool = True,
+                        factor_cache: bool = True) -> FleetPrediction:
+    """Predict one trace's per-op times on every destination at once.
+
+    ``factor_cache=False`` bypasses :data:`WAVE_FACTOR_CACHE` and runs
+    the unsplit ``scale_times_vec`` inline — bitwise the same numbers,
+    kept as the benchmark baseline / kill switch (the cache is
+    content-keyed, so even cache-averse callers would otherwise share
+    warm factors across the process)."""
     origin = devices.get(trace.origin_device)
     da = devices.as_arrays(dests)
     arrays = trace.to_arrays()
     mlps = mlps or {}
     out = np.empty((arrays.n_ops, da.n), np.float64)
 
-    # kernel-alike: wave scaling over the whole grid
+    # kernel-alike: wave scaling over the whole grid, with the
+    # t-independent factor served from the cross-stack cache — repeat
+    # predict()/predict_fleet() traffic (and 1-trace sweeps, which share
+    # the key) skip the pow-heavy wave_factor_vec and pay only the
+    # t * factor combine, which is bitwise the unsplit scale_times_vec
     alike = ~arrays.kernel_varying
     if alike.any():
         t_o = arrays.measured_ms[alike]
@@ -293,9 +487,32 @@ def predict_trace_batch(trace: TrackedTrace,
                 f"op {trace.ops[bad].name} has no origin measurement")
         sub = SimpleNamespace(intensity=arrays.intensity[alike],
                               bytes_accessed=arrays.bytes_accessed[alike])
-        out[alike] = wave_scaling.scale_times_vec(
-            t_o, sub, origin, da, exact=exact,
-            model_overhead=model_overhead)
+        if not factor_cache:
+            out[alike] = wave_scaling.scale_times_vec(
+                t_o, sub, origin, da, exact=exact,
+                model_overhead=model_overhead)
+        else:
+            key = _factor_key((trace.fingerprint(),), da, exact,
+                              model_overhead)
+            cached = WAVE_FACTOR_CACHE.get(key, da, (origin,))
+            if cached is not None:
+                factor, overheads = cached
+            else:
+                factor = wave_scaling.wave_factor_vec(sub, origin, da,
+                                                      exact=exact)
+                overheads = None
+                if model_overhead:
+                    oh_o, oh_d = wave_scaling.dispatch_overheads(origin,
+                                                                 da)
+                    # store the origin term per-op: the ragged paths
+                    # index it by row, and broadcasting the scalar
+                    # changes no bits
+                    overheads = (np.full(len(t_o), oh_o, np.float64),
+                                 oh_d)
+                WAVE_FACTOR_CACHE.insert(key, da, (origin,), factor,
+                                         overheads)
+            out[alike] = wave_scaling.combine_wave_factor(t_o, factor,
+                                                          overheads)
 
     # kernel-varying without an MLP: vectorized analytical fallback
     kind_has_mlp = np.asarray([k in mlps for k in arrays.kinds], bool)
@@ -339,10 +556,8 @@ class RaggedTraceArrays:
     op_features: np.ndarray      # (total_ops, 9) raw MLP op features
     _alike_origin: Optional[devices.OriginArrays] = dataclasses.field(
         default=None, repr=False, compare=False)
-    _wave_factors: Dict = dataclasses.field(
-        default_factory=dict, repr=False, compare=False)
-    _wave_lock: threading.Lock = dataclasses.field(
-        default_factory=threading.Lock, repr=False, compare=False)
+    _factor_token: Optional[Tuple] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def n_traces(self) -> int:
@@ -380,25 +595,44 @@ class RaggedTraceArrays:
                 self.origin_arrays().take(~self.kernel_varying)
         return self._alike_origin
 
+    def factor_token(self) -> Tuple:
+        """Content identity of this stack for the cross-stack factor
+        cache: the tuple of trace fingerprints (a superset of what the
+        factor depends on — alike-row arrays and per-trace origins).
+        Memoized; a 1-trace stack's token equals ``(fingerprint,)``, the
+        same token ``predict_trace_batch`` uses, so single-trace predict
+        traffic and 1-trace sweeps share one cache entry."""
+        if self._factor_token is None:
+            self._factor_token = tuple(self.fingerprints)
+        return self._factor_token
+
+    def origin_specs(self) -> Tuple:
+        """The per-trace origin ``DeviceSpec`` tuple as currently
+        resolved — the factor cache validates entries against it by
+        value, since the trace fingerprints name the origin device but
+        do not hash its numbers (a monkeypatched/replaced registry entry
+        must invalidate, not serve a stale factor)."""
+        return tuple(devices.get(o) for o in self.origins)
+
     def alike_wave_factor(self, da: DeviceArrays, exact: bool,
                           model_overhead: bool):
-        """Cached wave-scaling factor grid for the kernel-alike rows x
-        ``da``: (factor (n_alike, n_dev), overheads-or-None).
+        """Wave-scaling factor grid for the kernel-alike rows x ``da``:
+        (factor (n_alike, n_dev), overheads-or-None).
 
         The factor is a pure function of this (immutable) stack and the
-        destination fleet, so repeat sweeps of a cached stack skip the
-        pow-heavy recompute and pay only the ``t * factor`` combine —
-        the "recomputes every cell on each pass" half of the PR 3 hot
-        path.  Entries validate the ``DeviceArrays`` *instance* (the
-        memoized ``as_arrays`` returns one object per distinct spec
-        tuple), so a same-named fleet with different specs can never be
-        served a stale factor.  Reads are lock-free (concurrent fills
-        compute identical values); eviction + insert mutate under the
-        stack's lock so racing sweeps cannot corrupt the dict."""
-        key = (tuple(da.names), exact, model_overhead)
-        hit = self._wave_factors.get(key)
-        if hit is not None and hit[0] is da:
-            return hit[1], hit[2]
+        destination fleet, so repeat sweeps skip the pow-heavy recompute
+        and pay only the ``t * factor`` combine.  Since PR 5 the entry
+        lives in the module-level :data:`WAVE_FACTOR_CACHE` keyed by
+        content fingerprints — it survives this stack object and also
+        serves ``predict_trace_batch`` and freshly-restacked sweeps over
+        the same traces.  Stale-spec safety is the cache's validation of
+        the destination ``DeviceArrays`` instance and the origin spec
+        values (see its docstring)."""
+        key = _factor_key(self.factor_token(), da, exact, model_overhead)
+        origins = self.origin_specs()
+        hit = WAVE_FACTOR_CACHE.get(key, da, origins)
+        if hit is not None:
+            return hit
         origin = self.alike_origin_arrays()
         alike = ~self.kernel_varying
         sub = SimpleNamespace(intensity=self.intensity[alike],
@@ -406,21 +640,18 @@ class RaggedTraceArrays:
         factor = wave_scaling.wave_factor_vec(sub, origin, da, exact=exact)
         overheads = (wave_scaling.dispatch_overheads(origin, da)
                      if model_overhead else None)
-        with self._wave_lock:
-            while len(self._wave_factors) >= 4:  # a few fleets per stack
-                self._wave_factors.pop(next(iter(self._wave_factors)))
-            self._wave_factors[key] = (da, factor, overheads)
+        WAVE_FACTOR_CACHE.insert(key, da, origins, factor, overheads)
         return factor, overheads
 
     def peek_wave_factor(self, da: DeviceArrays, exact: bool,
                          model_overhead: bool):
         """The cached factor for ``da`` if warm, else None — masked
-        sweeps must not pay a full-grid factor build for partial work."""
-        hit = self._wave_factors.get((tuple(da.names), exact,
-                                      model_overhead))
-        if hit is not None and hit[0] is da:
-            return hit[1], hit[2]
-        return None
+        sweeps must not pay a full-grid factor build for partial work
+        (and a cold peek is not a counted miss, see the cache's
+        ``peek``)."""
+        return WAVE_FACTOR_CACHE.peek(
+            _factor_key(self.factor_token(), da, exact, model_overhead),
+            da, self.origin_specs())
 
     def extend(self, traces: Sequence[TrackedTrace]) -> "RaggedTraceArrays":
         """Append traces, reusing this stack's arrays for the shared prefix.
@@ -468,13 +699,19 @@ class _StackCache:
     request extending a cached *prefix* reuses the ready prefix arrays
     and only stacks the new tail.  Bounded by entry count AND bytes
     (prefix-extended supersets are independent copies, so an entry-only
-    LRU could pin many near-duplicates of a large trace set).
+    LRU could pin many near-duplicates of a large trace set); the
+    process-wide instance reads its bounds from
+    ``REPRO_STACK_CACHE_ENTRIES`` / ``REPRO_STACK_CACHE_BYTES``
+    (defaults 16 entries / 256 MiB).
     Thread-safe: the serving layer's coalescing leaders stack from
     short-lived threads."""
 
-    def __init__(self, capacity: int = 16, max_bytes: int = 256 << 20):
-        self.capacity = capacity
-        self.max_bytes = max_bytes
+    def __init__(self, capacity: Optional[int] = None,
+                 max_bytes: Optional[int] = None):
+        self.capacity = (env_int("REPRO_STACK_CACHE_ENTRIES", 16)
+                         if capacity is None else capacity)
+        self.max_bytes = (env_int("REPRO_STACK_CACHE_BYTES", 256 << 20)
+                          if max_bytes is None else max_bytes)
         self._data: "OrderedDict[Tuple, RaggedTraceArrays]" = OrderedDict()
         self._bytes: Dict[Tuple, int] = {}
         self._total_bytes = 0
@@ -524,6 +761,15 @@ class _StackCache:
                 old_key, _ = self._data.popitem(last=False)
                 self._total_bytes -= self._bytes.pop(old_key)
         return stack
+
+    def stats(self) -> Dict[str, int]:
+        """Counter snapshot under the lock (the ``/stats`` payload)."""
+        with self._lock:
+            return {"hits": self.hits, "extends": self.extends,
+                    "builds": self.builds, "entries": len(self._data),
+                    "bytes": self._total_bytes,
+                    "capacity": self.capacity,
+                    "max_bytes": self.max_bytes}
 
     def clear(self) -> None:
         with self._lock:
@@ -663,6 +909,7 @@ class FusedMLPScorer:
     """
 
     def __init__(self, mlps: Dict, block_m: int = 128, impl: str = "auto"):
+        from repro.core import mlp as mlp_mod
         from repro.kernels import ops as kernel_ops
         import jax.numpy as jnp
         if not mlps:
@@ -686,6 +933,19 @@ class FusedMLPScorer:
         self.mlps = dict(mlps)                # normalization + output contract
         self.block_m = block_m
         self.impl = impl
+        # the row-mapped path standardizes per row via these stacked
+        # normalization constants (one vectorized expression, elementwise
+        # identical to per-kind normalize()); MLPs with an overridden
+        # normalize/ms_from_log keep the per-kind loops instead
+        self._stock_contract = all(
+            type(m).normalize is mlp_mod.TrainedMLP.normalize
+            and type(m).ms_from_log is mlp_mod.TrainedMLP.ms_from_log
+            for m in mlps.values())
+        if self._stock_contract:
+            self._feat_mean = np.stack(
+                [np.asarray(mlps[k].feature_mean) for k in self.kinds])
+            self._feat_std = np.stack(
+                [np.asarray(mlps[k].feature_std) for k in self.kinds])
 
     def score_ms(self, feats_by_kind: Dict[str, np.ndarray]
                  ) -> Dict[str, np.ndarray]:
@@ -700,6 +960,12 @@ class FusedMLPScorer:
         from repro.kernels import ops as kernel_ops
         from repro.kernels.fused_mlp_score import bucket_blocks
         import jax.numpy as jnp
+        if not any(f.shape[0] for f in feats_by_kind.values()):
+            # bucket_blocks(0) == 0 by contract: never launch an empty
+            # kernel — answer the degenerate query directly instead
+            return {kind: self.mlps[kind].ms_from_log(
+                        np.zeros(0, np.float32))
+                    for kind in feats_by_kind}
         bm = self.block_m
         blocks, kind_of_block, counts = [], [], []
         for kind, feats in feats_by_kind.items():
@@ -716,6 +982,7 @@ class FusedMLPScorer:
             blocks.append(np.zeros((pad_blocks * bm, self.hidden),
                                    np.float32))
             kind_of_block.extend([0] * pad_blocks)
+        SCORER_DISPATCHES.bump("fused")
         log_ms = np.asarray(kernel_ops.fused_mlp_score(
             jnp.asarray(np.concatenate(blocks)),
             jnp.asarray(np.asarray(kind_of_block, np.int32)),
@@ -726,6 +993,97 @@ class FusedMLPScorer:
                 log_ms[offset:offset + n])
             offset += (-(-n // bm)) * bm
         return out
+
+    def _normalized_rows(self, feats: np.ndarray,
+                         kind_ids: np.ndarray) -> np.ndarray:
+        """Per-row standardized features, (m, n_raw_feat) float64.
+
+        One vectorized expression over gathered per-kind constants for
+        stock ``TrainedMLP``s — elementwise identical bits to
+        ``normalize()`` on per-kind slices — and the per-kind loop for
+        anything with an overridden contract."""
+        if self._stock_contract:
+            return ((np.atleast_2d(feats) - self._feat_mean[kind_ids])
+                    / self._feat_std[kind_ids])
+        out = np.empty(np.atleast_2d(feats).shape, np.float64)
+        for ki, kind in enumerate(self.kinds):
+            rows = np.flatnonzero(kind_ids == ki)
+            if len(rows):
+                out[rows] = self.mlps[kind].normalize(feats[rows])
+        return out
+
+    def _ms_from_log_rows(self, log_ms: np.ndarray,
+                          kind_ids: np.ndarray) -> np.ndarray:
+        """Per-row output contract: one vectorized un-log for stock
+        MLPs (``ms_from_log`` is one shared static function), per kind
+        otherwise."""
+        if self._stock_contract:
+            from repro.core.mlp import TrainedMLP
+            return np.asarray(TrainedMLP.ms_from_log(log_ms), np.float64)
+        out = np.empty(log_ms.shape[0], np.float64)
+        for ki, kind in enumerate(self.kinds):
+            rows = np.flatnonzero(kind_ids == ki)
+            if len(rows):
+                out[rows] = self.mlps[kind].ms_from_log(log_ms[rows])
+        return out
+
+    def score_rows_ms(self, feats: np.ndarray,
+                      kind_ids: np.ndarray) -> np.ndarray:
+        """Raw feature rows in ANY kind order -> predicted ms, one launch.
+
+        ``kind_ids[i]`` indexes ``self.kinds`` for row ``i`` — callers
+        need no per-kind grouping, so the cell-masked pair path costs
+        exactly ONE scorer dispatch however many op kinds its cold cells
+        mix.  Two lowerings behind the same contract:
+
+        * Pallas/interpret: the row-mapped kernel
+          (:func:`~repro.kernels.fused_mlp_score.fused_mlp_score_rows`)
+          with scalar-prefetched kind maps — rows stay in caller order,
+          padded to a ``bucket_blocks`` jit bucket (padding rides kind
+          0, garbage by contract, sliced off);
+        * jnp (the CPU backend): rows are regrouped by kind host-side
+          into a (K, bucket_rows(max), H) stack and scored by ONE
+          K-batched jitted gemm chain — on CPU there is no DMA schedule
+          to preserve, and skipping the kernel's every-kind-per-row
+          select work keeps the single dispatch cheaper than even one
+          per-kind forward of the same rows.
+
+        Normalization and the output contract stay per kind, shared
+        with ``predict_ms``."""
+        from repro.kernels import ops as kernel_ops
+        from repro.kernels.fused_mlp_score import (bucket_blocks,
+                                                  bucket_rows)
+        import jax.numpy as jnp
+        kind_ids = np.asarray(kind_ids, np.int32)
+        m = feats.shape[0]
+        if m == 0:
+            return np.zeros(0, np.float64)
+        xn = self._normalized_rows(feats, kind_ids)
+        impl = kernel_ops._resolve(self.impl)
+        SCORER_DISPATCHES.bump("fused")
+        if impl == "jnp":
+            rows_by_kind = [np.flatnonzero(kind_ids == ki)
+                            for ki in range(len(self.kinds))]
+            bpad = bucket_rows(max(len(r) for r in rows_by_kind))
+            xs = np.zeros((len(self.kinds), bpad, self.hidden), np.float32)
+            for ki, rows in enumerate(rows_by_kind):
+                xs[ki, :len(rows), :xn.shape[1]] = xn[rows]
+            log_grid = np.asarray(kernel_ops.fused_mlp_score_stacked(
+                jnp.asarray(xs), self.weights, self.biases))
+            log_ms = np.empty(m, np.float32)
+            for ki, rows in enumerate(rows_by_kind):
+                log_ms[rows] = log_grid[ki, :len(rows)]
+        else:
+            bm = self.block_m
+            padded = bucket_blocks(-(-m // bm)) * bm
+            xp = np.zeros((padded, self.hidden), np.float32)
+            row_kinds = np.zeros(padded, np.int32)
+            row_kinds[:m] = kind_ids
+            xp[:m, :xn.shape[1]] = xn
+            log_ms = np.asarray(kernel_ops.fused_mlp_score_rows(
+                jnp.asarray(xp), jnp.asarray(row_kinds), self.weights,
+                self.biases, block_m=bm, impl=impl))[:m]
+        return self._ms_from_log_rows(log_ms, kind_ids)
 
 
 def _resolve_scorer(scorer, mlps: Dict):
@@ -767,7 +1125,8 @@ def predict_sweep(traces: Union[RaggedTraceArrays, Sequence[TrackedTrace]],
                   scorer=None,
                   cell_mask: Optional[np.ndarray] = None,
                   stack_cache: bool = True,
-                  feature_buffers: bool = True) -> SweepPrediction:
+                  feature_buffers: bool = True,
+                  factor_cache: bool = True) -> SweepPrediction:
     """Predict every trace on every destination in one ragged pass.
 
     Row i of the result reproduces :func:`predict_trace_batch` on trace i
@@ -785,9 +1144,13 @@ def predict_sweep(traces: Union[RaggedTraceArrays, Sequence[TrackedTrace]],
     bitwise-equal to the full grid; MLP rows via pair-gathered feature
     rows, tolerance-equal like any re-batched MLP forward), and every
     masked-out cell is left NaN.  The serve layer uses this to fill only
-    the cache-cold cells of a sweep.  ``stack_cache``/``feature_buffers``
-    select the zero-repack stack cache and pooled feature buffers
-    (defaults on; off is the allocate-everything compat spelling).
+    the cache-cold cells of a sweep.  ``stack_cache``/``feature_buffers``/
+    ``factor_cache`` select the zero-repack stack cache, the pooled
+    feature buffers, and the cross-stack wave-factor cache (defaults on;
+    all off is the allocate-and-recompute-everything compat spelling —
+    ``factor_cache=False`` matters for baselines because the factor
+    cache is content-keyed and would otherwise stay warm across even a
+    fresh restack).
     """
     ragged = stack_traces(traces, cache=stack_cache)
     da = devices.as_arrays(dests)
@@ -803,21 +1166,30 @@ def predict_sweep(traces: Union[RaggedTraceArrays, Sequence[TrackedTrace]],
     if cell_mask is not None:
         return _predict_sweep_masked(ragged, da, mlps, exact,
                                      model_overhead, scorer, cell_mask,
-                                     feature_buffers=feature_buffers)
+                                     feature_buffers=feature_buffers,
+                                     factor_cache=factor_cache)
     out = np.empty((ragged.n_ops, da.n), np.float64)
 
-    # kernel-alike: segment-aware wave scaling over the whole ragged grid,
-    # with the t-independent factor cached on the stack — a repeat sweep
-    # of a cached stack pays only the t * factor combine
+    # kernel-alike: segment-aware wave scaling over the whole ragged
+    # grid, with the t-independent factor served from the cross-stack
+    # cache — a repeat sweep pays only the t * factor combine
     alike = ~ragged.kernel_varying
     if alike.any():
         t_o = ragged.measured_ms[alike]
         if np.isnan(t_o).any():
             _raise_unmeasured(ragged, np.flatnonzero(alike), t_o)
-        factor, overheads = ragged.alike_wave_factor(da, exact,
-                                                     model_overhead)
-        out[alike] = wave_scaling.combine_wave_factor(t_o, factor,
-                                                      overheads)
+        if factor_cache:
+            factor, overheads = ragged.alike_wave_factor(da, exact,
+                                                         model_overhead)
+            out[alike] = wave_scaling.combine_wave_factor(t_o, factor,
+                                                          overheads)
+        else:
+            sub = SimpleNamespace(
+                intensity=ragged.intensity[alike],
+                bytes_accessed=ragged.bytes_accessed[alike])
+            out[alike] = wave_scaling.scale_times_vec(
+                t_o, sub, ragged.alike_origin_arrays(), da, exact=exact,
+                model_overhead=model_overhead)
 
     # kernel-varying without an MLP: vectorized analytical fallback,
     # computed on the masked rows only (the formula is element-wise, so
@@ -892,7 +1264,8 @@ _PATTERN_GROUP_LIMIT = 8
 def _predict_sweep_masked(ragged: RaggedTraceArrays, da: DeviceArrays,
                           mlps: Dict, exact: bool, model_overhead: bool,
                           scorer, cell_mask: np.ndarray,
-                          feature_buffers: bool = True) -> SweepPrediction:
+                          feature_buffers: bool = True,
+                          factor_cache: bool = True) -> SweepPrediction:
     """Partial-compute sweep: evaluate only the masked-in cells.
 
     Every computed cell reproduces the full-grid value — bitwise on the
@@ -911,7 +1284,8 @@ def _predict_sweep_masked(ragged: RaggedTraceArrays, da: DeviceArrays,
     alike_ops = ~ragged.kernel_varying
     no_mlp_ops = _no_mlp_rows(ragged, mlps)
 
-    cached = ragged.peek_wave_factor(da, exact, model_overhead)
+    cached = (ragged.peek_wave_factor(da, exact, model_overhead)
+              if factor_cache else None)
     if grouped:
         # position of each global op row inside the alike subset (the
         # origin arrays are stored alike-subset-major)
@@ -1004,43 +1378,60 @@ def _predict_sweep_masked(ragged: RaggedTraceArrays, da: DeviceArrays,
                     bytes_accessed=ragged.bytes_accessed[rows])
                 out[rows, c] = analytical_ms_flat(sub, da, c)
 
-    # kernel-varying cells with an MLP: pair-gathered feature rows
+    # kernel-varying cells with an MLP: pair-gathered feature rows.
+    # With a fused scorer active, every kind's cold pairs are scored by
+    # ONE row-mapped launch (each row carries its own kind id) — no
+    # per-kind grouping, no per-kind block padding, exactly 1 scorer
+    # dispatch for any kind mix.  Without one (the CPU "auto" default),
+    # the PR 4 per-kind forwards run — kept as the parity baseline and
+    # the bench_dispatch comparison point.
     fused = _resolve_scorer(scorer, mlps)
     dev_t = dataset_mod.transform_features(da.feature_matrix)
     n_feat = ragged.op_features.shape[1] + da.feature_matrix.shape[1]
-    feats_by_kind: Dict[str, np.ndarray] = {}
-    cells_by_kind: Dict[str, Tuple[np.ndarray, np.ndarray]] = {}
-    bufs: List[np.ndarray] = []
-    try:
-        for kind, idx in _mlp_kind_rows(ragged, mlps):
-            r, c = np.nonzero(op_mask[idx])
-            if not len(r):
-                continue
-            rows = idx[r]
-            # transform only rows that actually appear in cold pairs —
-            # work stays proportional to cold cells, not to the kind's
-            # full op count (log1p per row is identical either way)
-            used, r_used = np.unique(r, return_inverse=True)
-            op_t = dataset_mod.transform_features(
-                ragged.op_features[idx[used]])
-            if feature_buffers:     # the pool is a kill-switchable opt
-                buf = _FEATURE_BUFFERS.acquire(len(r), n_feat)
-                bufs.append(buf)
-            else:
-                buf = np.empty((len(r), n_feat), np.float32)
-            feats_by_kind[kind] = _features_pairs_into(buf, op_t, dev_t,
-                                                       r_used, c)
-            cells_by_kind[kind] = (rows, c)
-        if feats_by_kind:
-            if fused is not None:
-                scored = fused.score_ms(feats_by_kind)
-            else:
-                scored = {kind: mlps[kind].predict_ms(feats)
-                          for kind, feats in feats_by_kind.items()}
-            for kind, (rows, c) in cells_by_kind.items():
-                out[rows, c] = scored[kind]
-    finally:
-        for buf in bufs:
-            _FEATURE_BUFFERS.release(buf)
+    pairs: List[Tuple[str, np.ndarray, np.ndarray, np.ndarray]] = []
+    for kind, idx in _mlp_kind_rows(ragged, mlps):
+        r, c = np.nonzero(op_mask[idx])
+        if len(r):
+            pairs.append((kind, idx, r, c))
+
+    def pair_features(buf, idx, r, c):
+        # transform only rows that actually appear in cold pairs — work
+        # stays proportional to cold cells, not to the kind's full op
+        # count (log1p per row is identical either way)
+        used, r_used = np.unique(r, return_inverse=True)
+        op_t = dataset_mod.transform_features(ragged.op_features[idx[used]])
+        return _features_pairs_into(buf, op_t, dev_t, r_used, c)
+
+    if pairs and fused is not None:
+        total = sum(len(r) for _, _, r, _ in pairs)
+        buf = (_FEATURE_BUFFERS.acquire(total, n_feat) if feature_buffers
+               else np.empty((total, n_feat), np.float32))
+        try:
+            kind_rows = np.empty(total, np.int32)
+            offset = 0
+            for kind, idx, r, c in pairs:
+                pair_features(buf[offset:offset + len(r)], idx, r, c)
+                kind_rows[offset:offset + len(r)] = fused.kinds.index(kind)
+                offset += len(r)
+            scored = fused.score_rows_ms(buf[:total], kind_rows)
+        finally:
+            if feature_buffers:
+                _FEATURE_BUFFERS.release(buf)
+        offset = 0
+        for kind, idx, r, c in pairs:
+            out[idx[r], c] = scored[offset:offset + len(r)]
+            offset += len(r)
+    elif pairs:
+        for kind, idx, r, c in pairs:
+            buf = (_FEATURE_BUFFERS.acquire(len(r), n_feat)
+                   if feature_buffers
+                   else np.empty((len(r), n_feat), np.float32))
+            try:
+                feats = pair_features(buf, idx, r, c)
+                SCORER_DISPATCHES.bump("per_kind")
+                out[idx[r], c] = mlps[kind].predict_ms(feats)
+            finally:
+                if feature_buffers:
+                    _FEATURE_BUFFERS.release(buf)
 
     return SweepPrediction(dests=list(da.names), op_ms=out, arrays=ragged)

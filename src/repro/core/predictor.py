@@ -93,7 +93,7 @@ class HabitatPredictor(_FleetTraceMixin):
     def __init__(self, mlps: Optional[Dict[str, mlp.TrainedMLP]] = None,
                  exact_wave: bool = False, model_overhead: bool = False,
                  sweep_scorer: str = "auto", stack_cache: bool = True,
-                 feature_buffers: bool = True):
+                 feature_buffers: bool = True, factor_cache: bool = True):
         self.mlps = mlps or {}
         self.exact_wave = exact_wave
         self.model_overhead = model_overhead
@@ -102,12 +102,15 @@ class HabitatPredictor(_FleetTraceMixin):
         #: ("pallas" | "interpret" | "jnp").
         self.sweep_scorer = sweep_scorer
         #: hot-path plumbing knobs (results are identical either way):
-        #: the fingerprint-keyed stack cache (skips ragged repacks) and
-        #: the pooled feature-grid buffers (skip per-pass reallocation).
-        #: Off together they reproduce the PR 3 allocate-per-pass engine —
-        #: kept as the benchmark baseline and as kill switches.
+        #: the fingerprint-keyed stack cache (skips ragged repacks), the
+        #: pooled feature-grid buffers (skip per-pass reallocation), and
+        #: the cross-stack wave-factor cache (skips the pow-heavy factor
+        #: rebuild).  All off reproduces the allocate-and-recompute-
+        #: everything engine — kept as the benchmark baseline and as
+        #: kill switches.
         self.stack_cache = stack_cache
         self.feature_buffers = feature_buffers
+        self.factor_cache = factor_cache
         self._scorer_cache: Dict = {}
 
     # -- per-op ------------------------------------------------------------
@@ -144,7 +147,8 @@ class HabitatPredictor(_FleetTraceMixin):
         return batched.predict_trace_batch(
             trace, dests, mlps=self.mlps, exact=self.exact_wave,
             model_overhead=self.model_overhead,
-            feature_buffers=self.feature_buffers)
+            feature_buffers=self.feature_buffers,
+            factor_cache=self.factor_cache)
 
     # -- multi-trace ragged sweep ------------------------------------------
     def _fused_scorer(self, spelling):
@@ -182,7 +186,8 @@ class HabitatPredictor(_FleetTraceMixin):
             model_overhead=self.model_overhead,
             scorer=self._fused_scorer(spelling), cell_mask=cell_mask,
             stack_cache=self.stack_cache,
-            feature_buffers=self.feature_buffers)
+            feature_buffers=self.feature_buffers,
+            factor_cache=self.factor_cache)
 
     def sweep_config_key(self) -> tuple:
         """Cache-key identity of sweep() results.

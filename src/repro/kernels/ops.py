@@ -90,3 +90,30 @@ def fused_mlp_score(x, block_kinds, weights, biases, block_m: int = 128,
     return fms.fused_mlp_score(x, block_kinds, weights, biases,
                                block_m=block_m,
                                interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "impl"))
+def fused_mlp_score_rows(x, row_kinds, weights, biases, block_m: int = 128,
+                         impl: str = "auto"):
+    """Row-mapped all-kind MLP scorer: x (B, H) rows in ANY kind order;
+    row_kinds (B,) int32 per-row kind map; weights (K,L,H,H);
+    biases (K,L,H) -> (B,).  One launch for any kind mix — the cell-masked
+    pair path's single-dispatch spelling."""
+    impl = _resolve(impl)
+    if impl == "jnp":
+        return fms_ref.fused_mlp_score_rows_ref(x, row_kinds, weights,
+                                                biases)
+    return fms.fused_mlp_score_rows(x, row_kinds, weights, biases,
+                                    block_m=block_m,
+                                    interpret=(impl == "interpret"))
+
+
+@jax.jit
+def fused_mlp_score_stacked(xs, weights, biases):
+    """CPU lowering of the row-mapped scorer: xs (K, Bpad, H) per-kind
+    row stacks -> (K, Bpad) in one K-batched jitted gemm chain.  The
+    engine packs rows by kind host-side (``FusedMLPScorer.score_rows_ms``
+    on a jnp backend), so there is no cross-kind select work; the Pallas
+    row kernel keeps the genuine per-row map for TPU, where host-side
+    repacking would fight the DMA schedule."""
+    return fms_ref.fused_mlp_score_stacked_ref(xs, weights, biases)

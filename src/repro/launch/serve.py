@@ -63,6 +63,8 @@ def serve_http(args) -> None:
         print(f"shared result cache: {cache}", flush=True)
 
     if args.workers == 1:
+        from repro.serve.http import log_engine_caches
+
         service = build_service(cache=cache, coalesce_ms=args.coalesce_ms,
                                 mlps=args.fleet_mlps)
         server = PredictionServer(service, host=args.host, port=args.port)
@@ -71,6 +73,11 @@ def serve_http(args) -> None:
             server.serve_forever()
         except KeyboardInterrupt:
             pass
+        finally:
+            # factor/stack-cache effectiveness is invisible per request;
+            # the shutdown line is the operator's signal (workers in the
+            # pool print their own via repro.serve.http)
+            log_engine_caches(service)
         return
 
     env = dict(os.environ)

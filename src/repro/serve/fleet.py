@@ -144,6 +144,22 @@ class FleetPlanner:
         """This planner's cache accounting (per-worker for shared backends)."""
         return self.cache.stats
 
+    @staticmethod
+    def engine_cache_stats() -> Dict[str, Dict]:
+        """Hit/miss/byte counters of the engine-level caches.
+
+        The stack cache and the cross-stack wave-factor cache are
+        process-wide (module-level in ``core.batched`` — they serve every
+        planner in the process), so this is a static snapshot; each cache
+        snapshots its counters under its own lock, same discipline as the
+        coalescing counters.  Scorer-dispatch counts ride along so the
+        ``/stats`` payload exposes the dispatch-count model of the hot
+        path, not just cache behavior."""
+        from repro.core import batched
+        return {"stack_cache": batched.STACK_CACHE.stats(),
+                "wave_factor_cache": batched.WAVE_FACTOR_CACHE.stats(),
+                "scorer_dispatches": batched.SCORER_DISPATCHES.snapshot()}
+
     # -- fleet -------------------------------------------------------------
     @property
     def fleet(self) -> List[str]:

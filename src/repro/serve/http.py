@@ -217,6 +217,32 @@ def build_service(cache: Optional[str] = None, cache_size: int = 4096,
                             flush_at=flush_at)
 
 
+def log_engine_caches(service: PredictionService) -> None:
+    """One-line engine-cache summary, printed on worker shutdown.
+
+    The stack cache and the cross-stack wave-factor cache are invisible
+    in per-request latencies once warm — the shutdown line is where an
+    operator sees whether they actually carried the traffic (a near-zero
+    hit count on a busy worker means the bounds are too tight)."""
+    caches = service.stats().get("engine_caches", {})
+    parts = []
+    for name, c in caches.items():
+        if name == "stack_cache":       # a build is a full miss, an
+            # extend a partial hit — print its real counters
+            parts.append(f"{name}: hits={c['hits']} "
+                         f"extends={c['extends']} builds={c['builds']} "
+                         f"bytes={c.get('bytes', 0)}")
+        elif name == "scorer_dispatches":
+            parts.append(f"{name}: fused={c.get('fused', 0)} "
+                         f"per_kind={c.get('per_kind', 0)}")
+        else:                           # wave_factor_cache (and any
+            # future hit/miss-shaped cache)
+            parts.append(f"{name}: hits={c.get('hits', 0)} "
+                         f"misses={c.get('misses', 0)} "
+                         f"bytes={c.get('bytes', 0)}")
+    print("engine caches on shutdown: " + "; ".join(parts), flush=True)
+
+
 def main(argv: Optional[Sequence[str]] = None) -> None:
     ap = argparse.ArgumentParser(
         description="one prediction-service HTTP worker")
@@ -248,6 +274,8 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         server.serve_forever()
     except KeyboardInterrupt:
         pass
+    finally:
+        log_engine_caches(service)
 
 
 if __name__ == "__main__":

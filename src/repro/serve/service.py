@@ -28,6 +28,18 @@ answer still equals the direct planner answer (bitwise on the analytical
 paths).  Requests naming unknown devices fail individually at validation
 time and never poison the shared grid.
 
+Union/split planning (``split_planner``, default on): the union
+rectangle prices (every unique trace) x (every union device), so a batch
+of *near-disjoint* fleets pays for cells nobody requested.  Before
+committing, the batch is partitioned into connected components (requests
+sharing a device or a trace merge) and a cost model — per-pass overhead
+and per-op-cell cost, seeded from env knobs and refined from measured
+engine passes, with the rectangles discounted by the measured cold
+fraction so fully-warm repeat traffic is not split for savings the
+result cache already provides — decides between one union pass and k
+sub-union passes.  Cell values are independent of co-batching, so the
+answer is the same under either plan.
+
 Answer fidelity: the ranking math is :func:`repro.serve.fleet.rank_rows`
 — the same function ``FleetPlanner.rank`` uses — and on the analytical
 prediction paths a ragged sweep row is bitwise-identical to a solo
@@ -50,6 +62,7 @@ import threading
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
+from repro.core.batched import env_float
 from repro.core.trace import TrackedTrace
 from repro.serve.cache import BackendLike
 from repro.serve.fleet import FleetChoice, FleetPlanner, rank_rows
@@ -104,13 +117,27 @@ class PredictionService:
         axis and slice per-request columns out (the default).  ``False``
         restores the PR 3 batcher that only merged identically-spelled
         fleets — kept as the benchmark baseline and as a kill switch.
+    split_planner:
+        Cost-model the union rectangle before committing to it (the
+        default).  A union pass prices (unique traces) x (union
+        devices); when the batch decomposes into request groups that
+        share no device and no trace — near-disjoint fleets — the
+        rectangle's never-requested cells are pure waste.  The planner
+        compares ``k x per-pass-overhead + split cells`` against
+        ``per-pass-overhead + rectangle cells`` (constants seeded from
+        ``REPRO_SPLIT_PASS_OVERHEAD_MS`` / ``REPRO_SPLIT_CELL_NS``,
+        defaults 1.5 ms / 40 ns, then refined from measured engine
+        passes) and runs k sub-union passes when the rectangle loses.
+        Per-request answers are identical either way — cell values are
+        independent of co-batching — so ``False`` (always one union
+        pass) is a pure kill switch.
     """
 
     def __init__(self, planner: Optional[FleetPlanner] = None,
                  predictor=None, fleet: Optional[Sequence[str]] = None,
                  cache: BackendLike = None, cache_size: int = 4096,
                  coalesce_window_ms: float = 5.0, flush_at: int = 64,
-                 union_grid: bool = True):
+                 union_grid: bool = True, split_planner: bool = True):
         if planner is None:
             planner = FleetPlanner(predictor=predictor, fleet=fleet,
                                    cache_size=cache_size, cache=cache)
@@ -118,6 +145,13 @@ class PredictionService:
         self.coalesce_window_ms = float(coalesce_window_ms)
         self.flush_at = max(int(flush_at), 1)
         self.union_grid = bool(union_grid)
+        self.split_planner = bool(split_planner)
+        #: seed constants of the union/split cost model; measured engine
+        #: passes refine them online (see ``_pass_model``)
+        self.split_pass_overhead_s = env_float(
+            "REPRO_SPLIT_PASS_OVERHEAD_MS", 1.5) * 1e-3
+        self.split_cell_cost_s = env_float(
+            "REPRO_SPLIT_CELL_NS", 40.0) * 1e-9
         self._cond = threading.Condition()
         self._pending: List[PendingQuery] = []
         self._leader_active = False
@@ -130,6 +164,12 @@ class PredictionService:
         self._max_batch = 0
         self._union_batches = 0         # union engine passes executed
         self._sliced_columns = 0        # device columns served by slicing
+        self._split_batches = 0         # batches split into sub-unions
+        self._split_passes = 0          # sub-union passes those batches ran
+        #: per-pass samples (cold op-cells computed, rectangle op-cells,
+        #: seconds) — the cost model's time fit uses the cold cells, the
+        #: warmth discount uses the cold/rectangle ratio
+        self._pass_samples: List[Tuple[int, int, float]] = []
 
     # -- public query API ---------------------------------------------------
     def rank(self, trace: TrackedTrace, batch_size: int,
@@ -239,16 +279,27 @@ class PredictionService:
                 "max_batch": self._max_batch,
                 "union_batches": self._union_batches,
                 "sliced_columns": self._sliced_columns,
+                "split_batches": self._split_batches,
+                "split_passes": self._split_passes,
                 "window_ms": self.coalesce_window_ms,
                 "flush_at": self.flush_at,
                 "union_grid": self.union_grid,
+                "split_planner": self.split_planner,
             }
+            n_samples = len(self._pass_samples)
+        c_pass, c_cell = self._pass_model()
         cache = self.planner.stats.as_dict()
         cache["backend"] = self.planner.cache.describe()
         cache["entries"] = len(self.planner.cache)
         return {"requests": requests, "coalescing": coalescing,
                 "engine_passes": self.planner.engine_pass_count(),
-                "cache": cache, "fleet": self.planner.fleet}
+                "split_model": {"pass_overhead_ms": c_pass * 1e3,
+                                "cell_cost_ns": c_cell * 1e9,
+                                "warm_discount": self._warm_discount(),
+                                "samples": n_samples},
+                "cache": cache,
+                "engine_caches": self.planner.engine_cache_stats(),
+                "fleet": self.planner.fleet}
 
     # -- coalescing core ----------------------------------------------------
     def _enqueue(self, req: PendingQuery) -> None:
@@ -294,18 +345,44 @@ class PredictionService:
         self._execute(batch)
 
     def _execute(self, batch: List[PendingQuery]) -> None:
-        """One union-grid engine pass for the whole batch.
+        """Union-grid engine pass(es) for the whole batch.
 
         All requests' destination fleets are stacked into one deduped
         union device axis and all traces are deduplicated by fingerprint,
         so K concurrent queries — however heterogeneous their fleets —
         cost ONE ragged ``planner.sweep`` and exactly one cache miss per
-        unique (trace, device, config, fleet) key.  Each request's answer
-        is sliced back out of the union row; cell values are independent
-        of which columns co-batched, so the slice equals the direct
-        planner answer (bitwise on the analytical paths)."""
+        unique (trace, device, config, fleet) key.  Before committing,
+        the union/split cost model (``_plan_groups``) may carve a
+        near-disjoint batch into a few sub-union passes instead of
+        paying the full rectangle.  Each request's answer is sliced back
+        out of its pass's union row; cell values are independent of
+        which columns co-batched, so the slice equals the direct planner
+        answer (bitwise on the analytical paths) under any plan."""
         if not self.union_grid:
             return self._execute_grouped(batch)
+        resolved = self._resolve_batch(batch)
+        if not resolved:
+            return
+        try:
+            groups = self._plan_groups(resolved)
+        except BaseException:
+            # planning is advisory — it touches every trace's
+            # fingerprint/arrays, and a trace that fails there must flow
+            # into the union pass's error-isolation path (which answers
+            # the healthy requests and errors the culprit), never kill
+            # the leader with every waiter's done-event unset
+            groups = [resolved]
+        if len(groups) > 1:
+            with self._cond:
+                self._split_batches += 1
+                self._split_passes += len(groups)
+        for group in groups:
+            self._union_pass(group)
+
+    def _resolve_batch(self, batch: List[PendingQuery]
+                       ) -> List[Tuple[PendingQuery, List[str]]]:
+        """Resolve each request's destination list, failing bad requests
+        individually so they never poison the shared grid."""
         from repro.core import devices
 
         fleet: Optional[List[str]] = None
@@ -324,8 +401,124 @@ class PredictionService:
             except BaseException as e:
                 req.error = e
                 req.done.set()
-        if not resolved:
-            return
+        return resolved
+
+    # -- union/split cost model ---------------------------------------------
+    def _plan_groups(self, resolved: List[Tuple[PendingQuery, List[str]]]
+                     ) -> List[List[Tuple[PendingQuery, List[str]]]]:
+        """Split a near-disjoint batch into sub-union passes when the
+        rectangle loses.
+
+        Requests sharing a device or a trace are merged (union-find):
+        within a connected component the union rectangle wastes nothing
+        a smaller split would save, and across components every
+        (trace, device) cell of the joint rectangle that crosses a
+        component boundary is work nobody asked for.  The decision
+        prices both plans in op-cells (rows x columns of the ragged
+        grid actually computed) against the measured per-pass overhead:
+        splitting pays one extra engine pass per component, the
+        rectangle pays the cross-component fill."""
+        if not self.split_planner or len(resolved) < 2:
+            return [resolved]
+        parent = list(range(len(resolved)))
+
+        def find(i: int) -> int:
+            while parent[i] != i:
+                parent[i] = parent[parent[i]]
+                i = parent[i]
+            return i
+
+        owner: Dict[Tuple[str, str], int] = {}
+        for i, (req, dlist) in enumerate(resolved):
+            for name in dlist:
+                j = owner.setdefault(("dev", name), i)
+                parent[find(i)] = find(j)
+            for t in req.traces:
+                j = owner.setdefault(("trace", t.fingerprint()), i)
+                parent[find(i)] = find(j)
+        components: Dict[int, List[Tuple[PendingQuery, List[str]]]] = {}
+        for i, item in enumerate(resolved):
+            components.setdefault(find(i), []).append(item)
+        if len(components) == 1:
+            return [resolved]
+
+        def rect_cells(items) -> int:
+            ops: Dict[str, int] = {}
+            devs = set()
+            for req, dlist in items:
+                devs.update(dlist)
+                for t in req.traces:
+                    ops[t.fingerprint()] = t.to_arrays().n_ops
+            return sum(ops.values()) * len(devs)
+
+        parts = list(components.values())
+        c_pass, c_cell = self._pass_model()
+        # discount the rectangles by the measured cold fraction: with
+        # cell-level cache fills, warm cells cost nothing under either
+        # plan, so a fully-warm repeat burst must not be split for a
+        # compute saving that does not exist (the extra pass overhead is
+        # real either way)
+        discount = self._warm_discount()
+        cost_union = c_pass + rect_cells(resolved) * discount * c_cell
+        cost_split = (len(parts) * c_pass
+                      + sum(rect_cells(p) for p in parts)
+                      * discount * c_cell)
+        return parts if cost_split < cost_union else [resolved]
+
+    def _warm_discount(self) -> float:
+        """Recent cold fraction of rectangle op-cells, in [0.1, 1.0].
+
+        1.0 (everything cold) with no history — right for a fresh
+        worker; floored at 0.1 so a long warm streak cannot blind the
+        planner to a traffic shift (the first cold rectangles it then
+        pays re-raise the fraction)."""
+        with self._cond:
+            cold = sum(s[0] for s in self._pass_samples)
+            rect = sum(s[1] for s in self._pass_samples)
+        if rect <= 0:
+            return 1.0
+        return min(max(cold / rect, 0.1), 1.0)
+
+    def _pass_model(self) -> Tuple[float, float]:
+        """(per-pass overhead s, per-op-cell s) of one engine pass.
+
+        Seeded from the env-configurable constants, then refined by a
+        least-squares fit over the (op-cells, seconds) samples recorded
+        around every executed engine pass — the same pass granularity
+        ``engine_passes`` counts.  The fit only replaces the seeds when
+        BOTH terms come out positive: intercept and slope come from one
+        regression, and adopting an intercept inflated by a rejected
+        negative slope (or vice versa) would price passes with an
+        internally inconsistent model — noisy bursts must not make every
+        split look free or every pass look ruinous."""
+        with self._cond:
+            samples = list(self._pass_samples)
+        a, b = self.split_pass_overhead_s, self.split_cell_cost_s
+        if len(samples) >= 8:
+            n = len(samples)
+            mx = sum(s[0] for s in samples) / n
+            mt = sum(s[2] for s in samples) / n
+            var = sum((s[0] - mx) ** 2 for s in samples) / n
+            if var > 0:
+                cov = sum((s[0] - mx) * (s[2] - mt) for s in samples) / n
+                b_fit = cov / var
+                a_fit = mt - b_fit * mx
+                if b_fit > 0 and a_fit > 0:
+                    a, b = a_fit, b_fit
+        return a, b
+
+    def _record_pass(self, cold_cells: int, rect_cells: int,
+                     seconds: float) -> None:
+        with self._cond:
+            self._pass_samples.append((int(cold_cells), int(rect_cells),
+                                       float(seconds)))
+            if len(self._pass_samples) > 64:
+                del self._pass_samples[0]
+
+    def _union_pass(self,
+                    resolved: List[Tuple[PendingQuery, List[str]]]) -> None:
+        """One union engine pass over a (sub-)batch: dedupe traces, sweep
+        the union fleet, slice each request's columns back out."""
         union: List[str] = []
         seen = set()
         for _, dlist in resolved:
@@ -339,8 +532,31 @@ class PredictionService:
                 for t in req.traces:
                     uniq.setdefault(t.fingerprint(), t)
             order = list(uniq)
+            miss0 = self.planner.stats.misses
+            t0 = time.perf_counter()
             rows = self.planner.sweep([uniq[fp] for fp in order],
                                       dests=union)
+            dt = time.perf_counter() - t0
+            # credit the sample with the op-cells actually COMPUTED, not
+            # the full rectangle: with cell-level cache fills a warm pass
+            # computes almost nothing, and pricing it as the rectangle
+            # would fit the per-cell cost toward zero and stop the
+            # planner from ever splitting genuinely cold bursts.  The
+            # result-cache miss delta counts the cold (trace, device)
+            # pairs; scale to op-cells by the mean segment length.  The
+            # delta is over a shared counter, so a concurrently executing
+            # leader's misses can land inside this window — the clamp to
+            # the pass's own rectangle bounds that cross-attribution, and
+            # the positive-fit guard in _pass_model tolerates the
+            # remaining noise.
+            total_pairs = len(order) * len(union)
+            cold_pairs = min(max(self.planner.stats.misses - miss0, 0),
+                             total_pairs)
+            rect_cells = (sum(uniq[fp].to_arrays().n_ops for fp in order)
+                          * len(union))
+            cells = (rect_cells * cold_pairs // total_pairs
+                     if total_pairs else 0)
+            self._record_pass(cells, rect_cells, dt)
             by_fp = dict(zip(order, rows))
             sliced = 0
             for req, dlist in resolved:

@@ -1,0 +1,323 @@
+"""Union/split planner tests: grouping, cost model, and answer parity.
+
+The service may carve a coalesced batch into k sub-union passes when the
+union rectangle loses; every test here pins the invariant that the
+ANSWERS are identical under any plan (cell values are independent of
+co-batching) and that the plan itself follows the connectivity + cost
+rules."""
+
+import threading
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import HabitatPredictor, OperationTracker, devices
+from repro.serve.fleet import FleetPlanner
+from repro.serve.service import PredictionService
+
+DEVS = sorted(devices.all_devices())
+FLEET_A = DEVS[:len(DEVS) // 2]
+FLEET_B = DEVS[len(DEVS) // 2:]
+
+
+def _toy_step(w, x):
+    return jnp.sum(jnp.tanh(x @ w))
+
+
+def _trace(n: int = 16, m: int = 32):
+    return OperationTracker("T4").track(
+        _toy_step, jnp.zeros((m, n)), jnp.zeros((8, m)),
+        label=f"split-{n}x{m}")
+
+
+@pytest.fixture(scope="module")
+def traces():
+    return [_trace(16 + 8 * i) for i in range(8)]
+
+
+def _service(**kw):
+    kw.setdefault("predictor", HabitatPredictor())
+    kw.setdefault("coalesce_window_ms", 60.0)
+    service = PredictionService(**kw)
+    # toy traces are a few ops each — zero the pass-overhead seed so the
+    # cost model's SPLIT decision is deterministic whenever components
+    # exist and cells are saved (the model's refusal side is exercised
+    # explicitly in test_cost_model_can_refuse_to_split)
+    service.split_pass_overhead_s = 0.0
+    return service
+
+
+def _disjoint_burst(service, traces, flush_at):
+    service.flush_at = flush_at
+    handles = [service.submit_rank(t, 32,
+                                   dests=(FLEET_A if i % 2 == 0
+                                          else FLEET_B))
+               for i, t in enumerate(traces)]
+    return [h.get(timeout=60) for h in handles]
+
+
+def test_disjoint_fleets_split_into_two_passes(traces):
+    service = _service()
+    got = _disjoint_burst(service, traces, flush_at=len(traces))
+    stats = service.stats()
+    assert stats["coalescing"]["batches"] == 1
+    assert stats["coalescing"]["split_batches"] == 1
+    assert stats["coalescing"]["split_passes"] == 2
+    assert stats["engine_passes"] == 2
+    # parity: every answer equals the direct planner's, bitwise
+    direct = FleetPlanner(predictor=HabitatPredictor())
+    for i, res in enumerate(got):
+        dests = FLEET_A if i % 2 == 0 else FLEET_B
+        assert res == direct.rank(traces[i], 32, dests=dests)
+
+
+def test_split_matches_forced_union_bitwise(traces):
+    split = _service()
+    forced = _service(split_planner=False)
+    got = _disjoint_burst(split, traces, flush_at=len(traces))
+    want = _disjoint_burst(forced, traces, flush_at=len(traces))
+    assert got == want
+    assert forced.stats()["engine_passes"] == 1
+    assert forced.stats()["coalescing"]["split_batches"] == 0
+
+
+def test_shared_device_keeps_one_pass(traces):
+    """Fleets overlapping in even one device are one component — the
+    rectangle wastes nothing a split would save there."""
+    service = _service()
+    service.flush_at = 4
+    overlap = FLEET_B + [FLEET_A[0]]
+    handles = [service.submit_rank(traces[i], 32,
+                                   dests=(FLEET_A if i % 2 == 0
+                                          else overlap))
+               for i in range(4)]
+    for h in handles:
+        h.get(timeout=60)
+    stats = service.stats()
+    assert stats["coalescing"]["split_batches"] == 0
+    assert stats["engine_passes"] == 1
+
+
+def test_shared_trace_keeps_requests_together(traces):
+    """Disjoint fleets but one shared trace: merging is free (the trace
+    row spans both fleets' columns), so the planner must not split."""
+    service = _service()
+    service.flush_at = 2
+    h1 = service.submit_rank(traces[0], 32, dests=FLEET_A)
+    h2 = service.submit_rank(traces[0], 32, dests=FLEET_B)
+    r1, r2 = h1.get(timeout=60), h2.get(timeout=60)
+    stats = service.stats()
+    assert stats["coalescing"]["split_batches"] == 0
+    assert stats["engine_passes"] == 1
+    direct = FleetPlanner(predictor=HabitatPredictor())
+    assert r1 == direct.rank(traces[0], 32, dests=FLEET_A)
+    assert r2 == direct.rank(traces[0], 32, dests=FLEET_B)
+
+
+def test_cost_model_can_refuse_to_split(traces):
+    """With a huge per-pass overhead the rectangle always wins — the
+    components exist, the model keeps them together."""
+    service = _service()
+    service.split_pass_overhead_s = 10.0       # pathological seed
+    got = _disjoint_burst(service, traces, flush_at=len(traces))
+    stats = service.stats()
+    assert stats["coalescing"]["split_batches"] == 0
+    assert stats["engine_passes"] == 1
+    direct = FleetPlanner(predictor=HabitatPredictor())
+    for i, res in enumerate(got):
+        dests = FLEET_A if i % 2 == 0 else FLEET_B
+        assert res == direct.rank(traces[i], 32, dests=dests)
+
+
+def test_split_sweep_requests(traces):
+    """Sweep-kind requests ride the same planner and stay exact."""
+    split = _service()
+    forced = _service(split_planner=False)
+    for service in (split, forced):
+        service.flush_at = 2
+        ha = service.submit_sweep(traces[:2], dests=FLEET_A)
+        hb = service.submit_sweep(traces[2:4], dests=FLEET_B)
+        service._last = (ha.get(timeout=60), hb.get(timeout=60))
+    assert split._last == forced._last
+    assert split.stats()["engine_passes"] == 2
+    assert forced.stats()["engine_passes"] == 1
+
+
+def test_three_disjoint_groups_three_passes(traces):
+    service = _service()
+    service.flush_at = 6
+    thirds = [DEVS[0:5], DEVS[5:10], DEVS[10:15]]
+    handles = [service.submit_rank(traces[i], 32, dests=thirds[i % 3])
+               for i in range(6)]
+    for h in handles:
+        h.get(timeout=60)
+    stats = service.stats()
+    assert stats["coalescing"]["split_passes"] == 3
+    assert stats["engine_passes"] == 3
+
+
+def test_error_isolated_within_split_group(traces):
+    """An engine error in one group must not poison the other group."""
+    from repro.core.costmodel import OpCost
+    from repro.core.trace import Op, TrackedTrace
+    bad = TrackedTrace(        # unmeasured kernel-alike op -> engine error
+        ops=[Op(name="add", kind="add", cost=OpCost(1e6, 6e5, 4e5))],
+        origin_device="T4", label="bad")
+    service = _service()
+    service.flush_at = 2
+    h_bad = service.submit_rank(bad, 32, dests=FLEET_A)
+    h_ok = service.submit_rank(traces[1], 32, dests=FLEET_B)
+    ok = h_ok.get(timeout=60)
+    with pytest.raises(ValueError, match="no origin measurement"):
+        h_bad.get(timeout=60)
+    direct = FleetPlanner(predictor=HabitatPredictor())
+    assert ok == direct.rank(traces[1], 32, dests=FLEET_B)
+
+
+def test_planning_failure_never_hangs_waiters(traces):
+    """An exception inside _plan_groups (it fingerprints every trace)
+    must degrade to the union pass's error-isolation path — every waiter
+    gets an answer or an error, never an unset done-event."""
+    bad = _trace(20)
+    def boom():
+        raise RuntimeError("boom in planning")
+    bad.fingerprint = boom              # instance attr shadows the method
+    service = _service()
+    service.flush_at = 2
+    h_bad = service.submit_rank(bad, 32, dests=FLEET_A)
+    h_ok = service.submit_rank(traces[1], 32, dests=FLEET_B)
+    ok = h_ok.get(timeout=30)           # would TimeoutError on a hang
+    with pytest.raises(RuntimeError, match="boom in planning"):
+        h_bad.get(timeout=30)
+    direct = FleetPlanner(predictor=HabitatPredictor())
+    assert ok == direct.rank(traces[1], 32, dests=FLEET_B)
+
+
+def test_pass_model_learns_from_measurements(traces):
+    """Measured engine passes refine the cost model (positive fits only)."""
+    service = _service()
+    with service._cond:
+        service._pass_samples = [(c, c, t) for c, t in
+                                 [(1000, 0.002), (2000, 0.003),
+                                  (3000, 0.004), (4000, 0.005),
+                                  (5000, 0.006), (6000, 0.007),
+                                  (7000, 0.008), (8000, 0.009)]]
+    c_pass, c_cell = service._pass_model()
+    assert c_pass == pytest.approx(1e-3, rel=1e-6)
+    assert c_cell == pytest.approx(1e-6, rel=1e-6)
+    # degenerate samples (no variance) fall back to the seeds
+    with service._cond:
+        service._pass_samples = [(1000, 1000, 0.002)] * 8
+    assert service._pass_model() == (service.split_pass_overhead_s,
+                                     service.split_cell_cost_s)
+
+
+def test_warm_history_prefers_union_over_pointless_split(traces):
+    """A fully-warm streak discounts the rectangle, so the planner stops
+    paying extra passes for compute the result cache serves either way —
+    and a cold history restores the split, same overhead."""
+    service = _service()
+    # overhead sized between the discounted and undiscounted savings of
+    # this burst's rectangle, so the warm discount alone flips the plan
+    service.split_pass_overhead_s = 5e-6
+    with service._cond:                        # all-warm history
+        service._pass_samples = [(0, 50_000, 0.001)] * 8
+    assert service._warm_discount() == pytest.approx(0.1)
+    got = _disjoint_burst(service, traces, flush_at=len(traces))
+    stats = service.stats()
+    assert stats["coalescing"]["split_batches"] == 0
+    assert stats["engine_passes"] == 1
+    direct = FleetPlanner(predictor=HabitatPredictor())
+    for i, res in enumerate(got):
+        dests = FLEET_A if i % 2 == 0 else FLEET_B
+        assert res == direct.rank(traces[i], 32, dests=dests)
+    # cold history (no samples -> discount 1.0): the same burst splits
+    with service._cond:
+        service._pass_samples = []
+    service.planner.clear_cache()
+    _disjoint_burst(service, traces, flush_at=len(traces))
+    assert service.stats()["coalescing"]["split_batches"] == 1
+
+
+def test_split_counters_snapshot_consistent(traces):
+    """stats() under concurrent bursts never shows torn counters."""
+    service = _service()
+    service.flush_at = len(traces)
+    stop = threading.Event()
+    seen = []
+
+    def poll():
+        while not stop.is_set():
+            s = service.stats()["coalescing"]
+            seen.append((s["split_batches"], s["split_passes"]))
+
+    t = threading.Thread(target=poll)
+    t.start()
+    try:
+        _disjoint_burst(service, traces, flush_at=len(traces))
+    finally:
+        stop.set()
+        t.join()
+    for batches, passes in seen:
+        assert passes >= batches            # a split has >= 1 pass
+    final = service.stats()["coalescing"]
+    assert (final["split_batches"], final["split_passes"]) == (1, 2)
+
+
+def test_split_model_in_stats_payload(traces):
+    service = _service()
+    payload = service.stats()
+    assert payload["split_model"]["samples"] == 0
+    assert payload["split_model"]["pass_overhead_ms"] == pytest.approx(
+        service.split_pass_overhead_s * 1e3)
+    assert payload["coalescing"]["split_planner"] is True
+    assert "engine_caches" in payload
+
+
+def test_split_env_knobs(monkeypatch):
+    monkeypatch.setenv("REPRO_SPLIT_PASS_OVERHEAD_MS", "2.5")
+    monkeypatch.setenv("REPRO_SPLIT_CELL_NS", "80")
+    service = PredictionService(predictor=HabitatPredictor())
+    assert service.split_pass_overhead_s == pytest.approx(2.5e-3)
+    assert service.split_cell_cost_s == pytest.approx(80e-9)
+    # malformed / negative overrides must not kill the worker — the
+    # documented defaults apply instead (same policy as batched.env_int)
+    monkeypatch.setenv("REPRO_SPLIT_PASS_OVERHEAD_MS", "1,5")
+    monkeypatch.setenv("REPRO_SPLIT_CELL_NS", "-3")
+    service = PredictionService(predictor=HabitatPredictor())
+    assert service.split_pass_overhead_s == pytest.approx(1.5e-3)
+    assert service.split_cell_cost_s == pytest.approx(40e-9)
+
+
+def test_pass_model_rejects_inconsistent_fit(traces):
+    """A fit whose slope comes out negative must not leak its (inflated)
+    intercept into the model — both terms adopt together or not at all."""
+    service = _service()
+    service.split_pass_overhead_s = 1.5e-3
+    with service._cond:
+        # warm passes: many cells, tiny time; cold passes: few cells,
+        # large time -> negative slope, intercept inflated way past any
+        # real per-pass overhead
+        service._pass_samples = [(100_000, 100_000, 0.001)] * 4 \
+            + [(100, 100, 0.02)] * 4
+    c_pass, c_cell = service._pass_model()
+    assert (c_pass, c_cell) == (service.split_pass_overhead_s,
+                                service.split_cell_cost_s)
+
+
+def test_warm_pass_samples_not_credited_with_rectangle(traces):
+    """A repeat (cache-warm) burst must record ~zero computed cells, not
+    the full rectangle — otherwise the fitted per-cell cost collapses
+    and the planner stops splitting cold bursts."""
+    service = _service(split_planner=False)
+    service.flush_at = 4
+    for _ in range(2):          # second burst is fully result-cache warm
+        handles = [service.submit_rank(traces[i], 32, dests=FLEET_A)
+                   for i in range(4)]
+        for h in handles:
+            h.get(timeout=60)
+    with service._cond:
+        samples = list(service._pass_samples)
+    assert len(samples) == 2
+    assert samples[0][0] > 0    # cold burst priced its real cells
+    assert samples[1][0] == 0   # warm burst computed (and records) ~none
