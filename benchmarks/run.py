@@ -54,10 +54,14 @@ BENCHES = [
     ("dispatch", "benchmarks.bench_dispatch",
      "Single-dispatch hot path: row-mapped scorer (>=2x, 1 dispatch) + "
      "warm wave factor (>=3x) + union/split planner (never slower)"),
+    ("frontdoor", "benchmarks.bench_frontdoor",
+     "Async front door: open-loop overload gate (sheds at 2x, goodput "
+     ">=80%, p99 bounded) + threaded baseline"),
 ]
 
 #: the subset (and reduced sizes) run by CI's bench-smoke job
-SMOKE_KEYS = ("fleet", "sweep", "service", "union", "dispatch", "kernels")
+SMOKE_KEYS = ("fleet", "sweep", "service", "union", "dispatch", "kernels",
+              "frontdoor")
 
 
 def main() -> None:

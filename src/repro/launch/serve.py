@@ -23,6 +23,12 @@ worker is a cache hit for all of them::
 
   PYTHONPATH=src python -m repro.launch.serve --serve --workers 2 \\
       --port 8100 --coalesce-ms 5
+
+``--async`` swaps each worker to the asyncio front end
+(``repro.serve.aserver``): same wire formats and admission control,
+plus SSE sweep streaming (``/sweep/stream``) and event-loop concurrency
+instead of a thread per connection.  Omit it for the threaded baseline
+(the kill switch).  See ``docs/serving.md`` for the ops runbook.
 """
 
 from __future__ import annotations
@@ -67,6 +73,16 @@ def serve_http(args) -> None:
 
         service = build_service(cache=cache, coalesce_ms=args.coalesce_ms,
                                 mlps=args.fleet_mlps)
+        if args.use_async:
+            from repro.serve.aserver import AsyncPredictionServer
+
+            server = AsyncPredictionServer(service, host=args.host,
+                                           port=args.port)
+            try:
+                server.serve_forever()  # prints "serving on ..." itself
+            finally:
+                log_engine_caches(service)
+            return
         server = PredictionServer(service, host=args.host, port=args.port)
         print(f"serving on {server.url}", flush=True)
         try:
@@ -84,9 +100,11 @@ def serve_http(args) -> None:
     src = str(Path(__file__).resolve().parents[2])
     env["PYTHONPATH"] = os.pathsep.join(
         p for p in (src, env.get("PYTHONPATH")) if p)
+    worker_mod = ("repro.serve.aserver" if args.use_async
+                  else "repro.serve.http")
     procs = []
     for i in range(args.workers):
-        cmd = [sys.executable, "-m", "repro.serve.http",
+        cmd = [sys.executable, "-m", worker_mod,
                "--host", args.host,
                "--port", str(args.port + i if args.port else 0),
                "--coalesce-ms", str(args.coalesce_ms),
@@ -131,6 +149,10 @@ def main():
     ap.add_argument("--serve", action="store_true",
                     help="run the HTTP prediction service instead of the "
                          "token-serving demo")
+    ap.add_argument("--async", dest="use_async", action="store_true",
+                    help="asyncio front end (SSE streaming + admission "
+                         "control on an event loop); omit for the "
+                         "threaded baseline")
     ap.add_argument("--workers", type=int, default=1,
                     help="HTTP worker processes (consecutive ports, one "
                          "shared sqlite result cache)")

@@ -1,9 +1,49 @@
+"""Serving tier: from one measured trace to a fleet answer at scale.
+
+The layers, bottom to top (data flows up, each layer only talks to its
+neighbors — see ``docs/architecture.md`` for the full tour):
+
+* :mod:`repro.serve.engine` — token-serving demo loop (continuous
+  batching over the transformer decode step); the *workload* the fleet
+  questions are about, not part of the prediction path.
+* :mod:`repro.serve.fleet` — :class:`FleetPlanner`: the policy layer.
+  Vectorized "which device?" ranking and multi-trace what-if sweeps over
+  the Habitat-style predictor, fronted by the result cache (keyed on
+  ``(trace fingerprint, device, config, fleet token)``).
+* :mod:`repro.serve.cache` — result-cache backends: in-process
+  :class:`LRUCache` and cross-process :class:`SqliteCache`
+  (``make_backend`` picks from a path/instance/None spelling).
+* :mod:`repro.serve.service` — :class:`PredictionService`: transport-
+  agnostic request coalescing.  Concurrent queries within an adaptive
+  window become ONE ragged engine pass over a union device grid, with a
+  cost-modeled union/split planner deciding when one rectangle beats k
+  sub-passes.
+* :mod:`repro.serve.admission` — :class:`AdmissionController`: the
+  front door's backpressure policy.  Requests are priced in estimated
+  engine-seconds by the same fitted cost model the split planner uses;
+  work the worker cannot afford sheds with 429/503 + Retry-After.
+* :mod:`repro.serve.http` / :mod:`repro.serve.aserver` — the two front
+  ends over identical wire formats: the PR 3 threaded server (baseline
+  and kill switch) and the asyncio server (event-loop concurrency, SSE
+  sweep streaming); both enforce admission.
+
+Cross-cutting contract: coalescing, union grids, splitting, caching,
+and the choice of front end NEVER change an answer — a served ranking
+is bitwise-identical (on the analytical prediction paths) to a direct
+:class:`FleetPlanner` call.  The golden-trace and HTTP-parity test
+suites pin this.
+"""
+
+from repro.serve.admission import (AdmissionController, AdmissionError,
+                                   Ticket)
 from repro.serve.cache import CacheStats, LRUCache, SqliteCache, make_backend
 from repro.serve.engine import ServingEngine, Request
 from repro.serve.fleet import (FleetChoice, FleetPlanner, format_fleet,
                                format_sweep, rank_rows)
-from repro.serve.service import PredictionService
+from repro.serve.service import PredictionService, adaptive_window_ms
 
-__all__ = ["ServingEngine", "Request", "CacheStats", "FleetChoice",
-           "FleetPlanner", "LRUCache", "PredictionService", "SqliteCache",
-           "format_fleet", "format_sweep", "make_backend", "rank_rows"]
+__all__ = ["AdmissionController", "AdmissionError", "CacheStats",
+           "FleetChoice", "FleetPlanner", "LRUCache", "PredictionService",
+           "Request", "ServingEngine", "SqliteCache", "Ticket",
+           "adaptive_window_ms", "format_fleet", "format_sweep",
+           "make_backend", "rank_rows"]

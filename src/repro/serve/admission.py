@@ -1,0 +1,216 @@
+"""Admission control for the serving front door: priced backpressure.
+
+The coalescing service can *batch* arbitrary concurrency, but it cannot
+make an overloaded worker faster — under sustained overload the pending
+queue grows without bound and every request's latency diverges together.
+This module is the missing policy layer: **refuse or defer work the
+worker cannot afford**, so admitted requests keep a bounded latency and
+goodput stays near capacity instead of collapsing.
+
+The controller prices each request in *estimated engine seconds* using
+the same union/split cost model the service already fits from measured
+engine passes (``PredictionService._pass_model``): a request over T
+traces x D devices costs roughly ``pass_overhead + warm_discount * ops *
+D * cell_cost``.  Admission then enforces two budgets under one lock:
+
+* ``max_queue`` — a hard cap on admitted-but-unfinished requests.  Hit
+  it and the answer is **503** (the worker is saturated; retry elsewhere
+  or later).
+* ``max_inflight_s`` — a soft cap on the summed estimated cost of
+  admitted work.  Hit it and the answer is **429** with a
+  ``Retry-After`` hint sized to the excess (the backlog drains at
+  roughly one estimated-second per wall second).
+
+Priority lanes: interactive ``/rank`` traffic ("interactive") may spend
+the whole cost budget; bulk ``/sweep`` traffic ("bulk") is capped at
+``bulk_share`` of it, so a flood of batch sweeps sheds *first* and can
+never starve interactive ranking.  Within a lane admission is FIFO by
+arrival — there is no reordering, only refusal.
+
+Contracts:
+
+* **Thread-safety** — every counter mutation and read happens under the
+  controller's lock; ``stats()`` snapshots are never torn.  The
+  controller is shared by the asyncio front end (``serve/aserver.py``),
+  the threaded front end (``serve/http.py``), and any in-process caller
+  of ``PredictionService.rank_request``/``sweep_request``.
+* **Conservation** — every admitted :class:`Ticket` must be released
+  exactly once (``release`` is idempotent per ticket); the service's
+  wire-format entry points release in ``finally``, so an engine error
+  cannot leak in-flight budget.
+* **Kill switch** — ``enabled=False`` admits everything but keeps full
+  accounting, so ``/stats`` keeps its shape and operators can observe
+  what *would* have been shed before turning enforcement on.
+
+Knobs (see ``docs/knobs.md``): ``REPRO_ADMIT_MAX_QUEUE``,
+``REPRO_ADMIT_MAX_INFLIGHT_S``, ``REPRO_ADMIT_BULK_SHARE``, and the
+``enabled`` kwarg.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, Optional
+
+from repro.core.batched import env_float, env_int
+
+__all__ = ["AdmissionController", "AdmissionError", "Ticket", "LANES"]
+
+#: the two priority lanes: interactive rank queries vs bulk sweeps
+LANES = ("interactive", "bulk")
+
+
+class AdmissionError(RuntimeError):
+    """A request the controller refused to admit.
+
+    Transports translate this to an HTTP response: ``status`` is 429
+    (cost budget exhausted — back off briefly) or 503 (queue hard-full —
+    the worker is saturated), and ``retry_after_s`` becomes the
+    ``Retry-After`` header, sized to the estimated drain time of the
+    excess backlog."""
+
+    def __init__(self, status: int, retry_after_s: float, reason: str,
+                 lane: str):
+        super().__init__(f"{status}: {reason} (lane={lane}, "
+                         f"retry after {retry_after_s:.2f}s)")
+        self.status = int(status)
+        self.retry_after_s = float(retry_after_s)
+        self.reason = reason
+        self.lane = lane
+
+
+@dataclasses.dataclass
+class Ticket:
+    """One admitted request's budget reservation (release exactly once)."""
+    lane: str
+    cost_s: float
+    released: bool = False
+
+
+class AdmissionController:
+    """Cost-priced admission with priority lanes (see module docstring).
+
+    Parameters
+    ----------
+    enabled:
+        ``False`` admits everything but keeps counting — the kill switch
+        (and the observe-before-enforce mode).
+    max_queue:
+        Hard cap on admitted-but-unfinished requests; beyond it requests
+        are shed with 503.  Default ``REPRO_ADMIT_MAX_QUEUE`` (256).
+    max_inflight_s:
+        Soft cap on summed estimated cost (engine-seconds) of admitted
+        work; beyond it requests are shed with 429 + Retry-After.
+        Default ``REPRO_ADMIT_MAX_INFLIGHT_S`` (4.0).
+    bulk_share:
+        Fraction of ``max_inflight_s`` the bulk lane may occupy, clamped
+        to [0, 1].  Default ``REPRO_ADMIT_BULK_SHARE`` (0.5).
+    """
+
+    def __init__(self, enabled: bool = True,
+                 max_queue: Optional[int] = None,
+                 max_inflight_s: Optional[float] = None,
+                 bulk_share: Optional[float] = None):
+        self.enabled = bool(enabled)
+        self.max_queue = (env_int("REPRO_ADMIT_MAX_QUEUE", 256)
+                          if max_queue is None else int(max_queue))
+        self.max_inflight_s = (env_float("REPRO_ADMIT_MAX_INFLIGHT_S", 4.0)
+                               if max_inflight_s is None
+                               else float(max_inflight_s))
+        share = (env_float("REPRO_ADMIT_BULK_SHARE", 0.5)
+                 if bulk_share is None else float(bulk_share))
+        self.bulk_share = min(max(share, 0.0), 1.0)
+        self._lock = threading.Lock()
+        self._inflight_requests = 0
+        self._inflight_cost_s = 0.0
+        self._lane_cost_s = {lane: 0.0 for lane in LANES}
+        self._admitted = {lane: 0 for lane in LANES}
+        self._shed = {lane: 0 for lane in LANES}
+        self._shed_429 = 0
+        self._shed_503 = 0
+
+    # -- admission ----------------------------------------------------------
+    def admit(self, lane: str, cost_s: float) -> Ticket:
+        """Reserve budget for one request or raise :class:`AdmissionError`.
+
+        The decision and the reservation are one critical section, so two
+        racing requests can never both squeeze into the last slot.  The
+        returned ticket MUST be released (``release``) when the request
+        finishes — success or error."""
+        if lane not in LANES:
+            raise ValueError(f"unknown admission lane {lane!r} "
+                             f"(expected one of {LANES})")
+        cost_s = max(float(cost_s), 0.0)
+        with self._lock:
+            if self.enabled:
+                self._check_locked(lane, cost_s)
+            self._admitted[lane] += 1
+            self._inflight_requests += 1
+            self._inflight_cost_s += cost_s
+            self._lane_cost_s[lane] += cost_s
+        return Ticket(lane=lane, cost_s=cost_s)
+
+    def _check_locked(self, lane: str, cost_s: float) -> None:
+        """Shed decision (caller holds the lock; raises to refuse)."""
+        if self._inflight_requests >= self.max_queue:
+            self._shed[lane] += 1
+            self._shed_503 += 1
+            raise AdmissionError(
+                503, self._clamp_retry(self._inflight_cost_s),
+                f"admission queue full ({self._inflight_requests} in "
+                f"flight >= max_queue={self.max_queue})", lane)
+        projected = self._inflight_cost_s + cost_s
+        if lane == "bulk":
+            bulk_budget = self.bulk_share * self.max_inflight_s
+            bulk_projected = self._lane_cost_s["bulk"] + cost_s
+            if bulk_projected > bulk_budget:
+                self._shed[lane] += 1
+                self._shed_429 += 1
+                raise AdmissionError(
+                    429, self._clamp_retry(bulk_projected - bulk_budget),
+                    f"bulk lane over its cost share "
+                    f"({bulk_projected:.3f}s > {bulk_budget:.3f}s)", lane)
+        if projected > self.max_inflight_s:
+            self._shed[lane] += 1
+            self._shed_429 += 1
+            raise AdmissionError(
+                429, self._clamp_retry(projected - self.max_inflight_s),
+                f"in-flight cost budget exhausted "
+                f"({projected:.3f}s > {self.max_inflight_s:.3f}s)", lane)
+
+    @staticmethod
+    def _clamp_retry(excess_s: float) -> float:
+        """Retry-After hint: the excess backlog's drain time, clamped so
+        clients neither hammer (floor 50 ms) nor give up (cap 30 s)."""
+        return min(max(float(excess_s), 0.05), 30.0)
+
+    def release(self, ticket: Ticket) -> None:
+        """Return an admitted request's reservation (idempotent per
+        ticket, so a ``finally`` that races an error path is safe)."""
+        with self._lock:
+            if ticket.released:
+                return
+            ticket.released = True
+            self._inflight_requests = max(self._inflight_requests - 1, 0)
+            self._inflight_cost_s = max(
+                self._inflight_cost_s - ticket.cost_s, 0.0)
+            self._lane_cost_s[ticket.lane] = max(
+                self._lane_cost_s[ticket.lane] - ticket.cost_s, 0.0)
+
+    # -- accounting ---------------------------------------------------------
+    def stats(self) -> Dict:
+        """Snapshot of limits + counters (the ``/stats`` admission block)."""
+        with self._lock:
+            return {
+                "enabled": self.enabled,
+                "max_queue": self.max_queue,
+                "max_inflight_s": self.max_inflight_s,
+                "bulk_share": self.bulk_share,
+                "inflight_requests": self._inflight_requests,
+                "inflight_cost_s": round(self._inflight_cost_s, 6),
+                "admitted": dict(self._admitted),
+                "shed": dict(self._shed),
+                "shed_429": self._shed_429,
+                "shed_503": self._shed_503,
+            }

@@ -15,8 +15,17 @@ Endpoints (all JSON):
   ``{"label", "ranking": [FleetChoice dicts, best first]}``
 * ``POST /sweep`` — ``{"traces": [<trace doc>, ...], "dests"?: [...]}``
   -> ``{"labels", "times": [{device: ms}, ...]}``
-* ``GET /stats``  — request/coalescing/cache/engine-pass accounting
+* ``GET /stats``  — request/coalescing/cache/admission/engine-pass
+  accounting (field reference in ``docs/serving.md``)
 * ``GET /healthz`` — liveness probe
+
+Overload: both front ends run the same admission controller (see
+:mod:`repro.serve.admission`) — a shed request answers 429 (cost budget)
+or 503 (queue full) with a ``Retry-After`` header instead of queueing
+unboundedly.  The asyncio front end (:mod:`repro.serve.aserver`,
+``launch/serve.py --serve --async``) speaks the same wire formats and
+adds SSE sweep streaming; this threaded server remains the
+``--async``-off baseline and kill switch.
 
 Trace docs are ``TrackedTrace.to_dict()`` objects (or ``to_json()``
 strings); numbers round-trip through ``json`` via shortest-repr floats,
@@ -39,8 +48,9 @@ import json
 import threading
 import urllib.request
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
+from repro.serve.admission import AdmissionError
 from repro.serve.service import PredictionService
 
 __all__ = ["PredictionServer", "PredictionClient", "main"]
@@ -52,7 +62,8 @@ class _Handler(BaseHTTPRequestHandler):
     # the service lives on the server object (set by PredictionServer)
     protocol_version = "HTTP/1.1"
 
-    def _reply(self, code: int, payload: Dict) -> None:
+    def _reply(self, code: int, payload: Dict,
+               extra: Sequence[Tuple[str, str]] = ()) -> None:
         # allow_nan=False: every body must be strict RFC-8259 JSON (the
         # service spells non-finite numbers as strings on the wire); a
         # stray inf/nan raises here and surfaces as a 400/500, never as
@@ -61,6 +72,8 @@ class _Handler(BaseHTTPRequestHandler):
         self.send_response(code)
         self.send_header("Content-Type", "application/json")
         self.send_header("Content-Length", str(len(body)))
+        for key, value in extra:
+            self.send_header(key, value)
         self.end_headers()
         self.wfile.write(body)
 
@@ -97,6 +110,14 @@ class _Handler(BaseHTTPRequestHandler):
                 self._reply(200, service.rank_request(payload))
             else:
                 self._reply(200, service.sweep_request(payload))
+        except AdmissionError as e:
+            # shed, not failed: machine-actionable backoff hint (429
+            # cost budget / 503 queue full — see repro.serve.admission)
+            self._reply(e.status,
+                        {"error": e.reason, "lane": e.lane,
+                         "retry_after_s": round(e.retry_after_s, 3)},
+                        extra=[("Retry-After",
+                                str(max(1, int(e.retry_after_s + 0.999))))])
         except (KeyError, ValueError, TypeError) as e:
             # malformed request / unknown device: client error, not 500
             self._reply(400, {"error": f"{type(e).__name__}: {e}"})
@@ -202,6 +223,29 @@ class PredictionClient:
             payload["dests"] = list(dests)
         return self._post("/sweep", payload)["times"]
 
+    def sweep_stream(self, traces,
+                     dests: Optional[Sequence[str]] = None
+                     ) -> Iterator[Tuple[str, Dict]]:
+        """Stream a sweep over SSE (``POST /sweep/stream``).
+
+        Yields ``(event, payload)`` pairs as the server emits them:
+        ``("row", {"index", "label", "times"})`` per trace in
+        *completion* order, ``("error", {...})`` for traces that failed,
+        then ``("done", {"count", "errors"})``.  Only the asyncio front
+        end serves this route; against the threaded server it 404s."""
+        from repro.serve.aserver import iter_sse     # shared framing
+
+        payload = {"traces": [self._encode_trace(t) for t in traces]}
+        if dests is not None:
+            payload["dests"] = list(dests)
+        req = urllib.request.Request(
+            self.url + "/sweep/stream",
+            data=json.dumps(payload).encode(),
+            headers={"Content-Type": "application/json",
+                     "Accept": "text/event-stream"}, method="POST")
+        with urllib.request.urlopen(req, timeout=self.timeout) as resp:
+            yield from iter_sse(resp)
+
 
 def build_service(cache: Optional[str] = None, cache_size: int = 4096,
                   coalesce_ms: float = 5.0, flush_at: int = 64,
@@ -218,13 +262,23 @@ def build_service(cache: Optional[str] = None, cache_size: int = 4096,
 
 
 def log_engine_caches(service: PredictionService) -> None:
-    """One-line engine-cache summary, printed on worker shutdown.
+    """Admission + engine-cache summary, printed on worker shutdown.
 
     The stack cache and the cross-stack wave-factor cache are invisible
     in per-request latencies once warm — the shutdown line is where an
     operator sees whether they actually carried the traffic (a near-zero
     hit count on a busy worker means the bounds are too tight)."""
-    caches = service.stats().get("engine_caches", {})
+    stats = service.stats()
+    adm = stats.get("admission", {})
+    shed = adm.get("shed", {})
+    admitted = adm.get("admitted", {})
+    print("admission on shutdown: "
+          f"admitted={sum(admitted.values())} "
+          f"shed_429={adm.get('shed_429', 0)} "
+          f"shed_503={adm.get('shed_503', 0)} "
+          f"shed_bulk={shed.get('bulk', 0)} "
+          f"shed_interactive={shed.get('interactive', 0)}", flush=True)
+    caches = stats.get("engine_caches", {})
     parts = []
     for name, c in caches.items():
         if name == "stack_cache":       # a build is a full miss, an

@@ -49,6 +49,26 @@ Deduplication also makes cache accounting exact: K concurrent queries
 for the same trace cost exactly one miss per unique
 (trace, device, config, fleet) key.
 
+Adaptive coalescing (``adaptive_window``, default on): the window is no
+longer a fixed constant.  A full queue still closes the batch instantly
+(``flush_at``), and the effective window *stretches* toward
+``window_max_ms`` while recent batches run well under ``flush_at`` —
+light, trickling traffic gets grouped into fewer engine passes — then
+collapses back to ``coalesce_window_ms`` as batches fill (heavy traffic
+closes on the flush anyway, so a long tail would only tax stragglers).
+The rule is the pure function :func:`adaptive_window_ms`.
+
+Admission control (``admission``, default on): the wire-format entry
+points (``rank_request``/``sweep_request`` and the asyncio front end in
+:mod:`repro.serve.aserver`) price each request in estimated engine
+seconds via the SAME fitted cost model the union/split planner uses,
+and :class:`~repro.serve.admission.AdmissionController` refuses work
+the worker cannot afford — 429/503 with a Retry-After hint instead of
+unbounded queueing.  Interactive rank traffic outranks bulk sweeps (see
+:mod:`repro.serve.admission`).  In-process callers of
+``rank()``/``sweep()``/``submit_*`` bypass admission by design: it is a
+front-door policy, not an engine limit.
+
 Wire format: ``rank_request``/``sweep_request`` accept JSON payloads
 whose traces are ``TrackedTrace.to_json``/``to_dict`` documents, so any
 transport that can move JSON can front this service.
@@ -60,19 +80,47 @@ import dataclasses
 import json
 import threading
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, \
+    Union
 
 from repro.core.batched import env_float
 from repro.core.trace import TrackedTrace
+from repro.serve.admission import AdmissionController, Ticket
 from repro.serve.cache import BackendLike
 from repro.serve.fleet import FleetChoice, FleetPlanner, rank_rows
 
-__all__ = ["PredictionService"]
+__all__ = ["PredictionService", "adaptive_window_ms"]
+
+
+def adaptive_window_ms(base_ms: float, max_ms: float, batch_ewma: float,
+                       flush_at: int) -> float:
+    """Effective coalescing window under the adaptive policy (pure).
+
+    ``batch_ewma`` is an exponential moving average of recent batch
+    sizes — the load signal.  Solo traffic (ewma ~ 1) stretches the
+    window all the way to ``max_ms`` to collect company; as batches
+    approach ``flush_at`` the window collapses linearly back to
+    ``base_ms`` (full batches close early on the flush regardless, so a
+    stretched window would only delay the requests that *just* miss a
+    batch).  ``max_ms`` below ``base_ms`` degenerates to the static
+    window — stretching never *shrinks* the configured base, so burst
+    benchmarks tuned to a wide static window keep their semantics."""
+    hi = max(float(max_ms), float(base_ms))
+    span = max(float(flush_at) - 1.0, 1.0)
+    fill = min(max((float(batch_ewma) - 1.0) / span, 0.0), 1.0)
+    return float(base_ms) + (hi - float(base_ms)) * (1.0 - fill)
 
 
 @dataclasses.dataclass
 class PendingQuery:
-    """A submitted query: wait on :meth:`get` (the async-submit handle)."""
+    """A submitted query: wait on :meth:`get` (the async-submit handle).
+
+    ``on_done`` is an optional completion hook for event-loop callers
+    (the asyncio front end): it fires on the LEADER thread right after
+    ``done`` is set, so it must only schedule work (e.g.
+    ``loop.call_soon_threadsafe``), never do it.  A callback attached
+    after completion is the caller's race to handle — check
+    ``done.is_set()`` after assigning (see ``aserver._await_handle``)."""
     kind: str                                   # "rank" | "sweep"
     traces: List[TrackedTrace]
     dests: Optional[Tuple[str, ...]]
@@ -82,6 +130,7 @@ class PendingQuery:
         default_factory=threading.Event)
     result: Any = None
     error: Optional[BaseException] = None
+    on_done: Optional[Callable[["PendingQuery"], None]] = None
 
     def get(self, timeout: Optional[float] = None):
         """Block until the batch containing this query executed."""
@@ -90,6 +139,19 @@ class PendingQuery:
         if self.error is not None:
             raise self.error
         return self.result
+
+    def finish(self) -> None:
+        """Mark complete and wake waiters (threads AND event loops).
+
+        A broken ``on_done`` hook must not kill the leader thread —
+        every other waiter in the batch is still counting on it."""
+        self.done.set()
+        cb = self.on_done
+        if cb is not None:
+            try:
+                cb(self)
+            except BaseException:
+                pass
 
 
 class PredictionService:
@@ -112,6 +174,25 @@ class PredictionService:
         Queue length that fires the batch early — lets barrier-style
         bursts (benchmarks, load tests) execute the instant the burst is
         fully queued instead of waiting out the window.
+    adaptive_window:
+        Stretch the coalescing window toward ``window_max_ms`` while
+        recent batches run under ``flush_at`` and collapse it back to
+        ``coalesce_window_ms`` as they fill (see
+        :func:`adaptive_window_ms`).  ``False`` restores the fixed
+        window (kill switch).
+    window_max_ms:
+        Upper bound of the adaptive stretch; defaults to
+        ``REPRO_WINDOW_MAX_MS`` (25.0).  Values below
+        ``coalesce_window_ms`` leave the window static.
+    admission:
+        Front-door admission control (see
+        :mod:`repro.serve.admission`).  ``True`` builds an env-seeded
+        :class:`AdmissionController`; ``False`` builds one with
+        enforcement off (kill switch — counters stay live so ``/stats``
+        keeps its shape); a ready controller instance passes through.
+        Enforced only on the wire-format entry points
+        (``rank_request``/``sweep_request``) and the front ends built on
+        them — never on in-process ``rank()``/``sweep()`` calls.
     union_grid:
         Stack heterogeneous destination fleets into one union device
         axis and slice per-request columns out (the default).  ``False``
@@ -137,7 +218,10 @@ class PredictionService:
                  predictor=None, fleet: Optional[Sequence[str]] = None,
                  cache: BackendLike = None, cache_size: int = 4096,
                  coalesce_window_ms: float = 5.0, flush_at: int = 64,
-                 union_grid: bool = True, split_planner: bool = True):
+                 union_grid: bool = True, split_planner: bool = True,
+                 adaptive_window: bool = True,
+                 window_max_ms: Optional[float] = None,
+                 admission: Union[bool, AdmissionController] = True):
         if planner is None:
             planner = FleetPlanner(predictor=predictor, fleet=fleet,
                                    cache_size=cache_size, cache=cache)
@@ -146,6 +230,16 @@ class PredictionService:
         self.flush_at = max(int(flush_at), 1)
         self.union_grid = bool(union_grid)
         self.split_planner = bool(split_planner)
+        self.adaptive_window = bool(adaptive_window)
+        self.window_max_ms = (env_float("REPRO_WINDOW_MAX_MS", 25.0)
+                              if window_max_ms is None
+                              else float(window_max_ms))
+        if isinstance(admission, AdmissionController):
+            self.admission = admission
+        else:
+            self.admission = AdmissionController(enabled=bool(admission))
+        #: EWMA of recent batch sizes — the adaptive window's load signal
+        self._batch_ewma = 1.0
         #: seed constants of the union/split cost model; measured engine
         #: passes refine them online (see ``_pass_model``)
         self.split_pass_overhead_s = env_float(
@@ -221,20 +315,55 @@ class PredictionService:
             return TrackedTrace.from_json(doc)
         return TrackedTrace.from_dict(doc)
 
+    def decode_rank(self, payload: Union[str, Dict]
+                    ) -> Tuple[TrackedTrace, int, str, Optional[List]]:
+        """Decode a wire rank payload -> (trace, batch_size, by, dests).
+
+        Shared by the threaded and asyncio front ends so both validate
+        (and 400) identically; malformed payloads raise
+        KeyError/ValueError/TypeError *here*, before admission or
+        queueing."""
+        p = json.loads(payload) if isinstance(payload, str) else payload
+        return (self._trace_from_wire(p["trace"]), int(p["batch_size"]),
+                p.get("by", "throughput"), p.get("dests"))
+
+    def decode_sweep(self, payload: Union[str, Dict]
+                     ) -> Tuple[List[TrackedTrace], Optional[List]]:
+        """Decode a wire sweep payload -> (traces, dests)."""
+        p = json.loads(payload) if isinstance(payload, str) else payload
+        return ([self._trace_from_wire(t) for t in p["traces"]],
+                p.get("dests"))
+
+    @classmethod
+    def encode_rank(cls, trace: TrackedTrace, choices: List[FleetChoice]
+                    ) -> Dict:
+        """Rank answer as its wire document (``{"label", "ranking"}``)."""
+        return {"label": trace.label,
+                "ranking": [cls._wire_choice(c) for c in choices]}
+
+    @staticmethod
+    def encode_sweep(traces: Sequence[TrackedTrace],
+                     rows: List[Dict[str, float]]) -> Dict:
+        """Sweep answer as its wire document (``{"labels", "times"}``)."""
+        return {"labels": [t.label for t in traces], "times": rows}
+
     def rank_request(self, payload: Union[str, Dict]) -> Dict:
-        """Serve one wire-format rank query.
+        """Serve one wire-format rank query (admission applies).
 
         Payload: ``{"trace": <to_dict() doc or to_json() str>,
         "batch_size": int, "by"?: "throughput"|"cost",
         "dests"?: [device, ...]}``.  Returns ``{"label", "ranking"}``
-        where ranking rows are ``FleetChoice`` dicts, best first."""
-        p = json.loads(payload) if isinstance(payload, str) else payload
-        trace = self._trace_from_wire(p["trace"])
-        choices = self.rank(trace, int(p["batch_size"]),
-                            by=p.get("by", "throughput"),
-                            dests=p.get("dests"))
-        return {"label": trace.label,
-                "ranking": [self._wire_choice(c) for c in choices]}
+        where ranking rows are ``FleetChoice`` dicts, best first.
+        Raises :class:`~repro.serve.admission.AdmissionError` when the
+        admission controller sheds the request (transports map it to
+        429/503 + Retry-After)."""
+        trace, batch_size, by, dests = self.decode_rank(payload)
+        ticket = self.admit_request("rank", [trace], dests)
+        try:
+            choices = self.rank(trace, batch_size, by=by, dests=dests)
+        finally:
+            self.admission.release(ticket)
+        return self.encode_rank(trace, choices)
 
     @staticmethod
     def _wire_choice(choice: FleetChoice) -> Dict:
@@ -251,15 +380,55 @@ class PredictionService:
         return d
 
     def sweep_request(self, payload: Union[str, Dict]) -> Dict:
-        """Serve one wire-format sweep query.
+        """Serve one wire-format sweep query (bulk-lane admission).
 
         Payload: ``{"traces": [<trace doc>, ...], "dests"?: [...]}``.
         Returns ``{"labels": [...], "times": [{device: ms}, ...]}`` in
-        input trace order."""
-        p = json.loads(payload) if isinstance(payload, str) else payload
-        traces = [self._trace_from_wire(t) for t in p["traces"]]
-        rows = self.sweep(traces, dests=p.get("dests"))
-        return {"labels": [t.label for t in traces], "times": rows}
+        input trace order.  Raises
+        :class:`~repro.serve.admission.AdmissionError` when shed."""
+        traces, dests = self.decode_sweep(payload)
+        ticket = self.admit_request("sweep", traces, dests)
+        try:
+            rows = self.sweep(traces, dests=dests)
+        finally:
+            self.admission.release(ticket)
+        return self.encode_sweep(traces, rows)
+
+    # -- admission ----------------------------------------------------------
+    def estimate_cost_s(self, traces: Sequence[TrackedTrace],
+                        dests: Optional[Sequence[str]] = None) -> float:
+        """Estimated engine cost (seconds) of one request.
+
+        The SAME fitted model the union/split planner prices passes
+        with: per-pass overhead + (op-cells x per-cell cost), discounted
+        by the measured cold fraction so warm repeat traffic is priced
+        near the pass overhead alone.  Conservative by construction —
+        it charges a full pass overhead even though a coalesced request
+        usually shares one — because admission must bound the worst
+        case, not the average."""
+        c_pass, c_cell = self._pass_model()
+        n_dests = (len(dests) if dests is not None
+                   else len(self.planner.fleet))
+        ops = 0
+        for t in traces:
+            try:
+                ops += t.to_arrays().n_ops
+            except Exception:   # a malformed trace still costs *something*;
+                ops += len(getattr(t, "ops", ()))  # let validation 400 it
+        return c_pass + self._warm_discount() * ops * n_dests * c_cell
+
+    def admit_request(self, kind: str,
+                      traces: Sequence[TrackedTrace],
+                      dests: Optional[Sequence[str]] = None) -> Ticket:
+        """Price one front-door request and reserve admission budget.
+
+        ``kind`` maps to the priority lane: "rank" -> interactive,
+        anything else -> bulk.  Returns the ticket to release when the
+        request finishes; raises
+        :class:`~repro.serve.admission.AdmissionError` when shed."""
+        lane = "interactive" if kind == "rank" else "bulk"
+        return self.admission.admit(lane,
+                                    self.estimate_cost_s(traces, dests))
 
     def stats(self) -> Dict:
         """Service + cache accounting (the ``/stats`` payload).
@@ -282,11 +451,16 @@ class PredictionService:
                 "split_batches": self._split_batches,
                 "split_passes": self._split_passes,
                 "window_ms": self.coalesce_window_ms,
+                "window_max_ms": self.window_max_ms,
+                "adaptive_window": self.adaptive_window,
+                "batch_ewma": round(self._batch_ewma, 3),
                 "flush_at": self.flush_at,
                 "union_grid": self.union_grid,
                 "split_planner": self.split_planner,
             }
             n_samples = len(self._pass_samples)
+        coalescing["effective_window_ms"] = round(
+            self.effective_window_ms(), 3)
         c_pass, c_cell = self._pass_model()
         cache = self.planner.stats.as_dict()
         cache["backend"] = self.planner.cache.describe()
@@ -297,6 +471,7 @@ class PredictionService:
                                 "cell_cost_ns": c_cell * 1e9,
                                 "warm_discount": self._warm_discount(),
                                 "samples": n_samples},
+                "admission": self.admission.stats(),
                 "cache": cache,
                 "engine_caches": self.planner.engine_cache_stats(),
                 "fleet": self.planner.fleet}
@@ -329,7 +504,7 @@ class PredictionService:
         ``_leader_active`` flips off under the same lock that snapshots
         the queue, so a request arriving mid-execution starts the NEXT
         batch (with itself as leader) instead of being dropped."""
-        deadline = time.monotonic() + self.coalesce_window_ms / 1e3
+        deadline = time.monotonic() + self.effective_window_ms() / 1e3
         with self._cond:
             while len(self._pending) < self.flush_at:
                 remaining = deadline - time.monotonic()
@@ -342,7 +517,20 @@ class PredictionService:
             self._max_batch = max(self._max_batch, len(batch))
             if len(batch) > 1:
                 self._coalesced_requests += len(batch)
+            # the adaptive window's load signal: EWMA over batch sizes
+            # (alpha 0.3 — a handful of batches to adapt, so one odd
+            # batch cannot whip the window around)
+            self._batch_ewma += 0.3 * (len(batch) - self._batch_ewma)
         self._execute(batch)
+
+    def effective_window_ms(self) -> float:
+        """The window the NEXT leader will wait (adaptive or static)."""
+        if not self.adaptive_window:
+            return self.coalesce_window_ms
+        with self._cond:
+            ewma = self._batch_ewma
+        return adaptive_window_ms(self.coalesce_window_ms,
+                                  self.window_max_ms, ewma, self.flush_at)
 
     def _execute(self, batch: List[PendingQuery]) -> None:
         """Union-grid engine pass(es) for the whole batch.
@@ -400,7 +588,7 @@ class PredictionService:
                 resolved.append((req, dlist))
             except BaseException as e:
                 req.error = e
-                req.done.set()
+                req.finish()
         return resolved
 
     # -- union/split cost model ---------------------------------------------
@@ -585,7 +773,7 @@ class PredictionService:
             self._execute_singly(resolved)
         finally:
             for req, _ in resolved:
-                req.done.set()
+                req.finish()
 
     def _execute_singly(self,
                         resolved: List[Tuple[PendingQuery, List[str]]]
@@ -637,4 +825,4 @@ class PredictionService:
                     req.error = e
             finally:
                 for req in reqs:
-                    req.done.set()
+                    req.finish()

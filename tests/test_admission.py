@@ -1,0 +1,244 @@
+"""Admission controller + adaptive coalescing window.
+
+Unit-tests the pure pieces (controller accounting, the window rule) and
+the service integration: cost pricing from the fitted pass model, lane
+mapping, ticket conservation through the wire entry points, and the
+threaded HTTP front end's 429/503 + Retry-After translation.
+"""
+
+import threading
+import urllib.error
+import urllib.request
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import HabitatPredictor, OperationTracker
+from repro.serve.admission import (AdmissionController, AdmissionError,
+                                   LANES)
+from repro.serve.http import PredictionClient, PredictionServer
+from repro.serve.service import PredictionService, adaptive_window_ms
+
+
+def _trace(n=12, label="adm"):
+    return OperationTracker("T4").track(
+        lambda w, x: jnp.sum(jnp.tanh(x @ w)),
+        jnp.zeros((n, 24)), jnp.zeros((8, n)), label=label)
+
+
+# -- AdmissionController units ----------------------------------------------
+def test_admit_release_conserves_budget():
+    ctl = AdmissionController(max_queue=10, max_inflight_s=1.0)
+    t1 = ctl.admit("interactive", 0.3)
+    t2 = ctl.admit("bulk", 0.2)
+    s = ctl.stats()
+    assert s["inflight_requests"] == 2
+    assert s["inflight_cost_s"] == pytest.approx(0.5)
+    ctl.release(t1)
+    ctl.release(t1)     # idempotent per ticket
+    ctl.release(t2)
+    s = ctl.stats()
+    assert s["inflight_requests"] == 0
+    assert s["inflight_cost_s"] == 0.0
+    assert s["admitted"] == {"interactive": 1, "bulk": 1}
+    assert s["shed"] == {"interactive": 0, "bulk": 0}
+
+
+def test_queue_full_sheds_503():
+    ctl = AdmissionController(max_queue=1, max_inflight_s=100.0)
+    ctl.admit("interactive", 0.0)
+    with pytest.raises(AdmissionError) as ei:
+        ctl.admit("interactive", 0.0)
+    assert ei.value.status == 503
+    assert 0.05 <= ei.value.retry_after_s <= 30.0
+    assert ctl.stats()["shed_503"] == 1
+
+
+def test_cost_budget_sheds_429_with_clamped_retry():
+    ctl = AdmissionController(max_queue=100, max_inflight_s=1.0)
+    ctl.admit("interactive", 0.9)
+    with pytest.raises(AdmissionError) as ei:
+        ctl.admit("interactive", 0.5)       # 1.4 > 1.0
+    assert ei.value.status == 429
+    assert ei.value.retry_after_s == pytest.approx(0.4)
+    with pytest.raises(AdmissionError) as ei:
+        ctl.admit("interactive", 1000.0)    # huge excess clamps to 30 s
+    assert ei.value.retry_after_s == 30.0
+
+
+def test_bulk_lane_sheds_before_interactive():
+    """Bulk is capped at bulk_share of the budget; interactive may spend
+    the remainder — a sweep flood cannot starve ranking traffic."""
+    ctl = AdmissionController(max_queue=100, max_inflight_s=1.0,
+                              bulk_share=0.5)
+    ctl.admit("bulk", 0.45)
+    with pytest.raises(AdmissionError) as ei:
+        ctl.admit("bulk", 0.2)              # bulk 0.65 > 0.5 share
+    assert ei.value.status == 429
+    assert ei.value.lane == "bulk"
+    ctl.admit("interactive", 0.5)           # total 0.95 <= 1.0: fine
+    s = ctl.stats()
+    assert s["admitted"] == {"interactive": 1, "bulk": 1}
+    assert s["shed"] == {"interactive": 0, "bulk": 1}
+
+
+def test_kill_switch_admits_everything_but_counts():
+    ctl = AdmissionController(enabled=False, max_queue=0,
+                              max_inflight_s=0.0)
+    for _ in range(5):
+        ctl.admit("bulk", 99.0)
+    s = ctl.stats()
+    assert s["enabled"] is False
+    assert s["admitted"]["bulk"] == 5
+    assert s["shed_429"] == s["shed_503"] == 0
+    assert s["inflight_cost_s"] == pytest.approx(5 * 99.0)
+
+
+def test_unknown_lane_rejected():
+    ctl = AdmissionController()
+    with pytest.raises(ValueError):
+        ctl.admit("batch", 0.1)
+    assert set(LANES) == {"interactive", "bulk"}
+
+
+def test_admit_is_atomic_under_contention():
+    """Two racing admits can never both squeeze into the last slot."""
+    ctl = AdmissionController(max_queue=100, max_inflight_s=1.0)
+    admitted, shed = [], []
+    barrier = threading.Barrier(8)
+
+    def worker():
+        barrier.wait()
+        try:
+            admitted.append(ctl.admit("interactive", 0.3))
+        except AdmissionError:
+            shed.append(1)
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(admitted) == 3               # floor(1.0 / 0.3)
+    assert len(shed) == 5
+    assert ctl.stats()["inflight_cost_s"] <= 1.0
+
+
+# -- adaptive_window_ms (pure rule) -----------------------------------------
+def test_adaptive_window_stretches_when_idle_collapses_when_full():
+    base, hi, flush = 5.0, 25.0, 64
+    assert adaptive_window_ms(base, hi, 1.0, flush) == pytest.approx(hi)
+    assert adaptive_window_ms(base, hi, flush, flush) == pytest.approx(base)
+    mid = adaptive_window_ms(base, hi, flush / 2, flush)
+    assert base < mid < hi
+    # monotonic: more load, shorter window
+    prev = hi + 1
+    for ewma in (1, 4, 16, 32, 64, 128):
+        w = adaptive_window_ms(base, hi, ewma, flush)
+        assert w <= prev
+        prev = w
+
+
+def test_adaptive_window_never_shrinks_below_base():
+    # max below base degenerates to the static window (burst benches
+    # tuned to a wide base keep their semantics)
+    assert adaptive_window_ms(100.0, 25.0, 1.0, 64) == 100.0
+    assert adaptive_window_ms(100.0, 25.0, 64.0, 64) == 100.0
+    # and out-of-range ewma clamps rather than extrapolating
+    assert adaptive_window_ms(5.0, 25.0, 0.0, 64) == 25.0
+    assert adaptive_window_ms(5.0, 25.0, 1e9, 64) == 5.0
+
+
+def test_service_effective_window_tracks_load():
+    svc = PredictionService(predictor=HabitatPredictor(),
+                            coalesce_window_ms=1.0, window_max_ms=20.0,
+                            flush_at=4)
+    assert svc.effective_window_ms() == pytest.approx(20.0)  # idle: max
+    tr = _trace()
+    for _ in range(8):      # solo batches keep ewma ~1: stays stretched
+        svc.rank(tr, 8)
+    stretched = svc.effective_window_ms()
+    svc._batch_ewma = 4.0   # simulate full batches
+    assert svc.effective_window_ms() == pytest.approx(1.0)
+    assert stretched > 10.0
+    off = PredictionService(predictor=HabitatPredictor(),
+                            coalesce_window_ms=1.0, adaptive_window=False,
+                            window_max_ms=20.0)
+    assert off.effective_window_ms() == 1.0     # kill switch: static
+
+
+# -- service integration -----------------------------------------------------
+def test_estimate_cost_monotonic_and_positive():
+    svc = PredictionService(predictor=HabitatPredictor())
+    small, big = _trace(8, "small"), _trace(8, "big")
+    one = svc.estimate_cost_s([small], ["T4"])
+    all_devs = svc.estimate_cost_s([small], None)
+    two_traces = svc.estimate_cost_s([small, big], ["T4"])
+    assert one > 0
+    assert all_devs > one           # more devices, more cells
+    assert two_traces > one         # more traces, more cells
+
+
+def test_wire_entry_points_enforce_admission_and_release():
+    svc = PredictionService(
+        predictor=HabitatPredictor(), coalesce_window_ms=0.0,
+        admission=AdmissionController(max_queue=64, max_inflight_s=50.0))
+    tr = _trace()
+    out = svc.rank_request({"trace": tr.to_dict(), "batch_size": 8})
+    assert out["label"] == tr.label
+    s = svc.admission.stats()
+    assert s["admitted"]["interactive"] == 1
+    assert s["inflight_requests"] == 0          # released on success
+    out = svc.sweep_request({"traces": [tr.to_dict()], "dests": ["T4"]})
+    assert out["times"][0]["T4"] > 0
+    assert svc.admission.stats()["admitted"]["bulk"] == 1
+
+    svc.admission.max_inflight_s = 1e-12        # now everything sheds
+    with pytest.raises(AdmissionError):
+        svc.rank_request({"trace": tr.to_dict(), "batch_size": 8})
+    s = svc.admission.stats()
+    assert s["shed"]["interactive"] == 1
+    assert s["inflight_requests"] == 0          # shed reserves nothing
+
+
+def test_ticket_released_when_engine_errors():
+    svc = PredictionService(predictor=HabitatPredictor(),
+                            coalesce_window_ms=0.0)
+    tr = _trace()
+    with pytest.raises(Exception):
+        svc.rank_request({"trace": tr.to_dict(), "batch_size": 8,
+                          "dests": ["no-such-device"]})
+    assert svc.admission.stats()["inflight_requests"] == 0
+
+
+def test_inprocess_calls_bypass_admission():
+    """rank()/sweep()/submit_* are engine API, not the front door."""
+    svc = PredictionService(
+        predictor=HabitatPredictor(), coalesce_window_ms=0.0,
+        admission=AdmissionController(max_queue=0, max_inflight_s=0.0))
+    tr = _trace()
+    assert svc.rank(tr, 8)                      # would 503 at the door
+    assert svc.sweep([tr], dests=["T4"])
+    assert svc.admission.stats()["admitted"] == {"interactive": 0,
+                                                 "bulk": 0}
+
+
+# -- threaded front end translates sheds ------------------------------------
+def test_threaded_server_sheds_with_retry_after():
+    svc = PredictionService(
+        predictor=HabitatPredictor(), coalesce_window_ms=0.0,
+        admission=AdmissionController(max_queue=64, max_inflight_s=1e-12))
+    server = PredictionServer(svc).start()
+    try:
+        client = PredictionClient(server.url)
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            client.rank(_trace(), batch_size=8)
+        assert ei.value.code == 429
+        assert int(ei.value.headers["Retry-After"]) >= 1
+        body = ei.value.read()
+        assert b"retry_after_s" in body and b"lane" in body
+        # stats still served, with the shed visible
+        stats = client.stats()
+        assert stats["admission"]["shed_429"] == 1
+    finally:
+        server.shutdown()

@@ -1,0 +1,176 @@
+"""Asyncio front door: parity with the threaded server + SSE + shedding.
+
+Runs the ``AsyncPredictionServer`` in-process (event loop on a daemon
+thread) and exercises it with the same ``PredictionClient`` the
+threaded server uses — the wire formats are shared, so answers must be
+byte-identical to the in-process planner.
+"""
+
+import json
+import threading
+import urllib.error
+import urllib.request
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import HabitatPredictor, OperationTracker, devices
+from repro.serve.admission import AdmissionController
+from repro.serve.aserver import AsyncPredictionServer, iter_sse
+from repro.serve.fleet import FleetPlanner
+from repro.serve.http import PredictionClient
+from repro.serve.service import PredictionService
+
+DEVS = sorted(devices.all_devices())
+
+
+def _trace(n, label):
+    return OperationTracker("T4").track(
+        lambda w, x: jnp.sum(jnp.tanh(x @ w)),
+        jnp.zeros((n, 24)), jnp.zeros((8, n)), label=label)
+
+
+@pytest.fixture(scope="module")
+def server():
+    service = PredictionService(predictor=HabitatPredictor(),
+                                coalesce_window_ms=5.0)
+    srv = AsyncPredictionServer(service).start()
+    yield srv
+    srv.shutdown()
+
+
+@pytest.fixture(scope="module")
+def client(server):
+    return PredictionClient(server.url)
+
+
+def test_healthz_and_stats(client):
+    assert client.healthz() == {"ok": True}
+    stats = client.stats()
+    assert stats["fleet"] == DEVS
+    assert {"requests", "coalescing", "cache", "engine_passes",
+            "admission"} <= set(stats)
+    assert set(stats["admission"]["admitted"]) == {"interactive", "bulk"}
+
+
+def test_rank_parity_with_local_planner(client):
+    """An async-served answer is bitwise-identical to the in-process
+    planner answer — same guarantee the threaded server is pinned to."""
+    tr = _trace(16, "aserver-parity")
+    remote = client.rank(tr, batch_size=32)
+    local = FleetPlanner(predictor=HabitatPredictor()).rank(tr, 32)
+    assert [r["device"] for r in remote] == [c.device for c in local]
+    assert [r["iter_ms"] for r in remote] == [c.iter_ms for c in local]
+
+
+def test_sweep_roundtrip(client):
+    traces = [_trace(12, "asw-a"), _trace(20, "asw-b")]
+    rows = client.sweep(traces, dests=["T4", "V100"])
+    local = FleetPlanner(predictor=HabitatPredictor()).sweep(
+        traces, dests=["T4", "V100"])
+    assert rows == local
+
+
+def test_sweep_stream_sse(client):
+    """SSE: one row event per trace (any completion order), one done."""
+    traces = [_trace(10 + 4 * i, f"sse-{i}") for i in range(4)]
+    events = list(client.sweep_stream(traces, dests=["T4", "P100"]))
+    rows = [p for e, p in events if e == "row"]
+    assert [e for e, _ in events].count("done") == 1
+    assert events[-1][0] == "done"
+    assert events[-1][1] == {"count": 4, "errors": 0}
+    assert sorted(r["index"] for r in rows) == [0, 1, 2, 3]
+    local = FleetPlanner(predictor=HabitatPredictor()).sweep(
+        traces, dests=["T4", "P100"])
+    for r in rows:
+        assert r["label"] == traces[r["index"]].label
+        assert r["times"] == local[r["index"]]
+
+
+def test_concurrent_requests_coalesce(server, client):
+    before = client.stats()
+    tr = _trace(28, "aserver-burst")
+    n_clients = 6
+    barrier = threading.Barrier(n_clients)
+    results, errors = [None] * n_clients, []
+
+    def fire(i):
+        barrier.wait()
+        try:
+            results[i] = client.rank(tr, batch_size=16)
+        except BaseException as e:
+            errors.append(e)
+
+    threads = [threading.Thread(target=fire, args=(i,))
+               for i in range(n_clients)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    assert all(r == results[0] for r in results)
+    after = client.stats()
+    assert (after["requests"]["rank"] - before["requests"]["rank"]
+            == n_clients)
+    assert (after["coalescing"]["batches"]
+            - before["coalescing"]["batches"]) < n_clients
+
+
+def test_bad_requests_are_client_errors(server):
+    req = urllib.request.Request(
+        server.url + "/rank", data=b'{"nope": 1}',
+        headers={"Content-Type": "application/json"}, method="POST")
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        urllib.request.urlopen(req, timeout=30)
+    assert ei.value.code == 400
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        urllib.request.urlopen(server.url + "/no-such", timeout=30)
+    assert ei.value.code == 404
+
+
+def test_sheds_429_with_retry_after():
+    service = PredictionService(
+        predictor=HabitatPredictor(), coalesce_window_ms=0.0,
+        admission=AdmissionController(max_queue=64, max_inflight_s=1e-12))
+    srv = AsyncPredictionServer(service).start()
+    try:
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            PredictionClient(srv.url).rank(_trace(8, "shed"), batch_size=8)
+        assert ei.value.code == 429
+        assert int(ei.value.headers["Retry-After"]) >= 1
+        body = json.loads(ei.value.read())
+        assert body["lane"] == "interactive"
+        assert body["retry_after_s"] > 0
+    finally:
+        srv.shutdown()
+
+
+def test_sheds_503_when_queue_full():
+    service = PredictionService(
+        predictor=HabitatPredictor(), coalesce_window_ms=0.0,
+        admission=AdmissionController(max_queue=0, max_inflight_s=10.0))
+    srv = AsyncPredictionServer(service).start()
+    try:
+        client = PredictionClient(srv.url)
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            client.sweep([_trace(8, "full")], dests=["T4"])
+        assert ei.value.code == 503
+        assert "Retry-After" in ei.value.headers
+        assert client.stats()["admission"]["shed_503"] == 1
+    finally:
+        srv.shutdown()
+
+
+def test_iter_sse_framing():
+    """Client and server share this parser; pin the framing rules."""
+    stream = (b"event: row\n", b"data: {\"index\": 0}\n", b"\n",
+              b"data: {\"x\": 1}\n", b"\n",
+              b"event: done\n", b"data: {\"count\": 1}\n", b"\n")
+    assert list(iter_sse(stream)) == [
+        ("row", {"index": 0}),
+        ("message", {"x": 1}),          # default event type
+        ("done", {"count": 1}),
+    ]
+    # stream truncated without the trailing blank line still yields
+    assert list(iter_sse((b"event: row\n", b"data: {}\n"))) == \
+        [("row", {})]

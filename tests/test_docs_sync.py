@@ -1,0 +1,151 @@
+"""Docs cannot rot: the reference pages are checked against the source.
+
+Three sync contracts:
+
+* ``docs/knobs.md`` names every ``REPRO_*`` env var that appears
+  anywhere in ``src/`` and every kill-switch kwarg (bool-defaulted
+  parameter) on the public serving/engine surfaces.
+* ``docs/serving.md``'s ``/stats`` field reference only documents paths
+  that a live service actually serves (the payload is a superset of the
+  doc — new fields may land before their docs, but a documented field
+  can never silently disappear).
+* Every fenced ``python`` block in ``docs/`` executes green against the
+  package (the CI docs job runs exactly this test file).
+"""
+
+import inspect
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+SRC = ROOT / "src"
+DOCS = ROOT / "docs"
+
+
+def _doc(name: str) -> str:
+    path = DOCS / name
+    assert path.is_file(), f"missing documentation page {path}"
+    return path.read_text()
+
+
+# -- every REPRO_* env var is in knobs.md -----------------------------------
+def test_knobs_cover_every_repro_env_var():
+    used = set()
+    for py in SRC.rglob("*.py"):
+        used.update(re.findall(r"REPRO_[A-Z_]+", py.read_text()))
+    assert used, "no REPRO_* env vars found under src/ — grep broken?"
+    documented = set(re.findall(r"REPRO_[A-Z_]+", _doc("knobs.md")))
+    missing = used - documented
+    assert not missing, (
+        f"env vars used in src/ but missing from docs/knobs.md: "
+        f"{sorted(missing)}")
+
+
+# -- every kill-switch kwarg is in knobs.md ---------------------------------
+def _kill_switch_kwargs():
+    """Bool-defaulted params of the public serving/engine surfaces.
+
+    The curated list IS the public kill-switch surface; a new
+    bool-defaulted kwarg on any of these signatures must be documented
+    (or deliberately added here) before it ships."""
+    from repro.core import batched
+    from repro.core.predictor import HabitatPredictor
+    from repro.serve.admission import AdmissionController
+    from repro.serve.fleet import FleetPlanner
+    from repro.serve.service import PredictionService
+
+    surfaces = [FleetPlanner.__init__, PredictionService.__init__,
+                HabitatPredictor.__init__, AdmissionController.__init__,
+                batched.predict_sweep, batched.predict_trace_batch]
+    names = set()
+    for fn in surfaces:
+        for p in inspect.signature(fn).parameters.values():
+            if isinstance(p.default, bool):
+                names.add(p.name)
+    return names
+
+
+def test_knobs_cover_every_kill_switch_kwarg():
+    kwargs = _kill_switch_kwargs()
+    assert kwargs, "no kill-switch kwargs discovered — inspection broken?"
+    doc = _doc("knobs.md")
+    documented = set(re.findall(r"`([a-z_]+)`", doc))
+    missing = kwargs - documented
+    assert not missing, (
+        f"kill-switch kwargs missing from docs/knobs.md: "
+        f"{sorted(missing)} (documented: {sorted(documented & kwargs)})")
+
+
+# -- /stats is a superset of the documented field reference -----------------
+def _flatten(d, prefix=""):
+    out = set()
+    for k, v in d.items():
+        path = f"{prefix}{k}"
+        out.add(path)
+        if isinstance(v, dict):
+            out |= _flatten(v, path + ".")
+    return out
+
+
+def _documented_stats_paths():
+    """Dotted paths from serving.md's field-reference table rows."""
+    doc = _doc("serving.md")
+    paths = set()
+    for line in doc.splitlines():
+        if not line.startswith("| `"):
+            continue
+        for token in re.findall(r"`([^`]+)`", line):
+            if re.fullmatch(r"[a-z_][a-z0-9_]*(\.[a-z0-9_]+)*", token):
+                paths.add(token)
+    return paths
+
+
+def test_stats_payload_superset_of_field_reference():
+    import jax.numpy as jnp
+
+    from repro.core import HabitatPredictor, OperationTracker
+    from repro.serve.service import PredictionService
+
+    documented = _documented_stats_paths()
+    assert len(documented) > 30, (
+        f"suspiciously few documented /stats paths ({len(documented)}) — "
+        f"field-reference parsing broken?")
+    trace = OperationTracker("T4").track(
+        lambda w, x: jnp.sum(jnp.tanh(x @ w)),
+        jnp.zeros((8, 24)), jnp.zeros((8, 8)), label="docs-sync")
+    service = PredictionService(predictor=HabitatPredictor(),
+                                coalesce_window_ms=0.0)
+    service.rank(trace, 8)      # populate every counter family
+    actual = _flatten(service.stats())
+    missing = documented - actual
+    assert not missing, (
+        f"docs/serving.md documents /stats fields the service does not "
+        f"serve: {sorted(missing)}")
+
+
+# -- every fenced python block in docs/ runs green --------------------------
+def _snippets():
+    for page in sorted(DOCS.glob("*.md")):
+        blocks = re.findall(r"```python\n(.*?)```", page.read_text(),
+                            flags=re.DOTALL)
+        for i, block in enumerate(blocks):
+            yield pytest.param(block, id=f"{page.name}-{i}")
+
+
+@pytest.mark.parametrize("snippet", _snippets())
+def test_docs_snippets_execute(snippet):
+    import os
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (str(SRC), env.get("PYTHONPATH")) if p)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run([sys.executable, "-c", snippet], env=env,
+                          capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, (
+        f"documentation snippet failed:\n--- snippet ---\n{snippet}\n"
+        f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}")
