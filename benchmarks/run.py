@@ -57,11 +57,14 @@ BENCHES = [
     ("frontdoor", "benchmarks.bench_frontdoor",
      "Async front door: open-loop overload gate (sheds at 2x, goodput "
      ">=80%, p99 bounded) + threaded baseline"),
+    ("cluster", "benchmarks.bench_cluster",
+     "Cross-host tier: 3 workers + netcache, no shared fs (>=50% "
+     "cross-worker hits, bitwise answers, lossless worker-kill failover)"),
 ]
 
 #: the subset (and reduced sizes) run by CI's bench-smoke job
 SMOKE_KEYS = ("fleet", "sweep", "service", "union", "dispatch", "kernels",
-              "frontdoor")
+              "frontdoor", "cluster")
 
 
 def main() -> None:

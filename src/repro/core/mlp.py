@@ -87,6 +87,15 @@ def male_loss(params, x, logy) -> jnp.ndarray:
 #: stale cache entry minted for its garbage-collected predecessor.
 _UID = itertools.count()
 
+#: finite ceiling for the network's log(ms) output.  float64 ``exp``
+#: overflows to inf past ~709.78, and an inf prediction poisons every
+#: downstream consumer (ranks, result caches, sqlite/netcache entries).
+#: Out-of-distribution features must saturate to a huge-but-finite time
+#: (e^80 ~ 5.5e34 ms — last in any ranking) instead.  In-distribution
+#: log(ms) sits in roughly [-7, 12], so the clamp never moves a sane
+#: prediction.
+LOG_MS_MAX = 80.0
+
 
 @dataclasses.dataclass
 class TrainedMLP:
@@ -109,8 +118,13 @@ class TrainedMLP:
     @staticmethod
     def ms_from_log(log_ms: np.ndarray) -> np.ndarray:
         """Map the network's log(ms) output to clamped milliseconds —
-        the one output contract for every inference path."""
-        return np.maximum(np.exp(log_ms), 1e-6)
+        the one output contract for every inference path.
+
+        Clamped on both ends: ``LOG_MS_MAX`` keeps extreme features from
+        overflowing ``exp`` into inf (which would poison ranks and
+        result caches), and the 1e-6 floor keeps a negative blow-up from
+        predicting zero time."""
+        return np.maximum(np.exp(np.minimum(log_ms, LOG_MS_MAX)), 1e-6)
 
     def predict_ms(self, features: np.ndarray) -> np.ndarray:
         x = self.normalize(features)

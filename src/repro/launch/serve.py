@@ -28,7 +28,15 @@ worker is a cache hit for all of them::
 (``repro.serve.aserver``): same wire formats and admission control,
 plus SSE sweep streaming (``/sweep/stream``) and event-loop concurrency
 instead of a thread per connection.  Omit it for the threaded baseline
-(the kill switch).  See ``docs/serving.md`` for the ops runbook.
+(the kill switch).
+
+Cross-host tier (PR 7): ``--cache`` also accepts ``tcp://host:port`` —
+the network result cache, for fleets with no shared filesystem.
+``--cache-server`` runs that standalone store; ``--router`` puts a
+fingerprint-sharding coordinator (``repro.serve.router``) on the base
+port with the workers behind it on consecutive ports, so each trace
+always lands on the worker whose engine caches are hot for it, with
+health-checked failover.  See ``docs/serving.md`` for the ops runbook.
 """
 
 from __future__ import annotations
@@ -52,21 +60,97 @@ from repro.models.config import smoke_config
 from repro.serve.engine import Request, ServingEngine
 
 
+def _worker_env() -> dict:
+    env = dict(os.environ)
+    src = str(Path(__file__).resolve().parents[2])
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (src, env.get("PYTHONPATH")) if p)
+    return env
+
+
+def serve_router(args, cache) -> None:
+    """``--router``: workers on consecutive ports behind a fingerprint-
+    sharding coordinator on the base port.
+
+    Workers are spawned with piped stdout so their ``serving on ...``
+    readiness lines give us the actual urls (ephemeral ports included);
+    the router face then fronts them on this process's thread."""
+    from repro.serve.router import FingerprintRouter, RouterServer
+
+    env = _worker_env()
+    worker_mod = ("repro.serve.aserver" if args.use_async
+                  else "repro.serve.http")
+    procs = []
+    for i in range(args.workers):
+        cmd = [sys.executable, "-m", worker_mod,
+               "--host", args.host,
+               "--port", str(args.port + 1 + i if args.port else 0),
+               "--coalesce-ms", str(args.coalesce_ms)]
+        if cache is not None:
+            cmd += ["--cache", cache]
+        if args.fleet_mlps:
+            cmd.append("--mlps")
+        procs.append(subprocess.Popen(cmd, env=env,
+                                      stdout=subprocess.PIPE, text=True))
+    urls = []
+    for proc in procs:
+        line = proc.stdout.readline()
+        while line and not line.startswith("serving on "):
+            line = proc.stdout.readline()
+        if not line:
+            for p in procs:
+                p.terminate()
+            sys.exit("a worker exited before binding its port")
+        urls.append(line.split("serving on ", 1)[1].strip())
+    print(f"router fleet: {len(urls)} workers on "
+          f"{', '.join(urls)} (cache: {cache})", flush=True)
+    router = FingerprintRouter(urls)
+    server = RouterServer(router, host=args.host, port=args.port)
+    print(f"serving on {server.url}", flush=True)
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.shutdown()
+        for p in procs:
+            p.terminate()
+        for p in procs:
+            p.wait()
+
+
 def serve_http(args) -> None:
     """Run the prediction service: in-process for one worker, a
-    subprocess pool (sharing one sqlite cache) for several."""
+    subprocess pool (sharing one result cache) for several, optionally
+    behind the fingerprint router; or the standalone cache store."""
     from repro.serve.http import PredictionServer, build_service
 
+    if args.cache_server:
+        from repro.serve.netcache import CacheServer
+
+        # the standalone store: one process every worker's --cache
+        # tcp://host:port points at (prints "serving on tcp://..." once
+        # bound, same readiness protocol as the workers)
+        CacheServer(host=args.host, port=args.port,
+                    capacity=args.cache_capacity).serve_forever()
+        return
+
     cache = args.cache
-    if args.workers > 1 and args.port == 0:
+    if args.workers > 1 and args.port == 0 and not args.router:
         # each child would bind an unrelated ephemeral port and the
         # "consecutive ports" contract (and our printed range) would lie
-        sys.exit("--port 0 (ephemeral) is only valid with --workers 1; "
-                 "pick a base port for a worker pool")
+        # (--router is exempt: it discovers worker urls from their
+        # readiness lines)
+        sys.exit("--port 0 (ephemeral) is only valid with --workers 1 "
+                 "or --router; pick a base port for a worker pool")
     if args.workers > 1 and cache is None:
         cache = str(Path(tempfile.mkdtemp(prefix="fleet-cache-"))
                     / "cache.sqlite")
         print(f"shared result cache: {cache}", flush=True)
+
+    if args.router:
+        serve_router(args, cache)
+        return
 
     if args.workers == 1:
         from repro.serve.http import log_engine_caches
@@ -96,10 +180,7 @@ def serve_http(args) -> None:
             log_engine_caches(service)
         return
 
-    env = dict(os.environ)
-    src = str(Path(__file__).resolve().parents[2])
-    env["PYTHONPATH"] = os.pathsep.join(
-        p for p in (src, env.get("PYTHONPATH")) if p)
+    env = _worker_env()
     worker_mod = ("repro.serve.aserver" if args.use_async
                   else "repro.serve.http")
     procs = []
@@ -155,17 +236,29 @@ def main():
                          "threaded baseline")
     ap.add_argument("--workers", type=int, default=1,
                     help="HTTP worker processes (consecutive ports, one "
-                         "shared sqlite result cache)")
+                         "shared result cache)")
+    ap.add_argument("--router", action="store_true",
+                    help="front the workers with the fingerprint-"
+                         "sharding router on the base port (workers on "
+                         "port+1..); traces stick to the worker whose "
+                         "engine caches are hot for them")
+    ap.add_argument("--cache-server", action="store_true",
+                    help="run the standalone network result-cache store "
+                         "instead of any workers (point --cache "
+                         "tcp://host:port at it)")
+    ap.add_argument("--cache-capacity", type=int, default=262144,
+                    help="entry bound of the --cache-server store")
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8100)
-    ap.add_argument("--cache", default=None, metavar="PATH",
-                    help="sqlite path for the shared result cache "
-                         "(auto-created under /tmp when --workers > 1)")
+    ap.add_argument("--cache", default=None, metavar="PATH_OR_URL",
+                    help="shared result cache: a sqlite path (one host) "
+                         "or tcp://host:port of a --cache-server (cross-"
+                         "host); auto-created sqlite when --workers > 1")
     ap.add_argument("--coalesce-ms", type=float, default=5.0,
                     help="request-coalescing window for --serve")
     args = ap.parse_args()
 
-    if args.serve:
+    if args.serve or args.cache_server:
         serve_http(args)
         return
 

@@ -11,8 +11,19 @@ neighbors — see ``docs/architecture.md`` for the full tour):
   the Habitat-style predictor, fronted by the result cache (keyed on
   ``(trace fingerprint, device, config, fleet token)``).
 * :mod:`repro.serve.cache` — result-cache backends: in-process
-  :class:`LRUCache` and cross-process :class:`SqliteCache`
-  (``make_backend`` picks from a path/instance/None spelling).
+  :class:`LRUCache`, cross-process :class:`SqliteCache`, and the
+  cross-host :class:`~repro.serve.netcache.NetCache` client
+  (``make_backend`` picks from a path/``tcp://``/instance/None
+  spelling).
+* :mod:`repro.serve.netcache` — the network result cache:
+  :class:`CacheServer` (asyncio TCP store shared by every host) and
+  :class:`NetCache` (the client backend, degrading to compute-as-miss
+  when the server is unreachable).
+* :mod:`repro.serve.router` — :class:`FingerprintRouter` /
+  :class:`RouterServer`: the cross-host coordinator.  Consistent-hashes
+  trace fingerprints over N workers so each host's engine caches stay
+  hot for "its" traces; health-checks and fails over around dead
+  workers.
 * :mod:`repro.serve.service` — :class:`PredictionService`: transport-
   agnostic request coalescing.  Concurrent queries within an adaptive
   window become ONE ragged engine pass over a union device grid, with a
@@ -42,8 +53,24 @@ from repro.serve.fleet import (FleetChoice, FleetPlanner, format_fleet,
                                format_sweep, rank_rows)
 from repro.serve.service import PredictionService, adaptive_window_ms
 
-__all__ = ["AdmissionController", "AdmissionError", "CacheStats",
-           "FleetChoice", "FleetPlanner", "LRUCache", "PredictionService",
-           "Request", "ServingEngine", "SqliteCache", "Ticket",
+#: lazily exported (PEP 562): netcache/router are runnable with
+#: ``python -m`` — an eager import here would make runpy warn that the
+#: module is already in sys.modules when it executes it as __main__
+_LAZY = {"CacheServer": "repro.serve.netcache",
+         "NetCache": "repro.serve.netcache",
+         "FingerprintRouter": "repro.serve.router",
+         "RouterServer": "repro.serve.router"}
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+__all__ = ["AdmissionController", "AdmissionError", "CacheServer",
+           "CacheStats", "FingerprintRouter", "FleetChoice", "FleetPlanner",
+           "LRUCache", "NetCache", "PredictionService", "Request",
+           "RouterServer", "ServingEngine", "SqliteCache", "Ticket",
            "adaptive_window_ms", "format_fleet", "format_sweep",
            "make_backend", "rank_rows"]

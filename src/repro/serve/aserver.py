@@ -179,14 +179,25 @@ class AsyncPredictionServer:
         def _stop():
             if self._server is not None:
                 self._server.close()
-            for task in asyncio.all_tasks(self._loop):
+            tasks = list(asyncio.all_tasks(self._loop))
+            for task in tasks:
                 task.cancel()       # in-flight handlers exit via their
                 # CancelledError paths before the loop stops
-            self._loop.call_soon(self._loop.stop)
+
+            async def _finish():
+                # let the cancellations actually unwind, then stop —
+                # stopping immediately would strand pending tasks and
+                # leak the loop's resources under -W error
+                await asyncio.gather(*tasks, return_exceptions=True)
+                self._loop.stop()
+
+            self._loop.create_task(_finish())
 
         self._loop.call_soon_threadsafe(_stop)
         if self._thread is not None:
             self._thread.join(timeout=10)
+        self._loop.close()
+        self._loop = None
 
     # -- request plumbing ---------------------------------------------------
     @staticmethod
@@ -414,9 +425,10 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8080,
                     help="0 binds an ephemeral port (printed on stdout)")
-    ap.add_argument("--cache", default=None, metavar="PATH",
-                    help="sqlite file for the cross-process shared result "
-                         "cache (default: per-worker in-process LRU)")
+    ap.add_argument("--cache", default=None, metavar="PATH|tcp://H:P",
+                    help="shared result cache: a sqlite file path, or "
+                         "tcp://host:port of a repro.serve.netcache server "
+                         "(default: per-worker in-process LRU)")
     ap.add_argument("--cache-size", type=int, default=262144)
     ap.add_argument("--coalesce-ms", type=float, default=5.0,
                     help="base request-coalescing window in milliseconds "

@@ -13,6 +13,11 @@ protocol so the *same* planner/service code can run against:
   for worker B.  Hit/miss/eviction accounting stays **per worker**
   (in-memory), so each worker's ``/stats`` reports its own traffic while
   the entries themselves are shared.
+* :class:`repro.serve.netcache.NetCache` (spelled ``tcp://host:port``) —
+  the cross-HOST shared store: a client for the network result-cache
+  server, same sharing story as sqlite without a shared filesystem, with
+  graceful degradation (an unreachable server is a miss, never an
+  exception).
 
 Keys are the planner's ``(fingerprint, device, config_key, fleet_token)``
 tuples — primitives only, so their ``repr`` is a stable cross-process
@@ -39,10 +44,17 @@ Key = Tuple
 
 @dataclasses.dataclass
 class CacheStats:
-    """Per-worker hit/miss/eviction counters (shared backends included)."""
+    """Per-worker hit/miss/eviction counters (shared backends included).
+
+    ``degraded`` counts backend failures absorbed as misses — a network
+    cache whose server is unreachable, or any backend whose
+    ``get_many``/``put_many`` raised into the planner.  A degraded probe
+    still counts its keys as misses (they get computed), so ``hit_rate``
+    stays truthful under outage."""
     hits: int = 0
     misses: int = 0
     evictions: int = 0
+    degraded: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -51,7 +63,7 @@ class CacheStats:
 
     def as_dict(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions,
+                "evictions": self.evictions, "degraded": self.degraded,
                 "hit_rate": round(self.hit_rate, 4)}
 
 
@@ -118,6 +130,10 @@ class LRUCache:
             self.data.clear()
             self.stats = CacheStats()
 
+    def close(self) -> None:
+        """No resources to release; exists so callers can close any
+        backend uniformly (sqlite connections, netcache sockets)."""
+
     def __len__(self) -> int:
         return len(self.data)
 
@@ -131,10 +147,14 @@ class SqliteCache:
       concurrent readers but only one writer, so a hit must never queue
       on the write lock — the hot path this cache exists to serve.
       Eviction order is therefore write-recency (a monotone ``tick``
-      bumped on insert/overwrite), not strict LRU; each worker seeds its
-      tick counter from the table's current max, so ticks stay roughly
-      global across workers (eviction only has to be *sane*, not
-      identical to the in-proc LRU).
+      bumped on insert/overwrite), not strict LRU.  Ticks are minted
+      **in SQL, inside the insert's own write transaction**
+      (``MAX(tick) + 1`` evaluated under the writer lock), so N
+      concurrent workers always mint disjoint, globally increasing
+      ticks.  A per-connection counter seeded at open — the previous
+      scheme — let workers that opened early mint ticks far below the
+      table's current max, and eviction (``ORDER BY tick``) would then
+      drop another worker's *freshest* entries.
     * ``stats`` counts only THIS worker's probes/evictions; the shared
       entry count is ``len(backend)``.
     """
@@ -156,9 +176,6 @@ class SqliteCache:
             self._conn.execute("PRAGMA synchronous=NORMAL")
             self._conn.execute(self._SCHEMA)
             self._conn.commit()
-            row = self._conn.execute(
-                "SELECT COALESCE(MAX(tick), 0) FROM cache").fetchone()
-        self._tick = int(row[0])
 
     def describe(self) -> str:
         return f"sqlite({self.path}, capacity={self.capacity})"
@@ -201,12 +218,15 @@ class SqliteCache:
         if not items:
             return
         with self._lock:
-            rows = []
-            for key, ms in items:
-                self._tick += 1
-                rows.append((self._encode(key), float(ms), self._tick))
+            rows = [(self._encode(key), float(ms)) for key, ms in items]
+            # the tick subquery runs inside this statement's write
+            # transaction, so it sees every committed write from every
+            # worker (and this batch's earlier rows): ticks are globally
+            # monotone and collision-free without any cross-process
+            # coordination of our own
             self._conn.executemany(
-                "INSERT INTO cache (k, ms, tick) VALUES (?, ?, ?) "
+                "INSERT INTO cache (k, ms, tick) VALUES (?, ?, "
+                "(SELECT COALESCE(MAX(tick), 0) + 1 FROM cache)) "
                 "ON CONFLICT(k) DO UPDATE SET ms=excluded.ms, "
                 "tick=excluded.tick", rows)
             over = (self._conn.execute(
@@ -238,18 +258,36 @@ class SqliteCache:
 #: anything ``make_backend`` accepts
 BackendLike = Union[None, str, Path, LRUCache, SqliteCache]
 
+#: the full backend protocol every consumer relies on: the planner probes
+#: with ``get``/``get_many`` and fills with ``put_many``, the service's
+#: ``/stats`` reads ``stats``/``describe``/``__len__``, and tests/ops
+#: tooling call ``clear``.  ``make_backend`` validates ALL of it up
+#: front — a partial backend must fail at construction with a clear
+#: error, not deep inside a planner batch.
+BACKEND_PROTOCOL = ("get", "get_many", "put_many", "stats", "describe",
+                    "clear", "__len__")
 
-def make_backend(cache: BackendLike = None,
-                 capacity: int = 4096) -> Union[LRUCache, SqliteCache]:
+
+def make_backend(cache: BackendLike = None, capacity: int = 4096):
     """Resolve a cache spelling to a backend instance.
 
-    ``None`` -> fresh in-process LRU; a str/Path -> sqlite shared backend
-    at that file; a ready backend passes through (``capacity`` ignored).
+    ``None`` -> fresh in-process LRU; ``tcp://host:port`` -> network
+    result-cache client (:class:`repro.serve.netcache.NetCache`); any
+    other str/Path -> sqlite shared backend at that file (``capacity``
+    honored exactly — no silent floor); a ready backend passes through
+    after full-protocol validation (``capacity`` ignored).
     """
     if cache is None:
         return LRUCache(capacity)
+    if isinstance(cache, str) and cache.startswith("tcp://"):
+        from repro.serve.netcache import NetCache   # avoid import cycle
+        return NetCache(cache)
     if isinstance(cache, (str, Path)):
-        return SqliteCache(cache, capacity=max(capacity, 4096))
-    if hasattr(cache, "get") and hasattr(cache, "put_many"):
+        return SqliteCache(cache, capacity=capacity)
+    missing = [name for name in BACKEND_PROTOCOL
+               if not hasattr(cache, name)]
+    if not missing:
         return cache
-    raise TypeError(f"not a cache backend or path: {cache!r}")
+    raise TypeError(
+        f"not a cache backend or path: {cache!r} (missing "
+        f"{', '.join(missing)} of the protocol {BACKEND_PROTOCOL})")

@@ -220,20 +220,44 @@ class FleetPlanner:
         The ONE lookup used by both predict() and sweep(), so their
         hit/miss semantics cannot drift (falls back to per-key ``get``
         for backends without ``get_many`` — accounting is identical
-        either way)."""
+        either way).  A backend that *raises* — a network cache whose
+        retry/degradation layer is itself broken, a corrupt sqlite file —
+        degrades to compute-as-miss: the query is answered from the
+        engine and the outage is visible as ``stats.degraded``, never as
+        a failed request batch."""
         get_many = getattr(self.cache, "get_many", None)
-        if get_many is not None:
-            return list(get_many(keys))
-        return [self.cache.get(k) for k in keys]
+        try:
+            if get_many is not None:
+                return list(get_many(keys))
+            return [self.cache.get(k) for k in keys]
+        except Exception:
+            self._count_degraded(misses=len(keys))
+            return [None] * len(keys)
 
     def _store(self, items: Sequence[Tuple[Tuple, float]]) -> None:
         """Insert computed cells (backend evicts LRU overflow).
 
         The ONE write path shared by predict() and sweep(); counts one
-        engine pass, since every store follows exactly one engine call."""
+        engine pass, since every store follows exactly one engine call.
+        A failing backend drops the fill (the answers are already
+        computed) and bumps ``stats.degraded`` — an outage costs cache
+        warmth, never correctness."""
         with self._lock:
             self.engine_passes += 1
-        self.cache.put_many(items)
+        try:
+            self.cache.put_many(items)
+        except Exception:
+            self._count_degraded()
+
+    def _count_degraded(self, misses: int = 0) -> None:
+        """Record a backend failure on the backend's own stats object
+        (where ``planner.stats`` reads from), defensively — a backend
+        broken enough to raise may have broken accounting too."""
+        try:
+            self.cache.stats.degraded += 1
+            self.cache.stats.misses += misses
+        except Exception:
+            pass
 
     def clear_cache(self) -> None:
         """Reset cached results, stats, and the engine-pass counter."""

@@ -303,9 +303,10 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8080,
                     help="0 binds an ephemeral port (printed on stdout)")
-    ap.add_argument("--cache", default=None, metavar="PATH",
-                    help="sqlite file for the cross-process shared result "
-                         "cache (default: per-worker in-process LRU)")
+    ap.add_argument("--cache", default=None, metavar="PATH|tcp://H:P",
+                    help="shared result cache: a sqlite file path, or "
+                         "tcp://host:port of a repro.serve.netcache server "
+                         "(default: per-worker in-process LRU)")
     ap.add_argument("--cache-size", type=int, default=262144)
     ap.add_argument("--coalesce-ms", type=float, default=5.0,
                     help="request-coalescing window in milliseconds")

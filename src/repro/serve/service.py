@@ -465,6 +465,13 @@ class PredictionService:
         cache = self.planner.stats.as_dict()
         cache["backend"] = self.planner.cache.describe()
         cache["entries"] = len(self.planner.cache)
+        # network backends expose the server's GLOBAL cross-worker
+        # accounting alongside this worker's local counters (None while
+        # the server is unreachable — the block says so rather than
+        # vanishing, so dashboards can alert on it)
+        server_stats = getattr(self.planner.cache, "server_stats", None)
+        if callable(server_stats):
+            cache["netcache"] = server_stats()
         return {"requests": requests, "coalescing": coalescing,
                 "engine_passes": self.planner.engine_pass_count(),
                 "split_model": {"pass_overhead_ms": c_pass * 1e3,

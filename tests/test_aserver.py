@@ -139,6 +139,7 @@ def test_sheds_429_with_retry_after():
         assert ei.value.code == 429
         assert int(ei.value.headers["Retry-After"]) >= 1
         body = json.loads(ei.value.read())
+        ei.value.close()    # the HTTPError owns the response socket
         assert body["lane"] == "interactive"
         assert body["retry_after_s"] > 0
     finally:
@@ -156,6 +157,7 @@ def test_sheds_503_when_queue_full():
             client.sweep([_trace(8, "full")], dests=["T4"])
         assert ei.value.code == 503
         assert "Retry-After" in ei.value.headers
+        ei.value.close()    # the HTTPError owns the response socket
         assert client.stats()["admission"]["shed_503"] == 1
     finally:
         srv.shutdown()

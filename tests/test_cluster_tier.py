@@ -1,0 +1,328 @@
+"""Cross-host tier tests: netcache, fingerprint router, and the
+degradation contract (a broken cache backend NEVER breaks an answer)."""
+
+import json
+import urllib.error
+import urllib.request
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import HabitatPredictor, OperationTracker
+from repro.serve.cache import LRUCache, make_backend
+from repro.serve.fleet import FleetPlanner
+from repro.serve.http import (PredictionClient, PredictionServer,
+                              build_service)
+from repro.serve.netcache import CacheServer, NetCache
+from repro.serve.router import FingerprintRouter, RoutedError, RouterServer
+from repro.serve.service import PredictionService
+
+
+def _toy_step(w, x):
+    return jnp.sum(jnp.tanh(x @ w))
+
+
+def _trace(n: int = 32, origin: str = "T4"):
+    return OperationTracker(origin).track(
+        _toy_step, jnp.zeros((n, 16)), jnp.zeros((4, n)))
+
+
+_DESTS = ["T4", "V100", "tpu-v5e"]
+
+
+class FlakyBackend(LRUCache):
+    """An LRU whose transport 'fails' on demand — stands in for any
+    backend whose get/put raises into the planner."""
+
+    def __init__(self, capacity: int = 64):
+        super().__init__(capacity)
+        self.fail = False
+
+    def get_many(self, keys):
+        if self.fail:
+            raise ConnectionError("backend down")
+        return super().get_many(keys)
+
+    def put_many(self, items):
+        if self.fail:
+            raise ConnectionError("backend down")
+        super().put_many(items)
+
+
+# ---------------------------------------------------------------------------
+# netcache: server + client backend
+# ---------------------------------------------------------------------------
+@pytest.fixture()
+def cache_server():
+    server = CacheServer(port=0, capacity=64).start()
+    yield server
+    server.shutdown()
+
+
+def test_netcache_roundtrip_bitwise(cache_server):
+    nc = NetCache(cache_server.address)
+    vals = [0.1, 1e-300, 123456.789e12, 2.0 / 3.0]
+    keys = [((f"fp{i}", "T4", ("HabitatPredictor", False), "tok"),)
+            for i in range(len(vals))]
+    nc.put_many(list(zip(keys, vals)))
+    assert nc.get_many(keys) == vals        # exact, not approx
+    assert nc.get(keys[0]) == vals[0]
+    assert nc.get(("absent",)) is None
+    assert len(nc) == len(vals)
+    assert nc.stats.hits == 5 and nc.stats.misses == 1
+    server = nc.server_stats()
+    assert server["entries"] == len(vals) and server["hits"] == 5
+    assert nc.ping()
+    nc.clear()
+    assert len(nc) == 0 and nc.stats.hits == 0
+    nc.close()
+
+
+def test_netcache_is_a_full_backend(cache_server):
+    """make_backend's tcp:// spelling passes protocol validation and the
+    planner runs against it with the same answers as an in-process LRU."""
+    backend = make_backend(cache_server.address)
+    assert isinstance(backend, NetCache)
+    assert backend.describe().startswith("netcache(tcp://")
+    tr = _trace()
+    a = FleetPlanner(predictor=HabitatPredictor(), fleet=_DESTS,
+                     cache=backend)
+    oracle = FleetPlanner(predictor=HabitatPredictor(), fleet=_DESTS)
+    assert a.predict(tr) == oracle.predict(tr)      # bitwise via JSON
+    # a second planner (= another host) hits the shared store
+    b = FleetPlanner(predictor=HabitatPredictor(), fleet=_DESTS,
+                     cache=NetCache(cache_server.address))
+    assert b.predict(tr) == oracle.predict(tr)
+    assert b.stats.hits == len(_DESTS) and b.engine_passes == 0
+    backend.close()
+    b.cache.close()
+
+
+def test_netcache_bad_address_rejected():
+    with pytest.raises(ValueError, match="tcp://host:port"):
+        NetCache("http://127.0.0.1:80")
+    with pytest.raises(ValueError, match="tcp://host:port"):
+        NetCache("tcp://nohost")
+
+
+def test_netcache_dead_server_degrades_fast():
+    """Every op against a dead server is a miss + ``degraded`` bump —
+    never an exception — and the circuit breaker keeps repeat probes
+    from re-paying the connect timeout."""
+    import time
+
+    server = CacheServer(port=0).start()
+    nc = NetCache(server.address, timeout_s=0.5, retries=1,
+                  backoff_s=0.01, reconnect_s=30.0)
+    nc.put_many([(("k",), 1.0)])
+    server.shutdown()
+
+    assert nc.get_many([("k",), ("j",)]) == [None, None]
+    assert nc.stats.degraded == 1 and nc.stats.misses == 2
+    nc.put_many([(("k",), 2.0)])            # lost fill, no exception
+    assert nc.stats.degraded == 2
+    assert len(nc) == 0
+    assert nc.server_stats() is None
+    assert not nc.ping()
+    t0 = time.perf_counter()
+    assert nc.get(("k",)) is None           # breaker open: instant
+    assert time.perf_counter() - t0 < 0.1
+    nc.clear()                              # resets local counters only
+    assert nc.stats.degraded == 0
+    nc.close()
+
+
+# ---------------------------------------------------------------------------
+# degradation: planner, service, both front ends
+# ---------------------------------------------------------------------------
+def test_planner_degrades_on_backend_outage():
+    tr = _trace()
+    flaky = FlakyBackend()
+    planner = FleetPlanner(predictor=HabitatPredictor(), fleet=_DESTS,
+                           cache=flaky)
+    oracle = FleetPlanner(predictor=HabitatPredictor(), fleet=_DESTS)
+    flaky.fail = True
+    assert planner.predict(tr) == oracle.predict(tr)
+    # probe + store both degraded; the probe counted its keys as misses
+    assert planner.stats.degraded == 2
+    assert planner.stats.misses == len(_DESTS)
+    assert planner.engine_passes == 1
+    flaky.fail = False                      # backend recovers: fills work
+    planner.predict(tr)
+    assert planner.engine_passes == 2       # the failed fill was lost
+    planner.predict(tr)
+    assert planner.engine_passes == 2 and planner.stats.hits == len(_DESTS)
+
+
+def test_service_degrades_on_backend_outage():
+    tr = _trace()
+    flaky = FlakyBackend()
+    service = PredictionService(predictor=HabitatPredictor(), fleet=_DESTS,
+                                cache=flaky, coalesce_window_ms=0.0)
+    oracle = PredictionService(predictor=HabitatPredictor(), fleet=_DESTS,
+                               coalesce_window_ms=0.0)
+    flaky.fail = True
+    payload = {"trace": tr.to_dict(), "batch_size": 4}
+    assert (service.rank_request(payload)["ranking"]
+            == oracle.rank_request(payload)["ranking"])
+    stats = service.stats()
+    assert stats["cache"]["degraded"] >= 2
+    assert stats["cache"]["hits"] == 0
+
+
+@pytest.mark.parametrize("front", ["threaded", "async"])
+def test_front_ends_degrade_on_backend_outage(front):
+    tr = _trace()
+    flaky = FlakyBackend()
+    flaky.fail = True
+    service = PredictionService(predictor=HabitatPredictor(), fleet=_DESTS,
+                                cache=flaky, coalesce_window_ms=0.5)
+    if front == "async":
+        from repro.serve.aserver import AsyncPredictionServer
+        server = AsyncPredictionServer(service).start()
+    else:
+        server = PredictionServer(service).start()
+    try:
+        client = PredictionClient(server.url)
+        oracle = FleetPlanner(predictor=HabitatPredictor(), fleet=_DESTS)
+        rows = client.rank(tr, batch_size=4)
+        expected = oracle.rank(tr, batch_size=4)
+        assert [r["device"] for r in rows] == [c.device for c in expected]
+        assert [r["iter_ms"] for r in rows] == [c.iter_ms for c in expected]
+        assert client.stats()["cache"]["degraded"] >= 2
+    finally:
+        server.shutdown()
+
+
+def test_service_survives_netcache_server_death():
+    """The tier-level outage: the cache SERVER dies under a live
+    service.  Requests keep answering (computed as misses), /stats says
+    degraded, and the netcache block reports unreachable (None)."""
+    cache_server = CacheServer(port=0).start()
+    nc = NetCache(cache_server.address, timeout_s=0.5, retries=0,
+                  reconnect_s=30.0)
+    service = PredictionService(predictor=HabitatPredictor(), fleet=_DESTS,
+                                cache=nc, coalesce_window_ms=0.0)
+    oracle = PredictionService(predictor=HabitatPredictor(), fleet=_DESTS,
+                               coalesce_window_ms=0.0)
+    t1, t2 = _trace(32), _trace(48)
+    p1 = {"trace": t1.to_dict(), "batch_size": 4}
+    p2 = {"trace": t2.to_dict(), "batch_size": 4}
+    assert (service.rank_request(p1)["ranking"]
+            == oracle.rank_request(p1)["ranking"])
+    assert service.stats()["cache"]["netcache"]["entries"] == len(_DESTS)
+    cache_server.shutdown()
+    for p in (p1, p2):      # warm AND cold traces both still answer
+        assert (service.rank_request(p)["ranking"]
+                == oracle.rank_request(p)["ranking"])
+    stats = service.stats()["cache"]
+    assert stats["degraded"] >= 2
+    assert stats["netcache"] is None
+    nc.close()
+
+
+# ---------------------------------------------------------------------------
+# fingerprint router
+# ---------------------------------------------------------------------------
+def test_ring_is_deterministic_and_consistent():
+    urls = [f"http://10.0.0.{i}:8100" for i in range(4)]
+    a = FingerprintRouter(urls, replicas=64)
+    b = FingerprintRouter(urls, replicas=64)
+    fps = [f"fp-{i:04d}" for i in range(400)]
+    owners = [a.owner(fp) for fp in fps]
+    assert owners == [b.owner(fp) for fp in fps]    # instance-independent
+    # every worker owns a non-trivial share of the space
+    for url in urls:
+        assert owners.count(url) > 0.1 * len(fps)
+    # consistent hashing: removing one worker remaps ONLY its keys
+    dead = urls[0]
+    a.mark_down(dead)
+    for fp, owner in zip(fps, owners):
+        if owner != dead:
+            assert a.owner(fp) == owner
+        else:
+            assert a.owner(fp) != dead
+    a.mark_up(dead)
+    assert [a.owner(fp) for fp in fps] == owners
+    a.close()
+    b.close()
+
+
+def test_router_no_live_workers_is_503():
+    r = FingerprintRouter(["http://10.0.0.1:1"])
+    r.mark_down("http://10.0.0.1:1")
+    with pytest.raises(RoutedError) as ei:
+        r.owner("fp")
+    assert ei.value.status == 503
+    r.close()
+
+
+@pytest.fixture()
+def worker_pair():
+    servers = [PredictionServer(build_service(coalesce_ms=0.5),
+                                port=0).start()
+               for _ in range(2)]
+    router = FingerprintRouter([s.url for s in servers], health_s=0.2)
+    face = RouterServer(router, port=0).start()
+    yield servers, router, face
+    face.shutdown()
+    for s in servers:
+        s.shutdown()
+
+
+def test_router_sticky_and_bitwise(worker_pair):
+    servers, router, face = worker_pair
+    client = PredictionClient(face.url)
+    oracle = FleetPlanner(predictor=HabitatPredictor())
+    traces = [_trace(16 + 8 * i) for i in range(4)]
+    before = {w: v["forwarded"] for w, v in router.stats()["workers"].items()}
+    for _ in range(3):
+        rows = client.rank(traces[0], batch_size=4)
+    expected = oracle.rank(traces[0], batch_size=4)
+    assert [r["iter_ms"] for r in rows] == [c.iter_ms for c in expected]
+    deltas = sorted(v["forwarded"] - before[w]
+                    for w, v in router.stats()["workers"].items())
+    assert deltas == [0, 3]         # one owner took every repeat
+    # sweeps fan out by owner and merge back in input order, bitwise
+    times = client.sweep(traces)
+    for got, exp in zip(times, oracle.sweep(traces)):
+        assert got == exp
+    assert client.healthz() == {"ok": True}
+    assert client.stats()["router"]["live_workers"] == 2
+
+
+def test_router_fails_over_on_worker_death(worker_pair):
+    servers, router, face = worker_pair
+    client = PredictionClient(face.url)
+    oracle = FleetPlanner(predictor=HabitatPredictor())
+    traces = [_trace(16 + 8 * i) for i in range(6)]
+    for t in traces:        # prime: every owner sees its traces
+        client.rank(t, batch_size=4)
+    servers[0].shutdown()   # hard stop, no deregistration
+    for t in traces:        # every trace still answers, correctly
+        rows = client.rank(t, batch_size=4)
+        expected = oracle.rank(t, batch_size=4)
+        assert [r["iter_ms"] for r in rows] == [c.iter_ms for c in expected]
+    st = router.stats()
+    assert st["live_workers"] == 1
+    assert not st["workers"][servers[0].url]["alive"]
+
+
+def test_router_passes_worker_errors_through(worker_pair):
+    """An HTTP error STATUS is a worker answer (bad trace, shed) — the
+    router must relay it verbatim, not fail over to another worker."""
+    servers, router, face = worker_pair
+    tr = _trace()
+    payload = {"trace": tr.to_dict(), "batch_size": 4,
+               "dests": ["not-a-device"]}
+    req = urllib.request.Request(
+        face.url + "/rank", data=json.dumps(payload).encode(),
+        headers={"Content-Type": "application/json"}, method="POST")
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        urllib.request.urlopen(req, timeout=30)
+    assert ei.value.code == 400
+    body = json.loads(ei.value.read())
+    assert "error" in body
+    st = router.stats()
+    assert st["failovers"] == 0 and st["live_workers"] == 2
+    assert st["routed_errors"] == 1

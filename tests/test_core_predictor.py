@@ -148,6 +148,36 @@ def test_mlp_learns_dataset():
     assert preds.shape == (8,) and (preds > 0).all()
 
 
+def test_mlp_extreme_features_stay_finite():
+    """Regression: out-of-distribution features drove the network's
+    log(ms) output past float64 ``exp``'s ~709.78 overflow point —
+    ``ms_from_log`` emitted a RuntimeWarning and returned inf, which
+    poisoned rankings and result caches.  Predictions must saturate to
+    a huge-but-finite ceiling, silently."""
+    import warnings
+
+    cfg = mlp.MLPConfig(in_features=3, hidden_layers=1, hidden_size=4)
+    trained = mlp.TrainedMLP(
+        kind="linear", cfg=cfg,
+        params=[(jnp.ones((3, 4)), jnp.zeros((4,))),
+                (jnp.ones((4, 1)), jnp.zeros((1,)))],
+        feature_mean=np.zeros(3), feature_std=np.ones(3))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        ms = trained.predict_ms(np.full((2, 3), 1e8))
+        direct = mlp.TrainedMLP.ms_from_log(np.array([1e6, 800.0, -1e6]))
+    assert np.isfinite(ms).all()
+    # float32 inference rounds the ceiling up by one ulp
+    assert (ms <= np.float32(np.exp(mlp.LOG_MS_MAX))).all()
+    assert np.isfinite(direct).all()
+    assert direct[0] == direct[1] == np.exp(mlp.LOG_MS_MAX)
+    assert direct[2] == 1e-6            # the underflow floor still holds
+    # in-distribution outputs are untouched by the clamp
+    sane = np.array([-3.0, 0.0, 7.5])
+    np.testing.assert_array_equal(mlp.TrainedMLP.ms_from_log(sane),
+                                  np.exp(sane))
+
+
 def test_mlp_save_load_roundtrip(tmp_path, tiny_mlp_cfg, tiny_n_configs):
     ds = dataset_mod.build_dataset("bmm", tiny_n_configs,
                                    device_names=["T4"])

@@ -106,6 +106,32 @@ def test_sqlite_eviction(tmp_path):
     assert c.get(("k0",)) is None and c.get(("k4",)) == 4.0
 
 
+def test_sqlite_interleaved_ticks_evict_globally_oldest(tmp_path):
+    """Two workers writing concurrently must never evict each other's
+    FRESHEST entries.
+
+    Regression: ticks used to come from a per-connection counter seeded
+    at open (MAX(tick) at that instant), so a worker that opened early
+    minted ticks far below the table's current max and eviction — which
+    orders by tick — deleted its *newest* rows as if they were oldest.
+    Both backends here open before any write (both old-style seeds
+    would be 0); with SQL-minted ticks b's batch lands at ticks 4,5 and
+    eviction takes the genuinely oldest a-entries instead."""
+    path = tmp_path / "ticks.sqlite"
+    a = SqliteCache(path, capacity=3)
+    b = SqliteCache(path, capacity=3)
+    a.put_many([(("a1",), 1.0)])
+    a.put_many([(("a2",), 2.0)])
+    a.put_many([(("a3",), 3.0)])
+    b.put_many([(("b1",), 4.0), (("b2",), 5.0)])    # ticks 4,5 — not 1,2
+    assert len(b) == 3
+    assert b.get(("b1",)) == 4.0 and b.get(("b2",)) == 5.0
+    assert b.get(("a3",)) == 3.0        # the one surviving a-entry
+    assert a.get(("a1",)) is None and a.get(("a2",)) is None
+    a.close()
+    b.close()
+
+
 def test_sqlite_shared_between_instances(tmp_path):
     """Two backends on one file (= two workers) share entries but keep
     per-worker accounting."""
@@ -142,6 +168,38 @@ def test_make_backend_spellings(tmp_path):
     assert make_backend(lru) is lru
     with pytest.raises(TypeError, match="not a cache backend"):
         make_backend(42)
+
+
+def test_make_backend_names_missing_protocol_methods():
+    """A partial backend must fail AT CONSTRUCTION with the missing
+    method names spelled out — not deep inside a planner batch with an
+    AttributeError."""
+    class Partial:
+        def get(self, key):
+            return None
+
+        def get_many(self, keys):
+            return [None] * len(keys)
+
+    with pytest.raises(TypeError, match="not a cache backend") as ei:
+        make_backend(Partial())
+    missing_part = str(ei.value).split("missing", 1)[1]
+    for name in ("put_many", "stats", "describe", "clear", "__len__"):
+        assert name in missing_part
+    # present methods are not listed as missing
+    assert "get_many" not in missing_part.split(" of the protocol")[0]
+
+
+def test_make_backend_honors_small_sqlite_capacity(tmp_path):
+    """``capacity`` is taken at its word — the old silent
+    ``max(capacity, 4096)`` floor made small-capacity eviction tests
+    (and operator sizing) lie."""
+    c = make_backend(tmp_path / "small.sqlite", capacity=2)
+    assert c.capacity == 2
+    c.put_many([((f"k{i}",), float(i)) for i in range(5)])
+    assert len(c) == 2
+    assert c.stats.evictions == 3
+    c.close()
 
 
 def test_planner_cache_compat_shim(trace):
