@@ -60,11 +60,14 @@ BENCHES = [
     ("cluster", "benchmarks.bench_cluster",
      "Cross-host tier: 3 workers + netcache, no shared fs (>=50% "
      "cross-worker hits, bitwise answers, lossless worker-kill failover)"),
+    ("optimizer", "benchmarks.bench_optimizer",
+     "What-if optimizer: generation-batched Pareto search (>=5x vs "
+     "naive per-candidate loop, passes <= generations, bitwise parity)"),
 ]
 
 #: the subset (and reduced sizes) run by CI's bench-smoke job
 SMOKE_KEYS = ("fleet", "sweep", "service", "union", "dispatch", "kernels",
-              "frontdoor", "cluster")
+              "frontdoor", "cluster", "optimizer")
 
 
 def main() -> None:

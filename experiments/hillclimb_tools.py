@@ -1,31 +1,59 @@
 """Shared tooling for the §Perf hillclimb: lower a cell, list the largest
-collectives/tensors with op_name metadata, and report roofline deltas."""
+collectives/tensors with op_name metadata, and report roofline deltas.
+
+Importing this module has NO side effects: the ``XLA_FLAGS`` host-device
+override and the ``src/`` path bootstrap only happen inside
+:func:`setup_environment`, which the entry points call lazily.  That
+keeps the module safe to import from long-lived processes (the serving
+workers, the what-if optimizer's search scaffolding) that must not have
+their environment or ``sys.path`` mutated by a tooling import.
+"""
 
 import os
-os.environ.setdefault("XLA_FLAGS",
-                      "--xla_force_host_platform_device_count=512")
-
 import re
 import sys
 from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
-
-import jax
-import numpy as np
-
-from repro.configs import get_config
-from repro.launch import hlo_analysis, specs
-from repro.launch.mesh import make_production_mesh
-from repro.models.config import SHAPES
-from repro.parallel import ctx, sharding
-from repro.train.optim import adamw
-
 _DT = {"bf16": 2, "f16": 2, "f32": 4, "s32": 4, "u32": 4, "pred": 1,
        "s8": 1, "u8": 1, "f64": 8, "s64": 8, "u64": 8}
 
+_READY = False
+
+
+def setup_environment(host_devices: int = 512) -> None:
+    """Prepare this process for mesh lowering (idempotent, explicit).
+
+    Sets ``XLA_FLAGS`` so the CPU backend exposes enough host devices to
+    build production-shaped meshes, and makes ``repro`` importable when
+    the caller has not set PYTHONPATH.  Must run before jax initializes
+    its backends — :func:`lower_cell` calls it first thing, so script
+    users need not call it themselves.  ``XLA_FLAGS`` already set in the
+    environment wins (``setdefault``), as does an already-importable
+    ``repro`` (no path is inserted)."""
+    global _READY
+    if _READY:
+        return
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={host_devices}")
+    try:
+        import repro  # noqa: F401  (already importable: leave sys.path alone)
+    except ImportError:
+        sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+    _READY = True
+
 
 def lower_cell(arch, shape_name, cfg_override=None, multi_pod=False):
+    setup_environment()
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.launch import specs
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.config import SHAPES
+    from repro.parallel import ctx, sharding
+    from repro.train.optim import adamw
+
     cfg = cfg_override or get_config(arch)
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -85,6 +113,9 @@ def lower_cell(arch, shape_name, cfg_override=None, multi_pod=False):
 
 
 def report(compiled, chips, label=""):
+    setup_environment()
+    from repro.launch import hlo_analysis
+
     roof = hlo_analysis.analyze(compiled, chips)
     d = roof.as_dict()
     print(f"[{label}] compute {d['compute_s']*1e3:.1f}ms "
@@ -102,6 +133,9 @@ def report(compiled, chips, label=""):
 
 def top_collectives(compiled, n=12, while_weight=True):
     """The n largest collective instructions with op_name provenance."""
+    setup_environment()
+    from repro.launch import hlo_analysis
+
     text = compiled.as_text()
     mod = hlo_analysis.HloModule(text)
     rows = []

@@ -69,8 +69,10 @@ def rank_devices(trace: TrackedTrace, batch_size: int,
         spec = devices.get(name)
         ms = fleet_ms[name]
         tput = throughput(batch_size, ms)
+        # `is not None`, not truthiness: a free device (0.0 $/hr) is
+        # rentable and ranks at inf samples/$, it is not unpriced
         cn = (cost_normalized_throughput(batch_size, ms, spec.cost_per_hour)
-              if spec.cost_per_hour else None)
+              if spec.cost_per_hour is not None else None)
         out.append(DeviceChoice(
             device=name, iter_ms=ms, throughput=tput,
             cost_per_hour=spec.cost_per_hour, cost_normalized=cn,
@@ -88,7 +90,7 @@ def format_ranking(choices: Sequence[DeviceChoice]) -> str:
     for c in choices:
         lines.append(
             f"{c.device:<12} {c.iter_ms:>9.2f} {c.throughput:>10.1f} "
-            f"{(f'{c.cost_per_hour:.2f}' if c.cost_per_hour else '-'):>6} "
-            f"{(f'{c.cost_normalized:.0f}' if c.cost_normalized else '-'):>10} "
+            f"{(f'{c.cost_per_hour:.2f}' if c.cost_per_hour is not None else '-'):>6} "
+            f"{(f'{c.cost_normalized:.0f}' if c.cost_normalized is not None else '-'):>10} "
             f"{c.speedup_vs_origin:>7.2f}x")
     return "\n".join(lines)

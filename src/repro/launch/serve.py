@@ -14,6 +14,12 @@ predicted against the whole fleet in ONE ragged pass
 per-trace best device; a repeat query demonstrates the per-trace
 fingerprint cache.
 
+``--optimize`` runs the what-if optimizer on top of the same traces:
+a generation-batched Pareto search over (device, replica count, batch
+size) fleet candidates (``repro.serve.optimizer``), printing the
+time-vs-cost frontier and the search's engine accounting — candidates
+priced vs engine sweeps actually paid.
+
 ``--serve`` switches to prediction-service mode: an HTTP front end
 (``repro.serve.http``) answering ``/rank``, ``/sweep`` and ``/stats``
 queries with request coalescing.  ``--workers N`` runs a pool of N
@@ -226,7 +232,15 @@ def main():
                          "--sweep-batches size, predicted on the whole "
                          "fleet in one ragged pass")
     ap.add_argument("--sweep-batches", default="1,2,4",
-                    help="comma-separated decode batch sizes for --sweep")
+                    help="comma-separated decode batch sizes for --sweep "
+                         "and --optimize")
+    ap.add_argument("--optimize", action="store_true",
+                    help="what-if optimizer: Pareto search over (device, "
+                         "replicas, batch size) fleet candidates for the "
+                         "traced decode step (time vs $/hr frontier)")
+    ap.add_argument("--max-replicas", type=int, default=8,
+                    help="replica-count ceiling for --optimize "
+                         "(powers of two up to this)")
     ap.add_argument("--serve", action="store_true",
                     help="run the HTTP prediction service instead of the "
                          "token-serving demo")
@@ -285,7 +299,7 @@ def main():
         print(f"  req {r.uid}: {r.output.tolist()}")
 
     planner = None
-    if args.fleet or args.sweep:
+    if args.fleet or args.sweep or args.optimize:
         from repro.core import HabitatPredictor
         from repro.core import default_predictor
         from repro.serve.fleet import FleetPlanner
@@ -317,7 +331,7 @@ def main():
             print(f"\nbest samples/$: {rentable[0].device} "
                   f"(cache hit rate {planner.stats.hit_rate:.0%})")
 
-    if args.sweep:
+    if args.sweep or args.optimize:
         from repro.core import OperationTracker
         from repro.models import transformer as tfm
         from repro.serve.fleet import format_sweep
@@ -331,6 +345,8 @@ def main():
                 lambda p, t, s: tfm.decode_step(p, cfg, t, s),
                 params, jnp.asarray(eng.last_token), eng.state,
                 label=f"{args.arch}-decode-b{b}"))
+
+    if args.sweep:
         t0 = time.perf_counter()
         times = planner.sweep(traces)
         dt = (time.perf_counter() - t0) * 1e3
@@ -343,6 +359,29 @@ def main():
         print(f"sweep cache: hits={planner.stats.hits} "
               f"misses={planner.stats.misses} "
               f"(hit rate {planner.stats.hit_rate:.0%})")
+
+    if args.optimize:
+        from repro.serve.optimizer import format_frontier
+        from repro.serve.service import PredictionService
+
+        # a zero-window, non-adaptive service: the CLI is the only
+        # client, so there is no concurrent traffic for a coalescing
+        # window to collect — each generation should fire immediately
+        service = PredictionService(planner=planner,
+                                    coalesce_window_ms=0.0,
+                                    adaptive_window=False)
+        passes0 = planner.engine_pass_count()   # --sweep may have run
+        t0 = time.perf_counter()
+        result = service.optimize(traces, batches,
+                                  max_replicas=args.max_replicas)
+        dt = (time.perf_counter() - t0) * 1e3
+        print(f"\nwhat-if optimizer: time-vs-cost frontier over "
+              f"{len(traces)} batch sizes x {len(planner.fleet)} devices "
+              f"x replicas<={args.max_replicas} in {dt:.1f} ms:")
+        print(format_frontier(result))
+        print(f"engine passes for the whole search: "
+              f"{planner.engine_pass_count() - passes0} "
+              f"(<= {result.generations} generations)")
 
 
 if __name__ == "__main__":

@@ -33,6 +33,11 @@ neighbors — see ``docs/architecture.md`` for the full tour):
   front door's backpressure policy.  Requests are priced in estimated
   engine-seconds by the same fitted cost model the split planner uses;
   work the worker cannot afford sheds with 429/503 + Retry-After.
+* :mod:`repro.serve.optimizer` — :class:`WhatIfOptimizer`: the
+  generation-batched Pareto search ("which fleet should I run?").
+  Each generation's candidate cells are deduped into ONE coalesced
+  sweep, and dominance pruning (:mod:`repro.core.frontier`) shrinks the
+  population before any engine work is priced.
 * :mod:`repro.serve.http` / :mod:`repro.serve.aserver` — the two front
   ends over identical wire formats: the PR 3 threaded server (baseline
   and kill switch) and the asyncio server (event-loop concurrency, SSE
@@ -51,6 +56,8 @@ from repro.serve.cache import CacheStats, LRUCache, SqliteCache, make_backend
 from repro.serve.engine import ServingEngine, Request
 from repro.serve.fleet import (FleetChoice, FleetPlanner, format_fleet,
                                format_sweep, rank_rows)
+from repro.serve.optimizer import (FleetConfig, OptimizeResult,
+                                   WhatIfOptimizer, format_frontier)
 from repro.serve.service import PredictionService, adaptive_window_ms
 
 #: lazily exported (PEP 562): netcache/router are runnable with
@@ -69,8 +76,9 @@ def __getattr__(name: str):
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = ["AdmissionController", "AdmissionError", "CacheServer",
-           "CacheStats", "FingerprintRouter", "FleetChoice", "FleetPlanner",
-           "LRUCache", "NetCache", "PredictionService", "Request",
-           "RouterServer", "ServingEngine", "SqliteCache", "Ticket",
-           "adaptive_window_ms", "format_fleet", "format_sweep",
-           "make_backend", "rank_rows"]
+           "CacheStats", "FingerprintRouter", "FleetChoice", "FleetConfig",
+           "FleetPlanner", "LRUCache", "NetCache", "OptimizeResult",
+           "PredictionService", "Request", "RouterServer", "ServingEngine",
+           "SqliteCache", "Ticket", "WhatIfOptimizer",
+           "adaptive_window_ms", "format_fleet", "format_frontier",
+           "format_sweep", "make_backend", "rank_rows"]

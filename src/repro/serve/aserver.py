@@ -21,6 +21,11 @@ formats, same ``PredictionClient``):
   "dests"?}`` -> ``{"label", "ranking"}``
 * ``POST /sweep`` — bulk lane; ``{"traces", "dests"?}`` ->
   ``{"labels", "times"}``
+* ``POST /optimize`` — bulk lane; the generation-batched what-if Pareto
+  search (:mod:`repro.serve.optimizer`).  The search loop blocks on its
+  per-generation coalescer handles, so it runs on the default executor
+  (``run_in_executor``) — the loop thread keeps multiplexing while the
+  search's generations ride the coalescer alongside live traffic.
 * ``POST /sweep/stream`` — bulk lane, **SSE streaming**: one
   ``text/event-stream`` response with a ``row`` event per trace *as its
   batch completes* (long sweeps deliver incrementally instead of one
@@ -263,6 +268,8 @@ class AsyncPredictionServer:
             await self._post_rank(body, writer)
         elif method == "POST" and path == "/sweep":
             await self._post_sweep(body, writer)
+        elif method == "POST" and path == "/optimize":
+            await self._post_optimize(body, writer)
         elif method == "POST" and path == "/sweep/stream":
             await self._post_sweep_stream(body, writer)
         else:
@@ -348,6 +355,48 @@ class AsyncPredictionServer:
             rows = await self._await_handle(handle)
             writer.write(_response(
                 200, service.encode_sweep(traces, rows)))
+        except (KeyError, ValueError, TypeError) as e:
+            writer.write(_response(
+                400, {"error": f"{type(e).__name__}: {e}"}))
+        except Exception as e:
+            writer.write(_response(
+                500, {"error": f"{type(e).__name__}: {e}"}))
+        finally:
+            service.admission.release(ticket)
+
+    async def _post_optimize(self, body: bytes,
+                             writer: asyncio.StreamWriter) -> None:
+        """What-if Pareto search — bulk lane, executor-offloaded.
+
+        Unlike rank/sweep there is no single coalescer handle to bridge:
+        the optimizer is a *loop* of submissions that blocks between
+        generations, so the whole search runs on the default thread-pool
+        executor while its per-generation sweeps ride the coalescer like
+        any other traffic.  Admission is still decided on the loop
+        thread before any engine work, same as every other route."""
+        from functools import partial
+
+        service = self.service
+        try:
+            traces, batch_sizes, dests, knobs = service.decode_optimize(
+                self._decode_body(body))
+        except (json.JSONDecodeError, KeyError, ValueError, TypeError,
+                UnicodeDecodeError) as e:
+            writer.write(_response(
+                400, {"error": f"{type(e).__name__}: {e}"}))
+            return
+        try:
+            ticket = service.admit_request("optimize", traces, dests)
+        except AdmissionError as e:
+            writer.write(_admission_response(e))
+            return
+        try:
+            from repro.serve.optimizer import encode_optimize
+            loop = asyncio.get_running_loop()
+            result = await loop.run_in_executor(
+                None, partial(service.optimize, traces, batch_sizes,
+                              dests=dests, **knobs))
+            writer.write(_response(200, encode_optimize(result)))
         except (KeyError, ValueError, TypeError) as e:
             writer.write(_response(
                 400, {"error": f"{type(e).__name__}: {e}"}))

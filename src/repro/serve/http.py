@@ -15,8 +15,12 @@ Endpoints (all JSON):
   ``{"label", "ranking": [FleetChoice dicts, best first]}``
 * ``POST /sweep`` — ``{"traces": [<trace doc>, ...], "dests"?: [...]}``
   -> ``{"labels", "times": [{device: ms}, ...]}``
-* ``GET /stats``  — request/coalescing/cache/admission/engine-pass
-  accounting (field reference in ``docs/serving.md``)
+* ``POST /optimize`` — ``{"traces": [...], "batch_sizes": [int, ...],
+  "dests"?: [...], search knobs...}`` -> ``{"frontier": [...],
+  "search": {...}}`` — the generation-batched what-if Pareto search
+  (see :mod:`repro.serve.optimizer`); bulk admission lane
+* ``GET /stats``  — request/coalescing/cache/admission/optimizer/
+  engine-pass accounting (field reference in ``docs/serving.md``)
 * ``GET /healthz`` — liveness probe
 
 Overload: both front ends run the same admission controller (see
@@ -99,7 +103,7 @@ class _Handler(BaseHTTPRequestHandler):
 
     def do_POST(self) -> None:  # noqa: N802
         service: PredictionService = self.server.service
-        if self.path not in ("/rank", "/sweep"):
+        if self.path not in ("/rank", "/sweep", "/optimize"):
             self._reply(404, {"error": f"unknown path {self.path!r}"})
             return
         payload = self._read_json()
@@ -108,6 +112,8 @@ class _Handler(BaseHTTPRequestHandler):
         try:
             if self.path == "/rank":
                 self._reply(200, service.rank_request(payload))
+            elif self.path == "/optimize":
+                self._reply(200, service.optimize_request(payload))
             else:
                 self._reply(200, service.sweep_request(payload))
         except AdmissionError as e:
@@ -223,6 +229,23 @@ class PredictionClient:
             payload["dests"] = list(dests)
         return self._post("/sweep", payload)["times"]
 
+    def optimize(self, traces, batch_sizes: Sequence[int],
+                 dests: Optional[Sequence[str]] = None,
+                 **knobs) -> Dict:
+        """What-if Pareto search (``POST /optimize``).
+
+        Returns the full wire document: ``{"frontier": [config dicts,
+        fastest first], "search": {generations, sweeps, candidates,
+        cells_priced, cells_deduped, converged}}``.  ``knobs`` pass
+        through to the server (``epoch_samples``, ``max_replicas``,
+        ``generation_size``, ``max_generations``, ``frontier_cap``,
+        ``seed``)."""
+        payload = {"traces": [self._encode_trace(t) for t in traces],
+                   "batch_sizes": list(batch_sizes), **knobs}
+        if dests is not None:
+            payload["dests"] = list(dests)
+        return self._post("/optimize", payload)
+
     def sweep_stream(self, traces,
                      dests: Optional[Sequence[str]] = None
                      ) -> Iterator[Tuple[str, Dict]]:
@@ -278,6 +301,15 @@ def log_engine_caches(service: PredictionService) -> None:
           f"shed_503={adm.get('shed_503', 0)} "
           f"shed_bulk={shed.get('bulk', 0)} "
           f"shed_interactive={shed.get('interactive', 0)}", flush=True)
+    opt = stats.get("optimizer", {})
+    print("optimizer on shutdown: "
+          f"searches={opt.get('optimize_searches', 0)} "
+          f"generations={opt.get('optimize_generations', 0)} "
+          f"sweeps={opt.get('optimize_sweeps', 0)} "
+          f"candidates={opt.get('optimize_candidates', 0)} "
+          f"cells_priced={opt.get('optimize_cells_priced', 0)} "
+          f"cells_deduped={opt.get('optimize_cells_deduped', 0)}",
+          flush=True)
     caches = stats.get("engine_caches", {})
     parts = []
     for name, c in caches.items():

@@ -88,6 +88,8 @@ from repro.core.trace import TrackedTrace
 from repro.serve.admission import AdmissionController, Ticket
 from repro.serve.cache import BackendLike
 from repro.serve.fleet import FleetChoice, FleetPlanner, rank_rows
+from repro.serve.optimizer import OptimizeResult, WhatIfOptimizer, \
+    encode_optimize
 
 __all__ = ["PredictionService", "adaptive_window_ms"]
 
@@ -252,7 +254,7 @@ class PredictionService:
         # counters (every mutation AND every read happens under
         # self._cond — including the union counters bumped from the
         # leader's _execute, which runs outside the queue lock)
-        self._requests = {"rank": 0, "sweep": 0}
+        self._requests = {"rank": 0, "sweep": 0, "optimize": 0}
         self._batches = 0
         self._coalesced_requests = 0    # requests that shared their batch
         self._max_batch = 0
@@ -264,6 +266,17 @@ class PredictionService:
         #: seconds) — the cost model's time fit uses the cold cells, the
         #: warmth discount uses the cold/rectangle ratio
         self._pass_samples: List[Tuple[int, int, float]] = []
+        # what-if optimizer accounting (the ``/stats`` "optimizer"
+        # block, mirroring the admission block): searches served, total
+        # generations and engine sweeps those searches ran, candidates
+        # priced, and the cell-dedup win — candidate cell references
+        # served without engine work
+        self._opt_searches = 0
+        self._opt_generations = 0
+        self._opt_sweeps = 0
+        self._opt_candidates = 0
+        self._opt_cells_priced = 0
+        self._opt_cells_deduped = 0
 
     # -- public query API ---------------------------------------------------
     def rank(self, trace: TrackedTrace, batch_size: int,
@@ -277,6 +290,32 @@ class PredictionService:
               ) -> List[Dict[str, float]]:
         """Coalesced equivalent of ``FleetPlanner.sweep`` (same answer)."""
         return self._submit(self.submit_sweep(traces, dests))
+
+    def optimize(self, traces: Sequence[TrackedTrace],
+                 batch_sizes: Sequence[int],
+                 dests: Optional[Sequence[str]] = None,
+                 **knobs) -> OptimizeResult:
+        """Run one what-if Pareto search through this service.
+
+        The search's generations ride the coalescer: each generation's
+        deduped cell set is ONE ``sweep`` submission, so engine passes
+        are bounded by generations and can be shared with concurrent
+        traffic (``bench_optimizer`` counter-asserts the bound).
+        ``knobs`` forward to :class:`~repro.serve.optimizer.
+        WhatIfOptimizer` (``epoch_samples``, ``max_replicas``,
+        ``generation_size``, ``max_generations``, ``frontier_cap``,
+        ``seed``)."""
+        result = WhatIfOptimizer(self, traces, batch_sizes,
+                                 dests=dests, **knobs).run()
+        with self._cond:
+            self._requests["optimize"] += 1
+            self._opt_searches += 1
+            self._opt_generations += result.generations
+            self._opt_sweeps += result.sweeps
+            self._opt_candidates += result.candidates
+            self._opt_cells_priced += result.cells_priced
+            self._opt_cells_deduped += result.cells_deduped
+        return result
 
     # -- non-blocking submission --------------------------------------------
     def submit_rank(self, trace: TrackedTrace, batch_size: int,
@@ -379,6 +418,46 @@ class PredictionService:
             d["cost_normalized"] = "Infinity"
         return d
 
+    def decode_optimize(self, payload: Union[str, Dict]
+                        ) -> Tuple[List[TrackedTrace], List[int],
+                                   Optional[List], Dict]:
+        """Decode a wire optimize payload.
+
+        Returns ``(traces, batch_sizes, dests, knobs)`` where ``knobs``
+        holds only the recognized search parameters — unknown keys are
+        ignored so clients can pin newer knobs without breaking older
+        servers.  Shape errors (missing keys, misaligned lists, bad
+        numbers) raise KeyError/ValueError/TypeError here, before
+        admission or any engine work."""
+        p = json.loads(payload) if isinstance(payload, str) else payload
+        traces = [self._trace_from_wire(t) for t in p["traces"]]
+        batch_sizes = [int(b) for b in p["batch_sizes"]]
+        knobs = {k: p[k] for k in ("epoch_samples", "max_replicas",
+                                   "generation_size", "max_generations",
+                                   "frontier_cap", "seed") if k in p}
+        return traces, batch_sizes, p.get("dests"), knobs
+
+    def optimize_request(self, payload: Union[str, Dict]) -> Dict:
+        """Serve one wire-format what-if search (bulk-lane admission).
+
+        Payload: ``{"traces": [<trace doc>, ...], "batch_sizes":
+        [int, ...], "dests"?: [...], "epoch_samples"?, "max_replicas"?,
+        "generation_size"?, "max_generations"?, "frontier_cap"?,
+        "seed"?}``.  Returns ``{"frontier": [...], "search": {...}}``
+        (see :func:`repro.serve.optimizer.encode_optimize`).  Admission
+        prices the full traces x devices cell rectangle — an upper
+        bound on every generation's engine work, since cells are priced
+        at most once per search.  Raises
+        :class:`~repro.serve.admission.AdmissionError` when shed."""
+        traces, batch_sizes, dests, knobs = self.decode_optimize(payload)
+        ticket = self.admit_request("optimize", traces, dests)
+        try:
+            result = self.optimize(traces, batch_sizes, dests=dests,
+                                   **knobs)
+        finally:
+            self.admission.release(ticket)
+        return encode_optimize(result)
+
     def sweep_request(self, payload: Union[str, Dict]) -> Dict:
         """Serve one wire-format sweep query (bulk-lane admission).
 
@@ -458,6 +537,14 @@ class PredictionService:
                 "union_grid": self.union_grid,
                 "split_planner": self.split_planner,
             }
+            optimizer = {
+                "optimize_searches": self._opt_searches,
+                "optimize_generations": self._opt_generations,
+                "optimize_sweeps": self._opt_sweeps,
+                "optimize_candidates": self._opt_candidates,
+                "optimize_cells_priced": self._opt_cells_priced,
+                "optimize_cells_deduped": self._opt_cells_deduped,
+            }
             n_samples = len(self._pass_samples)
         coalescing["effective_window_ms"] = round(
             self.effective_window_ms(), 3)
@@ -479,6 +566,7 @@ class PredictionService:
                                 "warm_discount": self._warm_discount(),
                                 "samples": n_samples},
                 "admission": self.admission.stats(),
+                "optimizer": optimizer,
                 "cache": cache,
                 "engine_caches": self.planner.engine_cache_stats(),
                 "fleet": self.planner.fleet}

@@ -1,0 +1,207 @@
+"""Property + regression suite for the Pareto frontier math.
+
+Two layers, same shape as the other property suites:
+
+  * deterministic seeded cases (always run), including the NaN-cost
+    regressions for ``cost_per_hour=None`` devices, and
+  * hypothesis properties (dev-only dependency, skipped when absent)
+    checking the vectorized ``pareto_mask`` against the scalar
+    ``dominates`` reference on random objective clouds.
+
+The invariants (ISSUE 8): the frontier is a subset of the candidates,
+no frontier point dominates another frontier point, dominated points
+never survive, and the returned ordering is deterministic under input
+permutation."""
+
+import numpy as np
+import pytest
+
+from repro.core import devices
+from repro.core.frontier import (dominates, frontier_indices, pareto_mask,
+                                 thin_indices)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _brute_mask(t, c):
+    """O(n^2) reference built ONLY on the scalar ``dominates``."""
+    n = len(t)
+    return np.asarray([not any(dominates(t[j], c[j], t[i], c[i])
+                               for j in range(n) if j != i)
+                       for i in range(n)])
+
+
+# -- deterministic cases ----------------------------------------------------
+def test_simple_frontier():
+    t = np.asarray([1.0, 2.0, 3.0, 2.0])
+    c = np.asarray([9.0, 4.0, 1.0, 8.0])
+    mask = pareto_mask(t, c)
+    assert mask.tolist() == [True, True, True, False]
+    # ordering: time asc, then cost asc, then index asc
+    assert frontier_indices(t, c).tolist() == [0, 1, 2]
+
+
+def test_duplicates_all_kept():
+    t = np.asarray([1.0, 1.0, 2.0])
+    c = np.asarray([5.0, 5.0, 9.0])
+    mask = pareto_mask(t, c)
+    # equal points do not dominate each other: both copies survive
+    assert mask.tolist() == [True, True, False]
+
+
+def test_empty_and_singleton():
+    assert pareto_mask([], []).shape == (0,)
+    assert frontier_indices([], []).shape == (0,)
+    assert pareto_mask([3.0], [np.nan]).tolist() == [True]
+
+
+def test_nan_time_raises():
+    with pytest.raises(ValueError):
+        pareto_mask([np.nan], [1.0])
+
+
+def test_ordering_is_permutation_invariant():
+    rng = np.random.default_rng(0)
+    t = rng.uniform(1, 10, 40)
+    c = rng.uniform(1, 10, 40)
+    base = frontier_indices(t, c)
+    perm = rng.permutation(40)
+    permuted = frontier_indices(t[perm], c[perm])
+    # mapped back through the permutation, the *sequence* is identical
+    assert perm[permuted].tolist() == base.tolist()
+
+
+def test_thin_keeps_endpoints_and_cap():
+    ordered = np.arange(100, 200)
+    for cap in (1, 2, 3, 7, 99, 100, 500):
+        kept = thin_indices(ordered, cap)
+        assert len(kept) <= cap
+        assert kept[0] == 100
+        if cap >= 2:
+            assert kept[-1] == 199
+        assert set(kept).issubset(set(ordered))
+    with pytest.raises(ValueError):
+        thin_indices(ordered, 0)
+
+
+# -- NaN-cost regressions (cost_per_hour=None devices) ----------------------
+def test_nan_cost_rides_time_frontier_only_when_fastest():
+    # unrentable-but-fastest survives; unrentable-and-slower never does
+    t = np.asarray([1.0, 2.0, 3.0])
+    c = np.asarray([np.nan, 5.0, np.nan])
+    assert pareto_mask(t, c).tolist() == [True, True, False]
+
+
+def test_nan_cost_never_dominates_priced():
+    # equal time: the priced point strictly dominates the NaN one
+    assert dominates(2.0, 5.0, 2.0, np.nan)
+    assert not dominates(2.0, np.nan, 2.0, 5.0)
+    # two unrentables compare on time alone
+    assert dominates(1.0, np.nan, 2.0, np.nan)
+
+
+def test_cost_frontier_excludes_nan_explicitly():
+    t = np.asarray([1.0, 5.0, 9.0])
+    c = np.asarray([np.nan, 2.0, 2.0])
+    idx = frontier_indices(t, c, objective="cost")
+    # both priced points tie at min cost; the NaN point is out even
+    # though NaN-as-inf comparisons would be False either way
+    assert idx.tolist() == [1, 2]
+    # all-NaN: an empty $-frontier, not a crash or an arbitrary winner
+    assert frontier_indices(t, [np.nan] * 3, objective="cost").size == 0
+
+
+def test_time_frontier_keeps_nan_cost():
+    t = np.asarray([4.0, 4.0, 7.0])
+    c = np.asarray([np.nan, 3.0, 1.0])
+    # both min-time points survive; the priced one sorts first (cost
+    # asc within equal time — NaN compares as +inf)
+    assert frontier_indices(t, c, objective="time").tolist() == [1, 0]
+
+
+def test_device_registry_nan_costs_flow_through():
+    """End-to-end with the real registry: every device appears in the
+    objective arrays, and the unrentable ones are handled per contract."""
+    names = sorted(devices.all_devices())
+    arrays = devices.as_arrays(names)
+    costs = np.asarray(arrays.cost_per_hour, np.float64)
+    assert np.isnan(costs).any(), "registry lost its unrentable devices"
+    rng = np.random.default_rng(1)
+    times = rng.uniform(1.0, 20.0, len(names))
+    mask = pareto_mask(times, costs)
+    brute = _brute_mask(times, costs)
+    assert mask.tolist() == brute.tolist()
+    # the single fastest device always survives, rentable or not
+    assert mask[int(np.argmin(times))]
+
+
+def test_fastest_unrentable_survives():
+    # regression for the +inf sentinel edge: the strictly-fastest point
+    # has NaN cost, and inf < inf would wrongly drop it without the
+    # explicit first-row keep
+    t = np.asarray([1.0, 2.0, 3.0])
+    c = np.asarray([np.nan, np.nan, 2.0])
+    assert pareto_mask(t, c).tolist() == [True, False, True]
+
+
+# -- hypothesis properties --------------------------------------------------
+if HAVE_HYPOTHESIS:
+    finite_time = st.floats(min_value=1e-3, max_value=1e6,
+                            allow_nan=False, allow_infinity=False)
+    maybe_nan_cost = st.one_of(
+        st.floats(min_value=0.0, max_value=1e6,
+                  allow_nan=False, allow_infinity=False),
+        st.just(float("nan")))
+    clouds = st.lists(st.tuples(finite_time, maybe_nan_cost),
+                      min_size=1, max_size=60)
+
+    @given(clouds)
+    @settings(max_examples=120, deadline=None)
+    def test_mask_matches_scalar_reference(points):
+        t = np.asarray([p[0] for p in points])
+        c = np.asarray([p[1] for p in points])
+        assert pareto_mask(t, c).tolist() == _brute_mask(t, c).tolist()
+
+    @given(clouds)
+    @settings(max_examples=120, deadline=None)
+    def test_frontier_invariants(points):
+        t = np.asarray([p[0] for p in points])
+        c = np.asarray([p[1] for p in points])
+        idx = frontier_indices(t, c)
+        # frontier is a subset of the candidates, without repeats
+        assert len(set(idx.tolist())) == len(idx)
+        assert ((idx >= 0) & (idx < len(t))).all()
+        # no frontier point dominates another frontier point
+        for i in idx:
+            for j in idx:
+                if i != j:
+                    assert not dominates(t[i], c[i], t[j], c[j])
+        # every non-frontier point is dominated by someone
+        out = set(range(len(t))) - set(idx.tolist())
+        for i in out:
+            assert any(dominates(t[j], c[j], t[i], c[i])
+                       for j in range(len(t)) if j != i)
+        # ordering is (time asc, cost-as-inf asc, index asc)
+        c_eff = np.where(np.isnan(c), np.inf, c)
+        keys = [(t[i], c_eff[i], i) for i in idx]
+        assert keys == sorted(keys)
+
+    @given(clouds, st.integers(min_value=1, max_value=10))
+    @settings(max_examples=60, deadline=None)
+    def test_thin_is_an_ordered_subsequence(points, cap):
+        t = np.asarray([p[0] for p in points])
+        c = np.asarray([p[1] for p in points])
+        ordered = frontier_indices(t, c)
+        kept = thin_indices(ordered, cap)
+        assert len(kept) <= max(cap, 1)
+        pos = [ordered.tolist().index(k) for k in kept]
+        assert pos == sorted(pos)       # order preserved
+        if ordered.size:
+            assert kept[0] == ordered[0]
+            if cap >= 2:
+                assert kept[-1] == ordered[-1]

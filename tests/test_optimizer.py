@@ -1,0 +1,248 @@
+"""What-if optimizer: parity, engine-pass bounds, wire + front ends.
+
+The contracts under test (ISSUE 8):
+
+  * bitwise parity — every candidate the search priced carries an
+    ``iter_ms`` identical to a direct ``FleetPlanner.sweep`` of that
+    (trace, device) cell on a fresh planner (the analytical paths are
+    bitwise reproducible);
+  * engine-pass bound — a whole search through the coalescer costs at
+    most one engine pass per generation (counter-asserted);
+  * determinism — same seed, same frontier, byte for byte;
+  * NaN-cost candidates (unrentable devices) survive only via the
+    time-only frontier and never break JSON encoding;
+  * both front ends serve ``POST /optimize`` with the shared wire
+    format, admission prices it on the bulk lane, and ``/stats`` grows
+    the optimizer block.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import HabitatPredictor, devices
+from repro.core.costmodel import OpCost
+from repro.core.frontier import dominates
+from repro.core.trace import Op, TrackedTrace
+from repro.serve.admission import AdmissionController
+from repro.serve.fleet import FleetPlanner
+from repro.serve.http import PredictionClient, PredictionServer
+from repro.serve.optimizer import (WhatIfOptimizer, encode_optimize,
+                                   format_frontier)
+from repro.serve.service import PredictionService
+
+DEVS = sorted(devices.all_devices())
+ALIKE = ("add", "mul", "tanh", "reduce_sum", "transpose")
+
+
+def _trace(n_ops, seed, label):
+    rng = np.random.default_rng(seed)
+    ops = []
+    for _ in range(n_ops):
+        kind = ALIKE[int(rng.integers(len(ALIKE)))]
+        nbytes = float(np.exp(rng.uniform(np.log(1e4), np.log(1e8))))
+        ops.append(Op(name=kind, kind=kind,
+                      cost=OpCost(nbytes * 0.5, nbytes * 0.6,
+                                  nbytes * 0.4)))
+    return TrackedTrace(ops=ops, origin_device="T4", label=label).measure()
+
+
+TRACES = [_trace(60, 100 + i, f"model-bs{b}")
+          for i, b in enumerate((16, 32, 64))]
+BATCHES = [16, 32, 64]
+
+
+def _service(**kw):
+    kw.setdefault("coalesce_window_ms", 0.0)
+    kw.setdefault("adaptive_window", False)
+    return PredictionService(predictor=HabitatPredictor(), **kw)
+
+
+def test_candidates_bitwise_equal_direct_sweep():
+    service = _service()
+    result = service.optimize(TRACES, BATCHES, max_replicas=4, seed=3)
+    assert result.candidates >= 45    # the replicas=1 grid at minimum
+    fresh = FleetPlanner(predictor=HabitatPredictor())
+    for c in result.evaluated:
+        direct = fresh.sweep([TRACES[c.trace_idx]],
+                             dests=[c.device])[0][c.device]
+        assert direct == c.iter_ms    # bitwise, not approx
+
+
+def test_engine_passes_bounded_by_generations():
+    service = _service()
+    result = service.optimize(TRACES, BATCHES, max_replicas=8, seed=0)
+    assert service.planner.engine_pass_count() <= result.generations
+    assert result.sweeps <= result.generations
+    # dedup must actually fire: every generation past the first re-uses
+    # cells the rectangle already priced
+    assert result.cells_deduped > 0
+    assert result.cells_priced <= len(TRACES) * len(DEVS)
+
+
+def test_same_seed_same_frontier():
+    r1 = _service().optimize(TRACES, BATCHES, max_replicas=8, seed=11)
+    r2 = _service().optimize(TRACES, BATCHES, max_replicas=8, seed=11)
+    assert r1.frontier == r2.frontier
+    assert encode_optimize(r1) == encode_optimize(r2)
+
+
+def test_frontier_is_nondominated_and_ordered():
+    result = _service().optimize(TRACES, BATCHES, max_replicas=8, seed=5)
+    front = result.frontier
+    assert front, "search produced an empty frontier"
+    as_obj = [(c.time_s, float("nan") if c.cost_per_hour is None
+               else c.cost_per_hour) for c in front]
+    for i, (ti, ci) in enumerate(as_obj):
+        for j, (tj, cj) in enumerate(as_obj):
+            if i != j:
+                assert not dominates(ti, ci, tj, cj)
+    times = [c.time_s for c in front]
+    assert times == sorted(times)     # fastest first
+    # nothing the search evaluated dominates a frontier point
+    for e in result.evaluated:
+        ce = float("nan") if e.cost_per_hour is None else e.cost_per_hour
+        for ti, ci in as_obj:
+            assert not dominates(e.time_s, ce, ti, ci)
+
+
+def test_unrentable_devices_kept_time_only():
+    # a fleet of one unrentable + one priced device: the unrentable one
+    # may only appear with cost_per_hour None, and JSON stays strict
+    result = _service().optimize(
+        TRACES[:1], BATCHES[:1], dests=["P4000", "V100"],
+        max_replicas=2, seed=0)
+    devs = {c.device for c in result.frontier}
+    assert "V100" in devs
+    for c in result.frontier:
+        if c.device == "P4000":
+            assert c.cost_per_hour is None
+    json.dumps(encode_optimize(result), allow_nan=False)
+    assert "candidates" in format_frontier(result)
+
+
+def test_validation_errors():
+    service = _service()
+    with pytest.raises(ValueError):
+        service.optimize(TRACES, [16, 32])          # length mismatch
+    with pytest.raises(ValueError):
+        service.optimize(TRACES, [16, 32, 0])       # non-positive batch
+    with pytest.raises(ValueError):
+        service.optimize([], [])                    # no traces
+    with pytest.raises(ValueError):
+        service.optimize(TRACES, BATCHES, max_generations=10**9)
+    with pytest.raises(KeyError):
+        service.optimize(TRACES, BATCHES, dests=["not-a-device"])
+    with pytest.raises(ValueError):
+        WhatIfOptimizer(service, TRACES, BATCHES, epoch_samples=-1.0)
+
+
+def test_optimizer_works_on_bare_planner():
+    # duck-typed inner loop: a FleetPlanner (no coalescer) works too
+    planner = FleetPlanner(predictor=HabitatPredictor())
+    result = WhatIfOptimizer(planner, TRACES, BATCHES, dests=DEVS,
+                             max_replicas=4, seed=0).run()
+    assert result.sweeps >= 1 and result.frontier
+
+
+def test_stats_and_requests_counters():
+    service = _service()
+    before = service.stats()["optimizer"]
+    assert before == {"optimize_searches": 0, "optimize_generations": 0,
+                      "optimize_sweeps": 0, "optimize_candidates": 0,
+                      "optimize_cells_priced": 0,
+                      "optimize_cells_deduped": 0}
+    result = service.optimize(TRACES, BATCHES, max_replicas=4, seed=0)
+    stats = service.stats()
+    opt = stats["optimizer"]
+    assert opt["optimize_searches"] == 1
+    assert opt["optimize_generations"] == result.generations
+    assert opt["optimize_cells_deduped"] == result.cells_deduped
+    assert opt["optimize_candidates"] == result.candidates
+    assert stats["requests"]["optimize"] == 1
+
+
+def test_wire_round_trip_and_admission_lane():
+    service = _service()
+    payload = {"traces": [t.to_dict() for t in TRACES],
+               "batch_sizes": BATCHES, "max_replicas": 4, "seed": 2,
+               "max_generations": 4}
+    doc = service.optimize_request(json.dumps(payload))
+    json.dumps(doc, allow_nan=False)
+    assert doc["search"]["generations"] <= 4
+    assert doc["frontier"]
+    direct = service.optimize(TRACES, BATCHES, max_replicas=4, seed=2,
+                              max_generations=4)
+    assert doc == encode_optimize(direct)   # wire == in-process, bitwise
+    # the lane is bulk: admission counted it there
+    adm = service.stats()["admission"]
+    assert adm["admitted"]["bulk"] >= 1
+
+
+def test_wire_shed_maps_to_admission_error():
+    from repro.serve.admission import AdmissionError
+    service = PredictionService(
+        predictor=HabitatPredictor(), coalesce_window_ms=0.0,
+        adaptive_window=False,
+        admission=AdmissionController(max_queue=64, max_inflight_s=1e-12))
+    payload = {"traces": [t.to_dict() for t in TRACES],
+               "batch_sizes": BATCHES}
+    with pytest.raises(AdmissionError) as ei:
+        service.optimize_request(payload)
+    assert ei.value.lane == "bulk"
+
+
+def test_wire_validation_is_400_shaped():
+    service = _service()
+    with pytest.raises((KeyError, ValueError, TypeError)):
+        service.optimize_request({"traces": [TRACES[0].to_dict()]})
+    with pytest.raises((KeyError, ValueError, TypeError)):
+        service.optimize_request(
+            {"traces": [TRACES[0].to_dict()], "batch_sizes": [16, 32]})
+
+
+@pytest.fixture(scope="module")
+def http_client():
+    service = PredictionService(predictor=HabitatPredictor(),
+                                coalesce_window_ms=0.0,
+                                adaptive_window=False)
+    server = PredictionServer(service).start()
+    yield PredictionClient(server.url), service
+    server.shutdown()
+
+
+def test_http_optimize_route(http_client):
+    client, service = http_client
+    doc = client.optimize(TRACES, BATCHES, max_replicas=4, seed=9,
+                          max_generations=3)
+    direct = _service().optimize(TRACES, BATCHES, max_replicas=4, seed=9,
+                                 max_generations=3)
+    assert doc == encode_optimize(direct)   # HTTP == in-process
+    assert client.stats()["optimizer"]["optimize_searches"] >= 1
+
+
+def test_http_optimize_bad_request_is_400(http_client):
+    import urllib.error
+    client, _ = http_client
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        client.optimize(TRACES, [1])        # misaligned batch_sizes
+    assert ei.value.code == 400
+
+
+def test_aserver_optimize_route():
+    from repro.serve.aserver import AsyncPredictionServer
+    service = PredictionService(predictor=HabitatPredictor(),
+                                coalesce_window_ms=0.0,
+                                adaptive_window=False)
+    server = AsyncPredictionServer(service).start()
+    try:
+        client = PredictionClient(server.url)
+        doc = client.optimize(TRACES, BATCHES, max_replicas=4, seed=9,
+                              max_generations=3)
+        direct = _service().optimize(TRACES, BATCHES, max_replicas=4,
+                                     seed=9, max_generations=3)
+        assert doc == encode_optimize(direct)   # async == threaded
+        assert client.stats()["optimizer"]["optimize_searches"] >= 1
+    finally:
+        server.shutdown()
