@@ -1,0 +1,303 @@
+"""Chaos gate: deadlines, supervised restart, and fault-injection parity.
+
+The fault-tolerant serving tier's acceptance bench (``serve/faults.py``
++ deadline plumbing + ``launch/serve.WorkerSupervisor``).  Three phases,
+each a hard gate:
+
+Phase A — deadlines under slowness: ``engine.pass`` is armed with a
+10x injected delay (10x the measured fault-free pass time) and a burst
+of deadline-carrying rank queries rides the coalescer alongside
+unbounded ones.  Gate: >= 95% of the deadline-carrying requests are
+answered or rejected (``DeadlineExceeded``) within deadline + 100 ms —
+a lapsed deadline wakes the waiter, it never rides out the slow pass —
+while every unbounded member still completes bitwise-correct (per-query
+cancellation does not poison the shared batch).
+
+Phase B — supervised restart: a threaded burst through the fingerprint
+router with one SUPERVISED worker SIGKILLed mid-burst.  Gate: zero lost
+requests (failover re-hashes onto survivors), the supervisor restarts
+the corpse on the SAME port, and the router's health sweep re-admits it
+within 3 sweep periods of the worker being back up.
+
+Phase C — fault parity: with ``engine.pass:error`` armed at p > 0 the
+service falls back to per-query execution; every COMPLETED answer must
+be bitwise-identical to the fault-free oracle.  Injected faults may
+slow or shed requests — they may never corrupt an answer.
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+if __package__ in (None, ""):   # direct invocation: python benchmarks/...
+    _ROOT = Path(__file__).resolve().parents[1]
+    sys.path.insert(0, str(_ROOT))
+    sys.path.insert(0, str(_ROOT / "src"))
+
+import threading
+import time
+import urllib.request
+from typing import List, Tuple
+
+from benchmarks.common import Csv
+from benchmarks.bench_fleet import synthetic_trace
+from repro.core import HabitatPredictor
+from repro.launch.serve import WorkerSupervisor
+from repro.serve import faults
+from repro.serve.admission import DeadlineExceeded
+from repro.serve.fleet import FleetPlanner
+from repro.serve.http import PredictionClient
+from repro.serve.router import FingerprintRouter, RouterServer
+from repro.serve.service import PredictionService
+
+_BATCH = 32
+
+
+def _assert_bitwise(rows, oracle, where: str) -> None:
+    if [r.device for r in rows] != [c.device for c in oracle]:
+        raise AssertionError(f"{where}: device order diverged")
+    for r, c in zip(rows, oracle):
+        if r.iter_ms != c.iter_ms:
+            raise AssertionError(
+                f"{where}: iter_ms not bitwise ({r.device}: "
+                f"{r.iter_ms!r} != {c.iter_ms!r})")
+
+
+def _phase_a(csv: Csv, smoke: bool) -> None:
+    n_deadline = 8 if smoke else 24
+    n_free = 3 if smoke else 6
+    traces = [synthetic_trace(16 + 2 * i, origin="T4", seed=900 + i)
+              for i in range(n_deadline + n_free)]
+    planner = FleetPlanner(predictor=HabitatPredictor())
+    oracles = [planner.rank(t, batch_size=_BATCH) for t in traces]
+    service = PredictionService(predictor=HabitatPredictor(),
+                                coalesce_window_ms=20.0,
+                                adaptive_window=False,
+                                flush_at=n_deadline + n_free)
+
+    service.rank(traces[0], batch_size=_BATCH)      # warmup
+    t0 = time.perf_counter()
+    service.rank(traces[0], batch_size=_BATCH)
+    pass_s = time.perf_counter() - t0
+    delay_s = max(10.0 * pass_s, 0.1)
+    deadline_s = max(3.0 * pass_s, 0.03)            # < injected delay
+
+    faults.arm(f"engine.pass:delay={delay_s * 1e3:.0f}ms,p=1.0")
+    lock = threading.Lock()
+    outcomes: List[Tuple[str, float]] = []          # (kind, wall_s)
+    free_errors: List[str] = []
+    try:
+        def _bounded(i: int) -> None:
+            t1 = time.perf_counter()
+            try:        # deadlines are absolute time.monotonic() instants
+                service.rank(traces[i], batch_size=_BATCH,
+                             deadline=time.monotonic() + deadline_s)
+                kind = "answered"
+            except DeadlineExceeded:
+                kind = "rejected"
+            with lock:
+                outcomes.append((kind, time.perf_counter() - t1))
+
+        def _free(i: int) -> None:
+            try:
+                rows = service.rank(traces[i], batch_size=_BATCH)
+                _assert_bitwise(rows, oracles[i], f"phase A free {i}")
+            except Exception as e:
+                with lock:
+                    free_errors.append(f"{type(e).__name__}: {e}")
+
+        threads = ([threading.Thread(target=_bounded, args=(i,))
+                    for i in range(n_deadline)]
+                   + [threading.Thread(target=_free, args=(n_deadline + j,))
+                      for j in range(n_free)])
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    finally:
+        faults.disarm()
+
+    if free_errors:
+        raise AssertionError(
+            f"unbounded members failed under injected slowness "
+            f"(first: {free_errors[0]})")
+    in_time = sum(w <= deadline_s + 0.1 for _, w in outcomes)
+    frac = in_time / n_deadline
+    walls = sorted(w for _, w in outcomes)
+    print(f"  phase A     : pass {pass_s * 1e3:.1f} ms, injected delay "
+          f"{delay_s * 1e3:.0f} ms, deadline {deadline_s * 1e3:.0f} ms | "
+          f"{n_deadline} bounded reqs: "
+          f"{sum(k == 'rejected' for k, _ in outcomes)} rejected, "
+          f"{sum(k == 'answered' for k, _ in outcomes)} answered | "
+          f"{frac:.0%} within deadline+100ms "
+          f"(max wall {walls[-1] * 1e3:.0f} ms) | "
+          f"{n_free} unbounded all bitwise-correct")
+    if frac < 0.95:
+        raise AssertionError(
+            f"only {frac:.0%} of deadline-carrying requests resolved "
+            f"within deadline+100ms (gate: >= 95%)")
+    csv.add("chaos_deadline", walls[-1] * 1e6,
+            f"frac{frac:.2f}_delay{delay_s * 1e3:.0f}ms")
+
+
+def _phase_b(csv: Csv, smoke: bool) -> None:
+    n_workers = 2 if smoke else 3
+    n_burst = 32 if smoke else 96
+    n_traces = 4 if smoke else 8
+    health_s = 0.5
+    kill_after = n_burst // 3
+
+    traces = [synthetic_trace(18 + 2 * i, origin="T4", seed=950 + i)
+              for i in range(n_traces)]
+    planner = FleetPlanner(predictor=HabitatPredictor())
+    oracles = [planner.rank(t, batch_size=_BATCH) for t in traces]
+
+    sup = WorkerSupervisor(poll_s=0.1, backoff_s=0.2)
+    urls = [sup.spawn([sys.executable, "-m", "repro.serve.http",
+                       "--host", "127.0.0.1", "--port", "0",
+                       "--coalesce-ms", "0.5"])
+            for _ in range(n_workers)]
+    sup.start()
+    face = None
+    try:
+        router = FingerprintRouter(urls, health_s=health_s)
+        face = RouterServer(router).start()
+        client = PredictionClient(face.url, timeout=120.0)
+        lock = threading.Lock()
+        n_ok = 0
+        errors: List[str] = []
+        fired = threading.Event()
+        n_threads = 4
+
+        def burst(k: int) -> None:
+            nonlocal n_ok
+            for i in range(k, n_burst, n_threads):
+                if i >= kill_after:
+                    fired.wait()        # kill lands strictly mid-burst
+                j = i % n_traces
+                try:
+                    rows = client.rank(traces[j], batch_size=_BATCH)
+                    if ([r["device"] for r in rows]
+                            != [c.device for c in oracles[j]]):
+                        raise AssertionError("device order diverged")
+                except Exception as e:
+                    with lock:
+                        errors.append(f"req {i}: {type(e).__name__}: {e}")
+                    continue
+                with lock:
+                    n_ok += 1
+
+        threads = [threading.Thread(target=burst, args=(k,))
+                   for k in range(n_threads)]
+        for t in threads:
+            t.start()
+        while True:
+            with lock:
+                done = n_ok + len(errors)
+            if done >= kill_after - n_threads:
+                break
+            time.sleep(0.01)
+        victim_url = urls[0]
+        sup.procs[0].kill()     # SIGKILL: the supervisor must notice
+        t_kill = time.monotonic()
+        fired.set()
+        for t in threads:
+            t.join()
+        if errors:
+            raise AssertionError(
+                f"lost {len(errors)}/{n_burst} requests across the "
+                f"supervised kill (first: {errors[0]})")
+
+        # the supervisor restarts the corpse on the SAME port ...
+        t_up = None
+        deadline = time.monotonic() + 60.0
+        while time.monotonic() < deadline:
+            s = sup.stats()
+            if s["restarts"] >= 1 and s["per_worker"][0]["alive"]:
+                try:    # readiness: the restarted port answers /healthz
+                    with urllib.request.urlopen(victim_url + "/healthz",
+                                                timeout=0.5) as r:
+                        if r.status == 200:
+                            t_up = time.monotonic()
+                            break
+                except OSError:
+                    pass
+            time.sleep(0.05)
+        if t_up is None:
+            raise AssertionError(
+                "supervisor did not restart the killed worker within 60s")
+
+        # ... and the router's health sweep re-admits it
+        t_readmit = None
+        deadline = t_up + 3 * health_s + 0.5
+        while time.monotonic() < deadline:
+            if router.stats()["live_workers"] == n_workers:
+                t_readmit = time.monotonic()
+                break
+            time.sleep(0.02)
+        if t_readmit is None:
+            raise AssertionError(
+                f"router did not re-admit the restarted worker within "
+                f"3 health-sweep periods ({3 * health_s:.1f}s) of it "
+                f"being back up")
+        rows = client.rank(traces[0], batch_size=_BATCH)    # end to end
+        if [r["device"] for r in rows] != [c.device for c in oracles[0]]:
+            raise AssertionError("post-restart answer diverged")
+        print(f"  phase B     : {n_burst} reqs, supervised worker "
+              f"SIGKILLed after {kill_after} | lost 0 | restarted in "
+              f"{t_up - t_kill:.1f}s, re-admitted "
+              f"{t_readmit - t_up:.2f}s later "
+              f"(gate {3 * health_s:.1f}s) | "
+              f"restarts={sup.stats()['restarts']}")
+        csv.add("chaos_supervisor", (t_readmit - t_up) * 1e6,
+                f"lost0_restart{t_up - t_kill:.1f}s")
+    finally:
+        if face is not None:
+            face.shutdown()
+        sup.drain()
+
+
+def _phase_c(csv: Csv, smoke: bool) -> None:
+    n_traces = 4 if smoke else 8
+    n_rounds = 2 if smoke else 4
+    traces = [synthetic_trace(14 + 2 * i, origin="T4", seed=990 + i)
+              for i in range(n_traces)]
+    planner = FleetPlanner(predictor=HabitatPredictor())
+    oracles = [planner.rank(t, batch_size=_BATCH) for t in traces]
+    service = PredictionService(predictor=HabitatPredictor(),
+                                coalesce_window_ms=5.0,
+                                adaptive_window=False)
+
+    faults.arm("engine.pass:error,delay=2ms,p=0.5", seed=7)
+    t0 = time.perf_counter()
+    try:
+        for r in range(n_rounds):
+            for j, trace in enumerate(traces):
+                rows = service.rank(trace, batch_size=_BATCH)
+                _assert_bitwise(rows, oracles[j],
+                                f"phase C round {r} trace {j}")
+        fstats = faults.stats()["points"]["engine.pass"]
+    finally:
+        faults.disarm()
+    dt = time.perf_counter() - t0
+    if fstats["fired"] == 0:
+        raise AssertionError(
+            "fault injection never fired — the parity gate tested "
+            "nothing (raise p or rounds)")
+    print(f"  phase C     : {n_rounds * n_traces} reqs with "
+          f"engine.pass:error,p=0.5 armed | fired={fstats['fired']} "
+          f"skipped={fstats['skipped']} | every completed answer "
+          f"bitwise-identical to the fault-free oracle")
+    csv.add("chaos_parity", dt / (n_rounds * n_traces) * 1e6,
+            f"fired{fstats['fired']}_bitwise")
+
+
+def run(csv: Csv, smoke: bool = False) -> None:
+    _phase_a(csv, smoke)
+    _phase_b(csv, smoke)
+    _phase_c(csv, smoke)
+
+
+if __name__ == "__main__":
+    run(Csv(), smoke="--smoke" in sys.argv)

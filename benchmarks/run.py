@@ -63,11 +63,15 @@ BENCHES = [
     ("optimizer", "benchmarks.bench_optimizer",
      "What-if optimizer: generation-batched Pareto search (>=5x vs "
      "naive per-candidate loop, passes <= generations, bitwise parity)"),
+    ("chaos", "benchmarks.bench_chaos",
+     "Fault-tolerant serving: deadlines honored under 10x injected "
+     "slowness (>=95% within deadline+100ms), supervised SIGKILL restart "
+     "(zero lost, re-admitted <=3 sweeps), fault parity (bitwise)"),
 ]
 
 #: the subset (and reduced sizes) run by CI's bench-smoke job
 SMOKE_KEYS = ("fleet", "sweep", "service", "union", "dispatch", "kernels",
-              "frontdoor", "cluster", "optimizer")
+              "frontdoor", "cluster", "optimizer", "chaos")
 
 
 def main() -> None:

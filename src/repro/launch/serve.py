@@ -50,17 +50,21 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import os
+import signal
 import subprocess
 import sys
 import tempfile
+import threading
 import time
 from pathlib import Path
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, get_config
+from repro.core.batched import env_float
 from repro.models import init_params
 from repro.models.config import smoke_config
 from repro.serve.engine import Request, ServingEngine
@@ -74,40 +78,227 @@ def _worker_env() -> dict:
     return env
 
 
+class _Worker:
+    """One supervised worker process: its launch command (port pinned
+    after the first bind), the live ``Popen``, and restart accounting."""
+
+    def __init__(self, cmd: List[str]):
+        self.cmd = list(cmd)
+        self.proc: Optional[subprocess.Popen] = None
+        self.url: str = ""
+        self.restarts = 0
+        self.backoff_s = 0.0            # set by the supervisor
+        self.next_restart = 0.0         # monotonic; 0 = eligible now
+        self.started_at = 0.0           # monotonic instant of last bind
+
+
+class WorkerSupervisor:
+    """Spawn worker processes, watch them, restart the ones that die.
+
+    The supervision contract that makes router failover self-healing:
+
+    * each worker restarts on the SAME port it first bound (the
+      readiness line pins ephemeral ports back into the command), so
+      the router's periodic health sweep re-admits it with no
+      reconfiguration;
+    * restarts back off exponentially (``REPRO_SUPERVISOR_BACKOFF_S``
+      doubling up to ``REPRO_SUPERVISOR_BACKOFF_MAX_S``) so a worker
+      that dies on arrival cannot fork-bomb the host, and the backoff
+      resets once a restart sticks;
+    * ``drain()`` forwards SIGTERM to every worker (triggering their
+      own graceful drain: finish in-flight, shed new with 503, exit 0)
+      and stops restarting — shutdown is not a crash.
+
+    The poll period is ``REPRO_SUPERVISOR_POLL_S`` (default 0.5s)."""
+
+    def __init__(self, env: Optional[dict] = None,
+                 poll_s: Optional[float] = None,
+                 backoff_s: Optional[float] = None,
+                 backoff_max_s: Optional[float] = None):
+        self.env = dict(env) if env is not None else _worker_env()
+        self.poll_s = (poll_s if poll_s is not None
+                       else env_float("REPRO_SUPERVISOR_POLL_S", 0.5))
+        self.backoff_s = (backoff_s if backoff_s is not None
+                          else env_float("REPRO_SUPERVISOR_BACKOFF_S", 0.5))
+        self.backoff_max_s = (
+            backoff_max_s if backoff_max_s is not None
+            else env_float("REPRO_SUPERVISOR_BACKOFF_MAX_S", 10.0))
+        self._workers: List[_Worker] = []
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._draining = False
+        self._thread: Optional[threading.Thread] = None
+
+    # -- lifecycle ----------------------------------------------------------
+    def _launch(self, w: _Worker) -> bool:
+        """Start ``w``'s process and wait for its readiness line.
+
+        Returns True once the worker printed ``serving on <url>``;
+        False if it exited first.  On the first successful bind the
+        actual port is pinned back into the command so every restart
+        lands on the same address."""
+        w.proc = subprocess.Popen(w.cmd, env=self.env,
+                                  stdout=subprocess.PIPE, text=True)
+        line = w.proc.stdout.readline()
+        while line and not line.startswith("serving on "):
+            line = w.proc.stdout.readline()
+        if not line:
+            return False
+        w.url = line.split("serving on ", 1)[1].strip()
+        w.started_at = time.monotonic()
+        try:                            # pin ephemeral ports: restarts
+            port = w.url.rsplit(":", 1)[1]  # must reuse the address the
+            i = w.cmd.index("--port")       # router already knows
+            w.cmd[i + 1] = port
+        except (IndexError, ValueError):
+            pass
+        # drain the pipe on a side thread so the child never blocks on
+        # a full stdout buffer (its drain accounting line still flows)
+        threading.Thread(target=self._pump, args=(w.proc.stdout,),
+                         daemon=True).start()
+        return True
+
+    @staticmethod
+    def _pump(stream) -> None:
+        try:
+            for line in stream:
+                print(line, end="", flush=True)
+        except ValueError:
+            pass                        # stream closed mid-iteration
+
+    def spawn(self, cmd: List[str]) -> str:
+        """Launch one worker; returns its url (exits on bind failure)."""
+        w = _Worker(cmd)
+        w.backoff_s = self.backoff_s
+        if not self._launch(w):
+            self.drain()
+            sys.exit("a worker exited before binding its port")
+        with self._lock:
+            self._workers.append(w)
+        return w.url
+
+    def start(self) -> "WorkerSupervisor":
+        """Begin the watch loop on a daemon thread."""
+        self._thread = threading.Thread(target=self._watch, daemon=True)
+        self._thread.start()
+        return self
+
+    def _watch(self) -> None:
+        while not self._stop.wait(self.poll_s):
+            with self._lock:
+                workers = list(self._workers)
+            for w in workers:
+                if self._stop.is_set() or self._draining:
+                    return
+                now = time.monotonic()
+                if w.proc is not None and w.proc.poll() is None:
+                    # backoff resets only once the worker has proven
+                    # stable — a bind-then-crash flapper must keep its
+                    # growing penalty across "successful" restarts
+                    if now - w.started_at >= self.backoff_max_s:
+                        w.backoff_s = self.backoff_s
+                    continue
+                if now < w.next_restart:
+                    continue
+                w.restarts += 1
+                code = w.proc.returncode if w.proc is not None else None
+                print(f"supervisor: worker {w.url or w.cmd[-1]} died "
+                      f"(exit {code}); restart #{w.restarts}", flush=True)
+                ok = self._launch(w)
+                # every restart — bind or no bind — is rate-limited by
+                # the doubling backoff; stability (above) is what earns
+                # the reset
+                w.next_restart = time.monotonic() + w.backoff_s
+                w.backoff_s = min(w.backoff_s * 2, self.backoff_max_s)
+                if ok:
+                    print(f"supervisor: worker back on {w.url}",
+                          flush=True)
+
+    # -- shutdown -----------------------------------------------------------
+    def drain(self, timeout: float = 15.0) -> None:
+        """Stop restarting, SIGTERM every worker, wait for clean exits."""
+        self._draining = True
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=self.poll_s + 1.0)
+        with self._lock:
+            workers = list(self._workers)
+        for w in workers:
+            if w.proc is not None and w.proc.poll() is None:
+                w.proc.terminate()      # workers drain on SIGTERM
+        deadline = time.monotonic() + timeout
+        for w in workers:
+            if w.proc is None:
+                continue
+            try:
+                w.proc.wait(timeout=max(deadline - time.monotonic(), 0.1))
+            except subprocess.TimeoutExpired:
+                w.proc.kill()
+                w.proc.wait()
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def urls(self) -> List[str]:
+        with self._lock:
+            return [w.url for w in self._workers]
+
+    @property
+    def procs(self) -> List[subprocess.Popen]:
+        """Live process handles (chaos benches SIGKILL through these)."""
+        with self._lock:
+            return [w.proc for w in self._workers]
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"workers": len(self._workers),
+                    "restarts": sum(w.restarts for w in self._workers),
+                    "per_worker": [{"url": w.url, "restarts": w.restarts,
+                                    "alive": (w.proc is not None
+                                              and w.proc.poll() is None)}
+                                   for w in self._workers]}
+
+
+def _worker_cmd(args, cache, port: int) -> List[str]:
+    worker_mod = ("repro.serve.aserver" if args.use_async
+                  else "repro.serve.http")
+    cmd = [sys.executable, "-m", worker_mod,
+           "--host", args.host,
+           "--port", str(port),
+           "--coalesce-ms", str(args.coalesce_ms)]
+    if cache is not None:
+        cmd += ["--cache", cache]
+    if args.fleet_mlps:
+        cmd.append("--mlps")
+    return cmd
+
+
+def _exit_on_sigterm() -> None:
+    """Route SIGTERM through the KeyboardInterrupt cleanup paths so the
+    launcher drains its workers instead of abandoning them."""
+    def _handler(signum, frame):
+        raise KeyboardInterrupt
+    try:
+        signal.signal(signal.SIGTERM, _handler)
+    except ValueError:
+        pass                            # not the main thread (tests)
+
+
 def serve_router(args, cache) -> None:
-    """``--router``: workers on consecutive ports behind a fingerprint-
-    sharding coordinator on the base port.
+    """``--router``: supervised workers on consecutive ports behind a
+    fingerprint-sharding coordinator on the base port.
 
     Workers are spawned with piped stdout so their ``serving on ...``
     readiness lines give us the actual urls (ephemeral ports included);
-    the router face then fronts them on this process's thread."""
+    the supervisor then restarts any that crash on the same port, so
+    the router's health sweep re-admits them automatically."""
     from repro.serve.router import FingerprintRouter, RouterServer
 
-    env = _worker_env()
-    worker_mod = ("repro.serve.aserver" if args.use_async
-                  else "repro.serve.http")
-    procs = []
-    for i in range(args.workers):
-        cmd = [sys.executable, "-m", worker_mod,
-               "--host", args.host,
-               "--port", str(args.port + 1 + i if args.port else 0),
-               "--coalesce-ms", str(args.coalesce_ms)]
-        if cache is not None:
-            cmd += ["--cache", cache]
-        if args.fleet_mlps:
-            cmd.append("--mlps")
-        procs.append(subprocess.Popen(cmd, env=env,
-                                      stdout=subprocess.PIPE, text=True))
-    urls = []
-    for proc in procs:
-        line = proc.stdout.readline()
-        while line and not line.startswith("serving on "):
-            line = proc.stdout.readline()
-        if not line:
-            for p in procs:
-                p.terminate()
-            sys.exit("a worker exited before binding its port")
-        urls.append(line.split("serving on ", 1)[1].strip())
+    _exit_on_sigterm()
+    sup = WorkerSupervisor()
+    urls = [sup.spawn(_worker_cmd(args, cache,
+                                  args.port + 1 + i if args.port else 0))
+            for i in range(args.workers)]
+    sup.start()
     print(f"router fleet: {len(urls)} workers on "
           f"{', '.join(urls)} (cache: {cache})", flush=True)
     router = FingerprintRouter(urls)
@@ -119,10 +310,10 @@ def serve_router(args, cache) -> None:
         pass
     finally:
         server.shutdown()
-        for p in procs:
-            p.terminate()
-        for p in procs:
-            p.wait()
+        sup.drain()
+        s = sup.stats()
+        print(f"supervisor shutdown: workers={s['workers']} "
+              f"restarts={s['restarts']}", flush=True)
 
 
 def serve_http(args) -> None:
@@ -159,7 +350,8 @@ def serve_http(args) -> None:
         return
 
     if args.workers == 1:
-        from repro.serve.http import log_engine_caches
+        from repro.serve.http import install_drain_handlers, \
+            log_engine_caches
 
         service = build_service(cache=cache, coalesce_ms=args.coalesce_ms,
                                 mlps=args.fleet_mlps)
@@ -170,10 +362,11 @@ def serve_http(args) -> None:
                                            port=args.port)
             try:
                 server.serve_forever()  # prints "serving on ..." itself
-            finally:
+            finally:                    # (and drains on SIGTERM/SIGINT)
                 log_engine_caches(service)
             return
         server = PredictionServer(service, host=args.host, port=args.port)
+        install_drain_handlers(server, service)
         print(f"serving on {server.url}", flush=True)
         try:
             server.serve_forever()
@@ -186,30 +379,24 @@ def serve_http(args) -> None:
             log_engine_caches(service)
         return
 
-    env = _worker_env()
-    worker_mod = ("repro.serve.aserver" if args.use_async
-                  else "repro.serve.http")
-    procs = []
+    _exit_on_sigterm()
+    sup = WorkerSupervisor()
     for i in range(args.workers):
-        cmd = [sys.executable, "-m", worker_mod,
-               "--host", args.host,
-               "--port", str(args.port + i if args.port else 0),
-               "--coalesce-ms", str(args.coalesce_ms),
-               "--cache", cache]
-        if args.fleet_mlps:
-            cmd.append("--mlps")
-        procs.append(subprocess.Popen(cmd, env=env))
-    print(f"launched {args.workers} workers on ports "
+        sup.spawn(_worker_cmd(args, cache, args.port + i))
+    sup.start()
+    print(f"launched {args.workers} supervised workers on ports "
           f"{args.port}..{args.port + args.workers - 1} "
           f"(shared cache: {cache})", flush=True)
     try:
-        for p in procs:
-            p.wait()
+        while True:                     # supervisor keeps the pool alive
+            time.sleep(3600)
     except KeyboardInterrupt:
-        for p in procs:
-            p.terminate()
-        for p in procs:
-            p.wait()
+        pass
+    finally:
+        sup.drain()
+        s = sup.stats()
+        print(f"supervisor shutdown: workers={s['workers']} "
+              f"restarts={s['restarts']}", flush=True)
 
 
 def main():

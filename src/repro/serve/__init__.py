@@ -41,7 +41,15 @@ neighbors — see ``docs/architecture.md`` for the full tour):
 * :mod:`repro.serve.http` / :mod:`repro.serve.aserver` — the two front
   ends over identical wire formats: the PR 3 threaded server (baseline
   and kill switch) and the asyncio server (event-loop concurrency, SSE
-  sweep streaming); both enforce admission.
+  sweep streaming); both enforce admission, honor end-to-end deadlines
+  (``deadline_ms`` / ``X-Deadline-Ms`` / ``REPRO_DEADLINE_MS`` -> 504),
+  and drain gracefully on SIGTERM (shed 503, flush in-flight, exit 0).
+* :mod:`repro.serve.faults` — the fault-injection registry: named
+  points in the serving hot paths (``netcache.get_many``,
+  ``router.forward``, ``engine.pass``, ``worker.heartbeat``) armed via
+  ``REPRO_FAULTS`` with deterministic per-point randomness; a single
+  bool check when disarmed.  ``benchmarks/bench_chaos.py`` and CI's
+  chaos job drive the fleet through it.
 
 Cross-cutting contract: coalescing, union grids, splitting, caching,
 and the choice of front end NEVER change an answer — a served ranking

@@ -49,13 +49,17 @@ Knobs (see ``docs/knobs.md``): ``REPRO_ADMIT_MAX_QUEUE``,
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import threading
-from typing import Dict, Optional
+import time
+from typing import Dict, Iterator, Optional
 
 from repro.core.batched import env_float, env_int
 
-__all__ = ["AdmissionController", "AdmissionError", "Ticket", "LANES"]
+__all__ = ["AdmissionController", "AdmissionError", "DeadlineExceeded",
+           "Ticket", "LANES", "deadline_scope", "remaining_s",
+           "current_deadline"]
 
 #: the two priority lanes: interactive rank queries vs bulk sweeps
 LANES = ("interactive", "bulk")
@@ -78,6 +82,65 @@ class AdmissionError(RuntimeError):
         self.retry_after_s = float(retry_after_s)
         self.reason = reason
         self.lane = lane
+
+
+class DeadlineExceeded(AdmissionError):
+    """A request whose end-to-end deadline cannot be (or was not) met.
+
+    Raised in two places: at admission, when the projected engine cost
+    already exceeds the remaining budget (shedding instantly is kinder
+    than queueing work the caller will never read), and at delivery,
+    when a pending query's deadline lapses before its batch completes.
+    Transports translate it to **504** with no useful ``Retry-After``
+    (the caller's budget, not our load, is the constraint)."""
+
+    def __init__(self, reason: str, lane: str = "interactive",
+                 remaining_s: float = 0.0):
+        super().__init__(504, 0.0, reason, lane)
+        self.remaining_s = float(remaining_s)
+
+
+# -- deadline scope ----------------------------------------------------------
+# The remaining budget of the request currently being served, carried in
+# thread-local storage so deep layers (netcache socket timeouts, router
+# forwards) can derive their timeouts from it without threading a
+# parameter through every call signature.  A scope stores the *absolute*
+# ``time.monotonic()`` deadline; ``remaining_s`` converts to a budget.
+
+_scope = threading.local()
+
+
+@contextlib.contextmanager
+def deadline_scope(deadline: Optional[float]) -> Iterator[None]:
+    """Bind an absolute monotonic ``deadline`` for the enclosed work.
+
+    ``None`` means unbounded.  Scopes nest; the innermost wins (callers
+    binding a looser deadline inside a tighter one keep the tighter one
+    because leaders bind the *minimum* across batch members)."""
+    prev = getattr(_scope, "deadline", None)
+    _scope.deadline = deadline if prev is None else (
+        prev if deadline is None else min(prev, deadline))
+    try:
+        yield
+    finally:
+        _scope.deadline = prev
+
+
+def current_deadline() -> Optional[float]:
+    """The innermost bound absolute deadline, or ``None``."""
+    return getattr(_scope, "deadline", None)
+
+
+def remaining_s(default: Optional[float] = None) -> Optional[float]:
+    """Seconds left in the current deadline scope.
+
+    Returns ``default`` when no deadline is bound; returns 0.0 (never
+    negative) when the deadline already lapsed, so callers can use the
+    value directly as a socket timeout."""
+    deadline = getattr(_scope, "deadline", None)
+    if deadline is None:
+        return default
+    return max(deadline - time.monotonic(), 0.0)
 
 
 @dataclasses.dataclass
@@ -129,6 +192,7 @@ class AdmissionController:
         self._shed = {lane: 0 for lane in LANES}
         self._shed_429 = 0
         self._shed_503 = 0
+        self._shed_504 = 0
 
     # -- admission ----------------------------------------------------------
     def admit(self, lane: str, cost_s: float) -> Ticket:
@@ -179,6 +243,16 @@ class AdmissionController:
                 f"in-flight cost budget exhausted "
                 f"({projected:.3f}s > {self.max_inflight_s:.3f}s)", lane)
 
+    def record_deadline_shed(self, lane: str) -> None:
+        """Count a request shed (or cancelled) for deadline reasons.
+
+        Deadline sheds are *not* load sheds — they happen at any load
+        when the caller's budget is tighter than one engine pass — so
+        they get their own counter instead of inflating ``shed_429``."""
+        with self._lock:
+            self._shed[lane] = self._shed.get(lane, 0) + 1
+            self._shed_504 += 1
+
     @staticmethod
     def _clamp_retry(excess_s: float) -> float:
         """Retry-After hint: the excess backlog's drain time, clamped so
@@ -213,4 +287,5 @@ class AdmissionController:
                 "shed": dict(self._shed),
                 "shed_429": self._shed_429,
                 "shed_503": self._shed_503,
+                "shed_504": self._shed_504,
             }

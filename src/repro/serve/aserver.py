@@ -58,10 +58,13 @@ from __future__ import annotations
 import argparse
 import asyncio
 import json
+import signal
 import threading
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
-from repro.serve.admission import AdmissionError
+from repro.core.batched import env_float
+from repro.serve import faults
+from repro.serve.admission import AdmissionError, DeadlineExceeded
 from repro.serve.service import PendingQuery, PredictionService
 
 __all__ = ["AsyncPredictionServer", "iter_sse", "main"]
@@ -70,7 +73,8 @@ _MAX_BODY = 64 * 1024 * 1024    # refuse absurd payloads, not big sweeps
 
 _REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
             413: "Payload Too Large", 429: "Too Many Requests",
-            500: "Internal Server Error", 503: "Service Unavailable"}
+            500: "Internal Server Error", 503: "Service Unavailable",
+            504: "Gateway Timeout"}
 
 
 def _response(status: int, payload: Dict,
@@ -90,11 +94,16 @@ def _response(status: int, payload: Dict,
 
 def _admission_response(e: AdmissionError) -> bytes:
     """The shed answer: machine-actionable JSON + a Retry-After header
-    (integral seconds, rounded up, per RFC 9110)."""
+    (integral seconds, rounded up, per RFC 9110).  A 504 (deadline)
+    carries no Retry-After — the caller's budget, not our load, was the
+    constraint — and is tagged ``code: deadline_exceeded``."""
+    body = {"error": e.reason, "lane": e.lane,
+            "retry_after_s": round(e.retry_after_s, 3)}
+    if e.status == 504:
+        body["code"] = "deadline_exceeded"
+        return _response(e.status, body)
     return _response(
-        e.status,
-        {"error": e.reason, "lane": e.lane,
-         "retry_after_s": round(e.retry_after_s, 3)},
+        e.status, body,
         extra=[("Retry-After", str(max(1, int(e.retry_after_s + 0.999))))])
 
 
@@ -149,12 +158,49 @@ class AsyncPredictionServer:
         self.port = self._server.sockets[0].getsockname()[1]
 
     def serve_forever(self) -> None:
-        """Bind and serve on the calling thread until cancelled."""
+        """Bind and serve on the calling thread until cancelled.
+
+        SIGTERM/SIGINT trigger a graceful drain: the service stops
+        accepting (POSTs shed 503, ``/healthz`` flips so routers mark
+        the worker down), in-flight coalescing windows flush, one
+        accounting line prints, and the process exits 0."""
         async def _run():
             await self._bind()
             print(f"serving on {self.url}", flush=True)
+            loop = asyncio.get_running_loop()
+            stop = asyncio.Event()
+
+            def _drain_then_stop() -> None:
+                grace_s = env_float("REPRO_DRAIN_GRACE_S", 10.0)
+
+                def _worker():
+                    quiesced = self.service.drain(timeout=grace_s)
+                    adm = self.service.admission.stats()
+                    print("drain on shutdown: "
+                          f"quiesced={quiesced} "
+                          f"inflight={adm['inflight_requests']} "
+                          f"shed_503={adm['shed_503']} "
+                          f"shed_504={adm['shed_504']}", flush=True)
+                    loop.call_soon_threadsafe(stop.set)
+
+                # drain blocks on a condition variable; keep the event
+                # loop free so in-flight handlers can finish delivering
+                threading.Thread(target=_worker, daemon=True).start()
+
+            try:
+                for sig in (signal.SIGTERM, signal.SIGINT):
+                    loop.add_signal_handler(sig, _drain_then_stop)
+            except (NotImplementedError, RuntimeError):
+                pass                # non-main thread or platform limits
             async with self._server:
-                await self._server.serve_forever()
+                serve = asyncio.ensure_future(self._server.serve_forever())
+                stopper = asyncio.ensure_future(stop.wait())
+                await asyncio.wait({serve, stopper},
+                                   return_when=asyncio.FIRST_COMPLETED)
+                for task in (serve, stopper):
+                    task.cancel()
+                await asyncio.gather(serve, stopper,
+                                     return_exceptions=True)
         try:
             asyncio.run(_run())
         except KeyboardInterrupt:
@@ -247,7 +293,7 @@ class AsyncPredictionServer:
             if req is None:
                 return
             method, path, headers, body = req
-            await self._route(method, path, body, writer)
+            await self._route(method, path, headers, body, writer)
         except (ConnectionError, asyncio.CancelledError):
             pass
         finally:
@@ -257,21 +303,38 @@ class AsyncPredictionServer:
             except (ConnectionError, RuntimeError):
                 pass
 
-    async def _route(self, method: str, path: str, body: bytes,
-                     writer: asyncio.StreamWriter) -> None:
+    async def _route(self, method: str, path: str, headers: Dict[str, str],
+                     body: bytes, writer: asyncio.StreamWriter) -> None:
         service = self.service
         if method == "GET" and path == "/healthz":
-            writer.write(_response(200, {"ok": True}))
+            if service.draining:
+                # alive but attracting no traffic: routers mark down
+                writer.write(_response(
+                    503, {"ok": False, "draining": True},
+                    extra=[("Retry-After", "1")]))
+            else:
+                try:
+                    faults.inject("worker.heartbeat")
+                    writer.write(_response(200, {"ok": True}))
+                except faults.FaultInjected as e:
+                    # unhealthy-but-alive: the router's 5xx path
+                    writer.write(_response(
+                        500, {"ok": False, "error": str(e)}))
         elif method == "GET" and path == "/stats":
-            writer.write(_response(200, service.stats()))
+            writer.write(_response(200, service.stats()))   # live during
+            # drain — operators watch the flush complete here
+        elif method == "POST" and service.draining:
+            writer.write(_response(
+                503, {"error": "draining", "retry_after_s": 1.0},
+                extra=[("Retry-After", "1")]))
         elif method == "POST" and path == "/rank":
-            await self._post_rank(body, writer)
+            await self._post_rank(headers, body, writer)
         elif method == "POST" and path == "/sweep":
-            await self._post_sweep(body, writer)
+            await self._post_sweep(headers, body, writer)
         elif method == "POST" and path == "/optimize":
-            await self._post_optimize(body, writer)
+            await self._post_optimize(headers, body, writer)
         elif method == "POST" and path == "/sweep/stream":
-            await self._post_sweep_stream(body, writer)
+            await self._post_sweep_stream(headers, body, writer)
         else:
             writer.write(_response(
                 404, {"error": f"unknown route {method} {path!r}"}))
@@ -280,6 +343,13 @@ class AsyncPredictionServer:
     @staticmethod
     def _decode_body(body: bytes) -> Dict:
         return json.loads(body)
+
+    @staticmethod
+    def _header_deadline_ms(headers: Dict[str, str]) -> Optional[float]:
+        """The X-Deadline-Ms header as relative ms (ValueError on
+        garbage — handled by each route's 400 path)."""
+        raw = headers.get("x-deadline-ms")
+        return None if raw is None else float(raw)
 
     async def _await_handle(self, handle: PendingQuery,
                             timeout: float = 300.0):
@@ -290,7 +360,12 @@ class AsyncPredictionServer:
         attach-after-completion race is closed by checking
         ``done.is_set()`` after assigning the hook (``finish()`` sets
         the event before reading ``on_done``, so at least one of the two
-        paths always runs)."""
+        paths always runs).
+
+        A handle carrying a deadline is awaited only that long: on
+        lapse it is CANCELLED (per-query — the shared engine pass still
+        answers the other batch members) and ``DeadlineExceeded``
+        propagates to the route's admission-error path (504)."""
         loop = asyncio.get_running_loop()
         fut: asyncio.Future = loop.create_future()
 
@@ -301,31 +376,54 @@ class AsyncPredictionServer:
         handle.on_done = lambda _req: loop.call_soon_threadsafe(_resolve)
         if handle.done.is_set():
             _resolve()
-        await asyncio.wait_for(fut, timeout)
+        wait = timeout
+        if handle.deadline is not None:
+            wait = min(wait, handle.remaining_s())
+        try:
+            await asyncio.wait_for(fut, wait)
+        except asyncio.TimeoutError:
+            remaining = handle.remaining_s()
+            if remaining is not None and remaining <= 0:
+                err = DeadlineExceeded(
+                    f"{handle.kind} deadline lapsed before the batch "
+                    "answered", lane=handle.lane)
+                if handle.cancel(err):
+                    self.service.admission.record_deadline_shed(
+                        handle.lane)
+                    raise err
+                # finish won the race: fall through to the answer
+            else:
+                raise
         return handle.get(timeout=1.0)   # completed: returns immediately
 
     # -- endpoints ----------------------------------------------------------
-    async def _post_rank(self, body: bytes,
+    async def _post_rank(self, headers: Dict[str, str], body: bytes,
                          writer: asyncio.StreamWriter) -> None:
         service = self.service
         try:
-            trace, batch_size, by, dests = service.decode_rank(
-                self._decode_body(body))
+            p = self._decode_body(body)
+            trace, batch_size, by, dests = service.decode_rank(p)
+            deadline = service.resolve_deadline(
+                p, self._header_deadline_ms(headers))
         except (json.JSONDecodeError, KeyError, ValueError, TypeError,
                 UnicodeDecodeError) as e:
             writer.write(_response(
                 400, {"error": f"{type(e).__name__}: {e}"}))
             return
         try:
-            ticket = service.admit_request("rank", [trace], dests)
+            ticket = service.admit_request("rank", [trace], dests,
+                                           deadline=deadline)
         except AdmissionError as e:
             writer.write(_admission_response(e))
             return
         try:
-            handle = service.submit_rank(trace, batch_size, by, dests)
+            handle = service.submit_rank(trace, batch_size, by, dests,
+                                         deadline=deadline)
             choices = await self._await_handle(handle)
             writer.write(_response(
                 200, service.encode_rank(trace, choices)))
+        except AdmissionError as e:     # deadline lapse mid-flight (504)
+            writer.write(_admission_response(e))
         except (KeyError, ValueError, TypeError) as e:
             writer.write(_response(
                 400, {"error": f"{type(e).__name__}: {e}"}))
@@ -335,26 +433,33 @@ class AsyncPredictionServer:
         finally:
             service.admission.release(ticket)
 
-    async def _post_sweep(self, body: bytes,
+    async def _post_sweep(self, headers: Dict[str, str], body: bytes,
                           writer: asyncio.StreamWriter) -> None:
         service = self.service
         try:
-            traces, dests = service.decode_sweep(self._decode_body(body))
+            p = self._decode_body(body)
+            traces, dests = service.decode_sweep(p)
+            deadline = service.resolve_deadline(
+                p, self._header_deadline_ms(headers))
         except (json.JSONDecodeError, KeyError, ValueError, TypeError,
                 UnicodeDecodeError) as e:
             writer.write(_response(
                 400, {"error": f"{type(e).__name__}: {e}"}))
             return
         try:
-            ticket = service.admit_request("sweep", traces, dests)
+            ticket = service.admit_request("sweep", traces, dests,
+                                           deadline=deadline)
         except AdmissionError as e:
             writer.write(_admission_response(e))
             return
         try:
-            handle = service.submit_sweep(traces, dests)
+            handle = service.submit_sweep(traces, dests,
+                                          deadline=deadline)
             rows = await self._await_handle(handle)
             writer.write(_response(
                 200, service.encode_sweep(traces, rows)))
+        except AdmissionError as e:     # deadline lapse mid-flight (504)
+            writer.write(_admission_response(e))
         except (KeyError, ValueError, TypeError) as e:
             writer.write(_response(
                 400, {"error": f"{type(e).__name__}: {e}"}))
@@ -364,7 +469,7 @@ class AsyncPredictionServer:
         finally:
             service.admission.release(ticket)
 
-    async def _post_optimize(self, body: bytes,
+    async def _post_optimize(self, headers: Dict[str, str], body: bytes,
                              writer: asyncio.StreamWriter) -> None:
         """What-if Pareto search — bulk lane, executor-offloaded.
 
@@ -374,29 +479,39 @@ class AsyncPredictionServer:
         executor while its per-generation sweeps ride the coalescer like
         any other traffic.  Admission is still decided on the loop
         thread before any engine work, same as every other route."""
-        from functools import partial
-
         service = self.service
         try:
-            traces, batch_sizes, dests, knobs = service.decode_optimize(
-                self._decode_body(body))
+            p = self._decode_body(body)
+            traces, batch_sizes, dests, knobs = service.decode_optimize(p)
+            deadline = service.resolve_deadline(
+                p, self._header_deadline_ms(headers))
         except (json.JSONDecodeError, KeyError, ValueError, TypeError,
                 UnicodeDecodeError) as e:
             writer.write(_response(
                 400, {"error": f"{type(e).__name__}: {e}"}))
             return
         try:
-            ticket = service.admit_request("optimize", traces, dests)
+            ticket = service.admit_request("optimize", traces, dests,
+                                           deadline=deadline)
         except AdmissionError as e:
             writer.write(_admission_response(e))
             return
         try:
+            from repro.serve.admission import deadline_scope
             from repro.serve.optimizer import encode_optimize
+
+            def _run():
+                # executor thread: re-bind the deadline so the search's
+                # internal sweeps inherit the remaining budget
+                with deadline_scope(deadline):
+                    return service.optimize(traces, batch_sizes,
+                                            dests=dests, **knobs)
+
             loop = asyncio.get_running_loop()
-            result = await loop.run_in_executor(
-                None, partial(service.optimize, traces, batch_sizes,
-                              dests=dests, **knobs))
+            result = await loop.run_in_executor(None, _run)
             writer.write(_response(200, encode_optimize(result)))
+        except AdmissionError as e:     # deadline lapse mid-search (504)
+            writer.write(_admission_response(e))
         except (KeyError, ValueError, TypeError) as e:
             writer.write(_response(
                 400, {"error": f"{type(e).__name__}: {e}"}))
@@ -406,7 +521,8 @@ class AsyncPredictionServer:
         finally:
             service.admission.release(ticket)
 
-    async def _post_sweep_stream(self, body: bytes,
+    async def _post_sweep_stream(self, headers: Dict[str, str],
+                                 body: bytes,
                                  writer: asyncio.StreamWriter) -> None:
         """SSE sweep: one ``row`` event per trace, in completion order.
 
@@ -414,20 +530,31 @@ class AsyncPredictionServer:
         the same union pass(es) as a monolithic sweep — streaming
         changes delivery, not engine cost.  Admission prices the WHOLE
         sweep up front (one bulk ticket): a stream the worker cannot
-        afford sheds before the first byte of the event stream."""
+        afford sheds before the first byte of the event stream.
+
+        A client that disconnects mid-stream must not leak: the write
+        error surfaces on ``drain()``, the remaining per-trace tasks
+        are cancelled and awaited in ``finally`` (no stray ``Task
+        exception was never retrieved``), and the one admission ticket
+        releases — ``/stats`` inflight returns to zero."""
         service = self.service
         try:
-            traces, dests = service.decode_sweep(self._decode_body(body))
+            p = self._decode_body(body)
+            traces, dests = service.decode_sweep(p)
+            deadline = service.resolve_deadline(
+                p, self._header_deadline_ms(headers))
         except (json.JSONDecodeError, KeyError, ValueError, TypeError,
                 UnicodeDecodeError) as e:
             writer.write(_response(
                 400, {"error": f"{type(e).__name__}: {e}"}))
             return
         try:
-            ticket = service.admit_request("sweep", traces, dests)
+            ticket = service.admit_request("sweep", traces, dests,
+                                           deadline=deadline)
         except AdmissionError as e:
             writer.write(_admission_response(e))
             return
+        pending: List[asyncio.Future] = []
         try:
             writer.write(b"HTTP/1.1 200 OK\r\n"
                          b"Content-Type: text/event-stream\r\n"
@@ -436,7 +563,8 @@ class AsyncPredictionServer:
             await writer.drain()
 
             async def _one(i: int, trace) -> Tuple[int, Dict]:
-                handle = service.submit_sweep([trace], dests)
+                handle = service.submit_sweep([trace], dests,
+                                              deadline=deadline)
                 rows = await self._await_handle(handle)
                 return i, {"index": i, "label": trace.label,
                            "times": rows[0]}
@@ -444,10 +572,12 @@ class AsyncPredictionServer:
             n_err = 0
             pending = [asyncio.ensure_future(_one(i, t))
                        for i, t in enumerate(traces)]
-            for fut in asyncio.as_completed(pending):
+            for fut in asyncio.as_completed(list(pending)):
                 try:
                     _, payload = await fut
                     writer.write(_sse_event("row", payload))
+                except (ConnectionError, asyncio.CancelledError):
+                    raise           # disconnect/shutdown: stop streaming
                 except Exception as e:
                     n_err += 1
                     writer.write(_sse_event(
@@ -457,6 +587,10 @@ class AsyncPredictionServer:
                 "done", {"count": len(traces) - n_err, "errors": n_err}))
             await writer.drain()
         finally:
+            for fut in pending:     # client gone or done: reap the rest
+                fut.cancel()
+            if pending:
+                await asyncio.gather(*pending, return_exceptions=True)
             service.admission.release(ticket)
 
 

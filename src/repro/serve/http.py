@@ -49,15 +49,19 @@ from __future__ import annotations
 
 import argparse
 import json
+import signal
 import threading
 import urllib.request
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
+from repro.core.batched import env_float
+from repro.serve import faults
 from repro.serve.admission import AdmissionError
 from repro.serve.service import PredictionService
 
-__all__ = ["PredictionServer", "PredictionClient", "main"]
+__all__ = ["PredictionServer", "PredictionClient", "main",
+           "install_drain_handlers"]
 
 _MAX_BODY = 64 * 1024 * 1024    # refuse absurd payloads, not big sweeps
 
@@ -95,35 +99,73 @@ class _Handler(BaseHTTPRequestHandler):
     def do_GET(self) -> None:  # noqa: N802 (http.server API)
         service: PredictionService = self.server.service
         if self.path == "/healthz":
+            if service.draining:
+                # a draining worker is alive but must attract no new
+                # traffic: routers mark it down off this answer
+                self._reply(503, {"ok": False, "draining": True},
+                            extra=[("Retry-After", "1")])
+                return
+            try:
+                faults.inject("worker.heartbeat")
+            except faults.FaultInjected as e:
+                # an injected heartbeat fault makes this worker look
+                # unhealthy-but-alive — the router's 5xx classification
+                self._reply(500, {"ok": False, "error": str(e)})
+                return
             self._reply(200, {"ok": True})
         elif self.path == "/stats":
-            self._reply(200, service.stats())
+            self._reply(200, service.stats())       # stays live during
+            # drain: operators watch the flush complete here
         else:
             self._reply(404, {"error": f"unknown path {self.path!r}"})
+
+    def _deadline_ms(self) -> Optional[float]:
+        """Parse the X-Deadline-Ms header (relative ms of budget).
+
+        Raises ValueError on garbage so the caller's 400 path gets it —
+        a corrupt deadline must not silently serve unbounded."""
+        raw = self.headers.get("X-Deadline-Ms")
+        if raw is None:
+            return None
+        return float(raw)
 
     def do_POST(self) -> None:  # noqa: N802
         service: PredictionService = self.server.service
         if self.path not in ("/rank", "/sweep", "/optimize"):
             self._reply(404, {"error": f"unknown path {self.path!r}"})
             return
+        if service.draining:
+            # stop accepting: in-flight work flushes, new work sheds
+            self._reply(503, {"error": "draining", "retry_after_s": 1.0},
+                        extra=[("Retry-After", "1")])
+            return
         payload = self._read_json()
         if payload is None:
             return
         try:
+            deadline_ms = self._deadline_ms()
             if self.path == "/rank":
-                self._reply(200, service.rank_request(payload))
+                self._reply(200, service.rank_request(
+                    payload, deadline_ms=deadline_ms))
             elif self.path == "/optimize":
-                self._reply(200, service.optimize_request(payload))
+                self._reply(200, service.optimize_request(
+                    payload, deadline_ms=deadline_ms))
             else:
-                self._reply(200, service.sweep_request(payload))
+                self._reply(200, service.sweep_request(
+                    payload, deadline_ms=deadline_ms))
         except AdmissionError as e:
             # shed, not failed: machine-actionable backoff hint (429
-            # cost budget / 503 queue full — see repro.serve.admission)
-            self._reply(e.status,
-                        {"error": e.reason, "lane": e.lane,
-                         "retry_after_s": round(e.retry_after_s, 3)},
-                        extra=[("Retry-After",
-                                str(max(1, int(e.retry_after_s + 0.999))))])
+            # cost budget / 503 queue full / 504 deadline — see
+            # repro.serve.admission).  A 504 carries no Retry-After:
+            # the caller's budget, not our load, was the constraint.
+            extra = ([] if e.status == 504 else
+                     [("Retry-After",
+                       str(max(1, int(e.retry_after_s + 0.999))))])
+            body = {"error": e.reason, "lane": e.lane,
+                    "retry_after_s": round(e.retry_after_s, 3)}
+            if e.status == 504:
+                body["code"] = "deadline_exceeded"
+            self._reply(e.status, body, extra=extra)
         except (KeyError, ValueError, TypeError) as e:
             # malformed request / unknown device: client error, not 500
             self._reply(400, {"error": f"{type(e).__name__}: {e}"})
@@ -168,6 +210,16 @@ class PredictionServer:
         self._thread.start()
         return self
 
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Graceful drain: stop accepting, flush, wait for quiescence.
+
+        Handlers shed new POSTs (and answer ``/healthz`` 503, so
+        routers stop sending) the instant the service's draining flag
+        is up; this then blocks until in-flight coalescing windows
+        flushed (or ``timeout``).  The server keeps answering ``/stats``
+        until :meth:`shutdown` — observability outlives acceptance."""
+        return self.service.drain(timeout)
+
     def shutdown(self) -> None:
         self._httpd.shutdown()
         self._httpd.server_close()
@@ -209,24 +261,34 @@ class PredictionClient:
         return self._get("/stats")
 
     def rank(self, trace, batch_size: int, by: str = "throughput",
-             dests: Optional[Sequence[str]] = None) -> List[Dict]:
-        """Ranked fleet rows (``FleetChoice`` dicts), best first."""
+             dests: Optional[Sequence[str]] = None,
+             deadline_ms: Optional[float] = None) -> List[Dict]:
+        """Ranked fleet rows (``FleetChoice`` dicts), best first.
+
+        ``deadline_ms`` is the end-to-end budget shipped to the server
+        (wire field); a blown budget answers 504
+        (``urllib.error.HTTPError``) instead of blocking."""
         payload = {"trace": self._encode_trace(trace),
                    "batch_size": batch_size, "by": by}
         if dests is not None:
             payload["dests"] = list(dests)
+        if deadline_ms is not None:
+            payload["deadline_ms"] = float(deadline_ms)
         rows = self._post("/rank", payload)["ranking"]
         for r in rows:      # decode the wire spelling of a free device
             if r["cost_normalized"] == "Infinity":
                 r["cost_normalized"] = float("inf")
         return rows
 
-    def sweep(self, traces, dests: Optional[Sequence[str]] = None
+    def sweep(self, traces, dests: Optional[Sequence[str]] = None,
+              deadline_ms: Optional[float] = None
               ) -> List[Dict[str, float]]:
         """One ``{device: iter_ms}`` dict per trace, input order."""
         payload = {"traces": [self._encode_trace(t) for t in traces]}
         if dests is not None:
             payload["dests"] = list(dests)
+        if deadline_ms is not None:
+            payload["deadline_ms"] = float(deadline_ms)
         return self._post("/sweep", payload)["times"]
 
     def optimize(self, traces, batch_sizes: Sequence[int],
@@ -356,6 +418,7 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                             flush_at=args.flush_at, mlps=args.mlps,
                             fleet=fleet)
     server = PredictionServer(service, host=args.host, port=args.port)
+    install_drain_handlers(server, service)
     print(f"serving on {server.url}", flush=True)   # launcher/test protocol
     try:
         server.serve_forever()
@@ -363,6 +426,41 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         pass
     finally:
         log_engine_caches(service)
+
+
+def install_drain_handlers(server, service: PredictionService) -> None:
+    """SIGTERM/SIGINT -> graceful drain -> shutdown -> exit 0.
+
+    Shared by the threaded worker CLI and the launcher's single-worker
+    mode.  The handler only flips flags and hands the blocking work to a
+    thread (``server.shutdown()`` must not run on the serving thread the
+    signal interrupted).  Grace period: ``REPRO_DRAIN_GRACE_S`` (10.0) —
+    past it the worker exits anyway, reporting the unflushed remainder.
+    No-op outside the main thread (signals cannot be installed there;
+    embedded servers drain via ``server.drain()`` directly)."""
+    if threading.current_thread() is not threading.main_thread():
+        return
+    grace_s = env_float("REPRO_DRAIN_GRACE_S", 10.0)
+    fired = threading.Event()
+
+    def _drain_and_stop(signum, frame):
+        if fired.is_set():      # second signal: already draining
+            return
+        fired.set()
+
+        def _do():
+            quiesced = server.drain(timeout=grace_s)
+            adm = service.admission.stats()
+            print(f"drain on shutdown: quiesced={quiesced} "
+                  f"inflight={adm['inflight_requests']} "
+                  f"shed_503={adm['shed_503']} "
+                  f"shed_504={adm['shed_504']}", flush=True)
+            server.shutdown()
+
+        threading.Thread(target=_do, daemon=True).start()
+
+    signal.signal(signal.SIGTERM, _drain_and_stop)
+    signal.signal(signal.SIGINT, _drain_and_stop)
 
 
 if __name__ == "__main__":

@@ -51,6 +51,7 @@ from __future__ import annotations
 import argparse
 import asyncio
 import json
+import random
 import socket
 import struct
 import threading
@@ -58,6 +59,8 @@ import time
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core.batched import env_float, env_int
+from repro.serve import faults
+from repro.serve.admission import remaining_s
 from repro.serve.cache import CacheStats, Key, LRUCache
 
 __all__ = ["CacheServer", "NetCache", "main"]
@@ -245,12 +248,27 @@ class NetCache:
         degrade instantly (miss + ``degraded``) without touching the
         network, so a dead server cannot add its connect timeout to
         every request (``REPRO_NETCACHE_RECONNECT_S``, 1.0).
+    probe_s:
+        Timeout of the **half-open** probe: when the breaker window
+        lapses, the next call first pings with this short timeout
+        instead of re-paying the full call timeout x retries against a
+        still-dead server — a refused connect costs microseconds, a
+        black hole costs ``probe_s``.  A failed probe re-opens the
+        breaker with jitter (0.75–1.25 x ``reconnect_s``) so a worker
+        fleet does not re-probe in lockstep
+        (``REPRO_NETCACHE_PROBE_S``, 0.1).
+
+    The breaker is observable: :attr:`breaker_state` is ``"closed"``
+    (healthy), ``"open"`` (degrading instantly), or ``"half_open"``
+    (window lapsed, next call probes), surfaced in ``/stats`` under
+    ``cache.breaker_state``.
     """
 
     def __init__(self, address: str, timeout_s: Optional[float] = None,
                  retries: Optional[int] = None,
                  backoff_s: Optional[float] = None,
-                 reconnect_s: Optional[float] = None):
+                 reconnect_s: Optional[float] = None,
+                 probe_s: Optional[float] = None):
         if not address.startswith("tcp://"):
             raise ValueError(f"netcache address must be tcp://host:port, "
                              f"got {address!r}")
@@ -270,22 +288,58 @@ class NetCache:
                           if backoff_s is None else float(backoff_s))
         self.reconnect_s = (env_float("REPRO_NETCACHE_RECONNECT_S", 1.0)
                             if reconnect_s is None else float(reconnect_s))
+        self.probe_s = (env_float("REPRO_NETCACHE_PROBE_S", 0.1)
+                        if probe_s is None else float(probe_s))
         self.stats = CacheStats()
         self._lock = threading.Lock()
         self._sock: Optional[socket.socket] = None
         self._down_until = 0.0
+        self._tripped = False   # breaker opened and not yet re-proven
 
     def describe(self) -> str:
         return f"netcache({self.address})"
 
     # -- transport -----------------------------------------------------------
-    def _connect_locked(self) -> socket.socket:
+    @property
+    def breaker_state(self) -> str:
+        """``"closed"`` | ``"open"`` | ``"half_open"`` (see class doc)."""
+        with self._lock:
+            if not self._tripped:
+                return "closed"
+            return ("open" if time.monotonic() < self._down_until
+                    else "half_open")
+
+    def _connect_locked(self, timeout: float) -> socket.socket:
         if self._sock is None:
             sock = socket.create_connection((self.host, self.port),
-                                            timeout=self.timeout_s)
-            sock.settimeout(self.timeout_s)
+                                            timeout=timeout)
             self._sock = sock
+        self._sock.settimeout(timeout)
         return self._sock
+
+    def _half_open_probe_locked(self) -> None:
+        """Cheap liveness probe after the breaker window lapses.
+
+        One ping frame under the short ``probe_s`` timeout: success
+        closes the breaker (the probed socket is kept for the real
+        call); failure re-opens it with jitter and raises — the caller
+        degrades without ever paying the full timeout x retry budget
+        against a server that is still dead."""
+        try:
+            sock = self._connect_locked(self.probe_s)
+            sock.sendall(_pack({"op": "ping"}))
+            head = self._recv_exact(sock, _HEAD.size)
+            (n,) = _HEAD.unpack(head)
+            if n > _MAX_FRAME:
+                raise ConnectionError(f"oversized reply ({n})")
+            json.loads(self._recv_exact(sock, n))
+            self._tripped = False
+        except (OSError, ValueError, json.JSONDecodeError,
+                struct.error) as e:
+            self._drop_socket_locked()
+            self._down_until = time.monotonic() + self.reconnect_s * (
+                0.75 + 0.5 * random.random())
+            raise _CacheUnavailable(e)
 
     def _drop_socket_locked(self) -> None:
         if self._sock is not None:
@@ -311,15 +365,27 @@ class NetCache:
         Raises :class:`_CacheUnavailable` only after every attempt
         failed; the public methods translate that into degradation."""
         frame = _pack(doc)
+        # derive the socket budget from the enclosing request deadline
+        # (when one is bound): a tight budget must shrink the worst case
+        # a cache stall can add, degrading to a local compute instead of
+        # blocking the whole batch past its deadline
+        budget = remaining_s()
+        timeout = self.timeout_s
+        if budget is not None:
+            if budget < 0.001:
+                raise _CacheUnavailable("request deadline exhausted")
+            timeout = min(timeout, budget)
         with self._lock:
-            if time.monotonic() < self._down_until:
-                raise _CacheUnavailable("circuit open")
+            if self._tripped:
+                if time.monotonic() < self._down_until:
+                    raise _CacheUnavailable("circuit open")
+                self._half_open_probe_locked()  # raises if still dead
             last: Optional[BaseException] = None
             for attempt in range(self.retries + 1):
                 if attempt:
                     time.sleep(self.backoff_s * (1 << (attempt - 1)))
                 try:
-                    sock = self._connect_locked()
+                    sock = self._connect_locked(timeout)
                     sock.sendall(frame)
                     head = self._recv_exact(sock, _HEAD.size)
                     (n,) = _HEAD.unpack(head)
@@ -340,6 +406,7 @@ class NetCache:
                         struct.error) as e:
                     last = e
                     self._drop_socket_locked()
+            self._tripped = True
             self._down_until = time.monotonic() + self.reconnect_s
             raise _CacheUnavailable(last)
 
@@ -357,12 +424,14 @@ class NetCache:
         if not keys:
             return []
         try:
+            faults.inject("netcache.get_many")
             vals = self._call({"op": "get_many",
                                "keys": [self._encode(k) for k in keys]}
                               )["vals"]
             if len(vals) != len(keys):
                 raise _CacheUnavailable("short reply")
-        except (_CacheUnavailable, KeyError, TypeError):
+        except (faults.FaultInjected, _CacheUnavailable, KeyError,
+                TypeError):
             with self._lock:
                 self.stats.degraded += 1
                 self.stats.misses += len(keys)
@@ -407,11 +476,17 @@ class NetCache:
 
     def server_stats(self) -> Optional[Dict]:
         """GLOBAL cross-worker accounting from the server (None when
-        unreachable) — surfaced as the ``cache.netcache`` /stats block."""
+        unreachable) — surfaced as the ``cache.netcache`` /stats block.
+        The reachable payload carries ``breaker_state`` too (always
+        ``"closed"`` by construction — an open breaker means this very
+        call degrades to None; the standalone field on the ``cache``
+        /stats block is the one to alert on)."""
         try:
             resp = self._call({"op": "stats"})
             return {"entries": resp["entries"],
-                    "capacity": resp["capacity"], **resp["stats"]}
+                    "capacity": resp["capacity"],
+                    "breaker_state": self.breaker_state,
+                    **resp["stats"]}
         except (_CacheUnavailable, KeyError, TypeError):
             return None
 

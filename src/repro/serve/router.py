@@ -55,6 +55,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.batched import env_float, env_int
 from repro.core.trace import TrackedTrace
+from repro.serve import faults
+from repro.serve.admission import current_deadline, deadline_scope, \
+    remaining_s
 
 __all__ = ["FingerprintRouter", "RouterServer", "RoutedError", "main"]
 
@@ -105,6 +108,9 @@ class FingerprintRouter:
         self.timeout_s = float(timeout_s)
         self._lock = threading.Lock()
         self._alive = {w: True for w in self.workers}
+        #: last probe classification per worker: "up" | "unhealthy"
+        #: (alive but answering 5xx on /healthz) | "down" (transport)
+        self._state = {w: "up" for w in self.workers}
         self._ring: List[Tuple[int, str]] = []
         self._rebuild_ring_locked()
         self.stats_forwarded: Dict[str, int] = {w: 0 for w in self.workers}
@@ -154,19 +160,34 @@ class FingerprintRouter:
                 self._rebuild_ring_locked()
 
     # -- health --------------------------------------------------------------
-    def _probe(self, worker: str) -> bool:
+    def _probe(self, worker: str) -> str:
+        """Classify one worker: ``"up"`` | ``"unhealthy"`` | ``"down"``.
+
+        The distinction matters for diagnosis and for the forward path:
+        an HTTP error status on ``/healthz`` means the worker PROCESS is
+        alive but refusing work (e.g. draining, or an injected
+        heartbeat fault) — mark it down so traffic re-hashes, but it
+        costs no transport failover.  A refused/reset/timed-out probe is
+        a dead host ("down" — the failover-material case)."""
         try:
             with urllib.request.urlopen(worker + "/healthz",
                                         timeout=self.health_s) as resp:
-                return resp.status == 200
+                return "up" if resp.status == 200 else "unhealthy"
+        except urllib.error.HTTPError:
+            # MUST precede URLError (its superclass): a status is an
+            # answer from a live process, not a dead transport
+            return "unhealthy"
         except (urllib.error.URLError, OSError, ValueError):
-            return False
+            return "down"
 
     def check_health(self) -> Dict[str, bool]:
         """One synchronous sweep over every worker (the thread's body;
         also callable directly from tests/CLIs)."""
         for w in self.workers:
-            (self.mark_up if self._probe(w) else self.mark_down)(w)
+            state = self._probe(w)
+            with self._lock:
+                self._state[w] = state
+            (self.mark_up if state == "up" else self.mark_down)(w)
         with self._lock:
             return dict(self._alive)
 
@@ -191,13 +212,29 @@ class FingerprintRouter:
     # -- forwarding ----------------------------------------------------------
     def _forward(self, worker: str, path: str, body: bytes) -> bytes:
         """POST ``body`` to one worker; transport errors raise OSError
-        (failover material), HTTP statuses raise RoutedError (answers)."""
+        (failover material), HTTP statuses raise RoutedError (answers).
+
+        When the serving thread carries a deadline scope (bound by the
+        router face from ``X-Deadline-Ms``), the socket timeout shrinks
+        to the remaining budget and the header is re-derived so the
+        worker sees how much budget actually survives the hop."""
+        faults.inject("router.forward")     # FaultInjected IS-A OSError:
+        # it flows through the failover path like a real dead worker
+        headers = {"Content-Type": "application/json"}
+        timeout = self.timeout_s
+        budget = remaining_s()
+        if budget is not None:
+            if budget < 0.001:
+                raise RoutedError(504, json.dumps(
+                    {"error": "deadline_exceeded",
+                     "detail": "budget exhausted before forwarding"}
+                ).encode())
+            timeout = min(timeout, budget)
+            headers["X-Deadline-Ms"] = f"{budget * 1e3:.0f}"
         req = urllib.request.Request(
-            worker + path, data=body,
-            headers={"Content-Type": "application/json"}, method="POST")
+            worker + path, data=body, headers=headers, method="POST")
         try:
-            with urllib.request.urlopen(req,
-                                        timeout=self.timeout_s) as resp:
+            with urllib.request.urlopen(req, timeout=timeout) as resp:
                 return resp.read()
         except urllib.error.HTTPError as e:
             # MUST precede URLError: HTTPError subclasses it, and a 4xx/
@@ -258,14 +295,19 @@ class FingerprintRouter:
             groups.setdefault(self.owner(fp), []).append(i)
 
         extra = {k: v for k, v in payload.items() if k != "traces"}
+        # the fan-out runs on pool threads; re-bind the serving thread's
+        # deadline scope there so each forward derives its timeout from
+        # the same remaining budget
+        deadline = current_deadline()
 
         def _one(indices: List[int]) -> Dict:
             sub = dict(extra)
             sub["traces"] = [docs[i] for i in indices]
             # forward under the group's FIRST fingerprint: if the owner
             # died since grouping, the whole group fails over together
-            out = self.forward(fps[indices[0]], "/sweep",
-                               json.dumps(sub).encode())
+            with deadline_scope(deadline):
+                out = self.forward(fps[indices[0]], "/sweep",
+                                   json.dumps(sub).encode())
             return json.loads(out)
 
         futures = {self._pool.submit(_one, idx): idx
@@ -282,9 +324,11 @@ class FingerprintRouter:
     def stats(self) -> Dict:
         with self._lock:
             alive = dict(self._alive)
+            state = dict(self._state)
             forwarded = dict(self.stats_forwarded)
             ring_size = len(self._ring)
         return {"workers": {w: {"alive": alive[w],
+                                "state": state[w],
                                 "forwarded": forwarded[w]}
                             for w in self.workers},
                 "live_workers": sum(alive.values()),
@@ -329,12 +373,27 @@ class _RouterHandler(BaseHTTPRequestHandler):
             self._reply(400, {"error": f"bad Content-Length {length}"})
             return
         body = self.rfile.read(length)
+        # an X-Deadline-Ms header binds the remaining budget for this
+        # request: every downstream forward derives its socket timeout
+        # from it (and re-emits the surviving budget to the worker)
+        deadline = None
+        header_ms = self.headers.get("X-Deadline-Ms")
+        if header_ms is not None:
+            try:
+                ms = float(header_ms)
+            except ValueError:
+                self._reply(400, {"error":
+                                  f"bad X-Deadline-Ms {header_ms!r}"})
+                return
+            if ms > 0:
+                deadline = time.monotonic() + ms / 1e3
         try:
-            if self.path == "/rank":
-                self._reply_bytes(200, router.rank_bytes(body))
-            else:
-                out = router.sweep_request(json.loads(body))
-                self._reply_bytes(200, json.dumps(out).encode())
+            with deadline_scope(deadline):
+                if self.path == "/rank":
+                    self._reply_bytes(200, router.rank_bytes(body))
+                else:
+                    out = router.sweep_request(json.loads(body))
+                    self._reply_bytes(200, json.dumps(out).encode())
         except RoutedError as e:
             self._reply_bytes(e.status, e.body, e.retry_after)
         except (KeyError, ValueError, TypeError,

@@ -85,7 +85,9 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, \
 
 from repro.core.batched import env_float
 from repro.core.trace import TrackedTrace
-from repro.serve.admission import AdmissionController, Ticket
+from repro.serve import faults
+from repro.serve.admission import AdmissionController, DeadlineExceeded, \
+    Ticket, current_deadline, deadline_scope
 from repro.serve.cache import BackendLike
 from repro.serve.fleet import FleetChoice, FleetPlanner, rank_rows
 from repro.serve.optimizer import OptimizeResult, WhatIfOptimizer, \
@@ -122,28 +124,106 @@ class PendingQuery:
     ``done`` is set, so it must only schedule work (e.g.
     ``loop.call_soon_threadsafe``), never do it.  A callback attached
     after completion is the caller's race to handle — check
-    ``done.is_set()`` after assigning (see ``aserver._await_handle``)."""
+    ``done.is_set()`` after assigning (see ``aserver._await_handle``).
+
+    ``deadline`` is an *absolute* ``time.monotonic()`` instant; a query
+    whose deadline lapses before its batch answers is **cancelled** —
+    :meth:`get` raises :class:`DeadlineExceeded` — while the shared
+    engine pass still completes for the other batch members (the
+    leader's late ``finish`` finds the query already finalized and
+    no-ops).  Exactly one of ``finish``/``cancel`` wins; both are
+    idempotent, so the leader racing a cancelling waiter is safe."""
     kind: str                                   # "rank" | "sweep"
     traces: List[TrackedTrace]
     dests: Optional[Tuple[str, ...]]
     batch_size: int = 0
     by: str = "throughput"
+    deadline: Optional[float] = None            # absolute monotonic
+    #: window-closing reserve (seconds): the leader closes its window
+    #: this long BEFORE the deadline so the engine pass itself still
+    #: fits in the budget — firing at the deadline instant would turn
+    #: every capped window into a guaranteed cancellation race
+    exec_reserve_s: float = 0.0
     done: threading.Event = dataclasses.field(
         default_factory=threading.Event)
     result: Any = None
     error: Optional[BaseException] = None
     on_done: Optional[Callable[["PendingQuery"], None]] = None
+    _finalize_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False)
+    _finalized: bool = dataclasses.field(default=False, repr=False)
+
+    @property
+    def lane(self) -> str:
+        """The admission lane this query's kind maps to."""
+        return "interactive" if self.kind == "rank" else "bulk"
+
+    def remaining_s(self) -> Optional[float]:
+        """Seconds of deadline budget left (``None`` = unbounded)."""
+        if self.deadline is None:
+            return None
+        return max(self.deadline - time.monotonic(), 0.0)
 
     def get(self, timeout: Optional[float] = None):
-        """Block until the batch containing this query executed."""
-        if not self.done.wait(timeout):
-            raise TimeoutError(f"{self.kind} query still pending")
+        """Block until the batch containing this query executed.
+
+        Waits at most until the query's deadline; a lapsed deadline
+        cancels the query (per-query — the batch keeps going) and
+        raises :class:`DeadlineExceeded`.  A plain ``timeout`` lapse
+        without a deadline raises ``TimeoutError`` and leaves the query
+        pending, exactly as before."""
+        limit = None if timeout is None else time.monotonic() + timeout
+        while not self.done.is_set():
+            now = time.monotonic()
+            bounds = [b for b in (limit, self.deadline) if b is not None]
+            if not bounds:
+                self.done.wait()
+                break
+            if self.done.wait(max(min(bounds) - now, 0.0)):
+                break
+            now = time.monotonic()
+            if self.deadline is not None and now >= self.deadline:
+                err = DeadlineExceeded(
+                    f"{self.kind} deadline lapsed before the batch "
+                    "answered", lane=self.lane)
+                if self.cancel(err):
+                    raise err
+                break       # finish won the race: deliver the answer
+            if limit is not None and now >= limit:
+                raise TimeoutError(f"{self.kind} query still pending")
         if self.error is not None:
             raise self.error
         return self.result
 
     def finish(self) -> None:
         """Mark complete and wake waiters (threads AND event loops).
+
+        No-ops if the query was already cancelled — the late engine
+        answer must not resurrect a request the caller already gave up
+        on (its transport may have moved on or closed)."""
+        with self._finalize_lock:
+            if self._finalized:
+                return
+            self._finalized = True
+        self._fire()
+
+    def cancel(self, error: BaseException) -> bool:
+        """Finalize with ``error`` unless already finished.
+
+        Returns True when this call won (the query is now answered by
+        ``error``); False when ``finish``/an earlier ``cancel`` got
+        there first.  Used by deadline lapse and client disconnect —
+        the leader's eventual ``finish`` then no-ops."""
+        with self._finalize_lock:
+            if self._finalized:
+                return False
+            self._finalized = True
+            self.error = error
+        self._fire()
+        return True
+
+    def _fire(self) -> None:
+        """Set ``done`` + run ``on_done`` (exactly once, via the flag).
 
         A broken ``on_done`` hook must not kill the leader thread —
         every other waiter in the batch is still counting on it."""
@@ -240,6 +320,13 @@ class PredictionService:
             self.admission = admission
         else:
             self.admission = AdmissionController(enabled=bool(admission))
+        #: default end-to-end deadline for wire requests that carry
+        #: neither a ``deadline_ms`` field nor an ``X-Deadline-Ms``
+        #: header; 0 (the default) means unbounded
+        self.default_deadline_ms = env_float("REPRO_DEADLINE_MS", 0.0)
+        #: draining: leaders flush immediately and front ends shed new
+        #: work with 503 (see :meth:`drain`)
+        self._draining = False
         #: EWMA of recent batch sizes — the adaptive window's load signal
         self._batch_ewma = 1.0
         #: seed constants of the union/split cost model; measured engine
@@ -251,6 +338,7 @@ class PredictionService:
         self._cond = threading.Condition()
         self._pending: List[PendingQuery] = []
         self._leader_active = False
+        self._executing = 0     # batches between snapshot and finish
         # counters (every mutation AND every read happens under
         # self._cond — including the union counters bumped from the
         # leader's _execute, which runs outside the queue lock)
@@ -281,15 +369,19 @@ class PredictionService:
     # -- public query API ---------------------------------------------------
     def rank(self, trace: TrackedTrace, batch_size: int,
              by: str = "throughput",
-             dests: Optional[Sequence[str]] = None) -> List[FleetChoice]:
+             dests: Optional[Sequence[str]] = None,
+             deadline: Optional[float] = None) -> List[FleetChoice]:
         """Coalesced equivalent of ``FleetPlanner.rank`` (same answer)."""
-        return self._submit(self.submit_rank(trace, batch_size, by, dests))
+        return self._submit(self.submit_rank(trace, batch_size, by, dests,
+                                             deadline=deadline))
 
     def sweep(self, traces: Sequence[TrackedTrace],
-              dests: Optional[Sequence[str]] = None
+              dests: Optional[Sequence[str]] = None,
+              deadline: Optional[float] = None
               ) -> List[Dict[str, float]]:
         """Coalesced equivalent of ``FleetPlanner.sweep`` (same answer)."""
-        return self._submit(self.submit_sweep(traces, dests))
+        return self._submit(self.submit_sweep(traces, dests,
+                                              deadline=deadline))
 
     def optimize(self, traces: Sequence[TrackedTrace],
                  batch_sizes: Sequence[int],
@@ -320,29 +412,45 @@ class PredictionService:
     # -- non-blocking submission --------------------------------------------
     def submit_rank(self, trace: TrackedTrace, batch_size: int,
                     by: str = "throughput",
-                    dests: Optional[Sequence[str]] = None) -> PendingQuery:
+                    dests: Optional[Sequence[str]] = None,
+                    deadline: Optional[float] = None) -> PendingQuery:
         """Enqueue a rank query without blocking; ``handle.get()`` waits.
 
         Lets a transport with its own event loop (or a burst generator)
         keep many queries in flight from one thread — they coalesce
-        exactly like queries from concurrent threads."""
+        exactly like queries from concurrent threads.  ``deadline`` is
+        an absolute monotonic instant; omitted, it inherits any
+        enclosing :func:`~repro.serve.admission.deadline_scope` (so
+        e.g. an optimizer search's internal sweeps share the search's
+        budget)."""
         if by not in ("throughput", "cost"):    # fail before queueing: a
             # bad request must never poison the batch it would share
             raise ValueError(f"unknown ranking objective {by!r}")
+        if deadline is None:
+            deadline = current_deadline()
         req = PendingQuery(kind="rank", traces=[trace],
                            dests=tuple(dests) if dests is not None else None,
-                           batch_size=int(batch_size), by=by)
+                           batch_size=int(batch_size), by=by,
+                           deadline=deadline)
+        if deadline is not None:
+            req.exec_reserve_s = self._deadline_reserve_s([trace], dests)
         self._enqueue(req)
         return req
 
     def submit_sweep(self, traces: Sequence[TrackedTrace],
-                     dests: Optional[Sequence[str]] = None) -> PendingQuery:
+                     dests: Optional[Sequence[str]] = None,
+                     deadline: Optional[float] = None) -> PendingQuery:
         """Enqueue a sweep query without blocking; ``handle.get()`` waits."""
         traces = list(traces)
         if not traces:
             raise ValueError("sweep needs at least one trace")
+        if deadline is None:
+            deadline = current_deadline()
         req = PendingQuery(kind="sweep", traces=traces,
-                           dests=tuple(dests) if dests is not None else None)
+                           dests=tuple(dests) if dests is not None else None,
+                           deadline=deadline)
+        if deadline is not None:
+            req.exec_reserve_s = self._deadline_reserve_s(traces, dests)
         self._enqueue(req)
         return req
 
@@ -386,20 +494,51 @@ class PredictionService:
         """Sweep answer as its wire document (``{"labels", "times"}``)."""
         return {"labels": [t.label for t in traces], "times": rows}
 
-    def rank_request(self, payload: Union[str, Dict]) -> Dict:
+    def resolve_deadline(self, payload: Optional[Dict] = None,
+                         header_ms: Optional[float] = None
+                         ) -> Optional[float]:
+        """Resolve a request's deadline to an absolute monotonic instant.
+
+        Precedence: the payload's ``deadline_ms`` field, then the
+        transport's ``X-Deadline-Ms`` header (``header_ms``), then the
+        ``REPRO_DEADLINE_MS`` default.  All are *relative* milliseconds
+        of budget from now; ``None``/0/negative means unbounded."""
+        ms: Optional[float] = None
+        if payload is not None and payload.get("deadline_ms") is not None:
+            ms = float(payload["deadline_ms"])
+        elif header_ms is not None:
+            ms = float(header_ms)
+        elif self.default_deadline_ms > 0:
+            ms = self.default_deadline_ms
+        if ms is None or ms <= 0:
+            return None
+        return time.monotonic() + ms / 1e3
+
+    def rank_request(self, payload: Union[str, Dict],
+                     deadline_ms: Optional[float] = None) -> Dict:
         """Serve one wire-format rank query (admission applies).
 
         Payload: ``{"trace": <to_dict() doc or to_json() str>,
         "batch_size": int, "by"?: "throughput"|"cost",
-        "dests"?: [device, ...]}``.  Returns ``{"label", "ranking"}``
-        where ranking rows are ``FleetChoice`` dicts, best first.
-        Raises :class:`~repro.serve.admission.AdmissionError` when the
+        "dests"?: [device, ...], "deadline_ms"?: float}``.  Returns
+        ``{"label", "ranking"}`` where ranking rows are ``FleetChoice``
+        dicts, best first.  Raises
+        :class:`~repro.serve.admission.AdmissionError` when the
         admission controller sheds the request (transports map it to
-        429/503 + Retry-After)."""
-        trace, batch_size, by, dests = self.decode_rank(payload)
-        ticket = self.admit_request("rank", [trace], dests)
+        429/503 + Retry-After) and
+        :class:`~repro.serve.admission.DeadlineExceeded` (504) when the
+        deadline budget is blown at admission or delivery."""
+        p = json.loads(payload) if isinstance(payload, str) else payload
+        trace, batch_size, by, dests = self.decode_rank(p)
+        deadline = self.resolve_deadline(p, deadline_ms)
+        ticket = self.admit_request("rank", [trace], dests,
+                                    deadline=deadline)
         try:
-            choices = self.rank(trace, batch_size, by=by, dests=dests)
+            choices = self.rank(trace, batch_size, by=by, dests=dests,
+                                deadline=deadline)
+        except DeadlineExceeded:
+            self.admission.record_deadline_shed(ticket.lane)
+            raise
         finally:
             self.admission.release(ticket)
         return self.encode_rank(trace, choices)
@@ -437,7 +576,8 @@ class PredictionService:
                                    "frontier_cap", "seed") if k in p}
         return traces, batch_sizes, p.get("dests"), knobs
 
-    def optimize_request(self, payload: Union[str, Dict]) -> Dict:
+    def optimize_request(self, payload: Union[str, Dict],
+                         deadline_ms: Optional[float] = None) -> Dict:
         """Serve one wire-format what-if search (bulk-lane admission).
 
         Payload: ``{"traces": [<trace doc>, ...], "batch_sizes":
@@ -449,26 +589,44 @@ class PredictionService:
         bound on every generation's engine work, since cells are priced
         at most once per search.  Raises
         :class:`~repro.serve.admission.AdmissionError` when shed."""
-        traces, batch_sizes, dests, knobs = self.decode_optimize(payload)
-        ticket = self.admit_request("optimize", traces, dests)
+        p = json.loads(payload) if isinstance(payload, str) else payload
+        traces, batch_sizes, dests, knobs = self.decode_optimize(p)
+        deadline = self.resolve_deadline(p, deadline_ms)
+        ticket = self.admit_request("optimize", traces, dests,
+                                    deadline=deadline)
         try:
-            result = self.optimize(traces, batch_sizes, dests=dests,
-                                   **knobs)
+            # the scope makes every generation's internal sweep inherit
+            # the search's remaining budget (submit_* pick it up)
+            with deadline_scope(deadline):
+                result = self.optimize(traces, batch_sizes, dests=dests,
+                                       **knobs)
+        except DeadlineExceeded:
+            self.admission.record_deadline_shed(ticket.lane)
+            raise
         finally:
             self.admission.release(ticket)
         return encode_optimize(result)
 
-    def sweep_request(self, payload: Union[str, Dict]) -> Dict:
+    def sweep_request(self, payload: Union[str, Dict],
+                      deadline_ms: Optional[float] = None) -> Dict:
         """Serve one wire-format sweep query (bulk-lane admission).
 
-        Payload: ``{"traces": [<trace doc>, ...], "dests"?: [...]}``.
-        Returns ``{"labels": [...], "times": [{device: ms}, ...]}`` in
-        input trace order.  Raises
-        :class:`~repro.serve.admission.AdmissionError` when shed."""
-        traces, dests = self.decode_sweep(payload)
-        ticket = self.admit_request("sweep", traces, dests)
+        Payload: ``{"traces": [<trace doc>, ...], "dests"?: [...],
+        "deadline_ms"?: float}``.  Returns ``{"labels": [...], "times":
+        [{device: ms}, ...]}`` in input trace order.  Raises
+        :class:`~repro.serve.admission.AdmissionError` when shed and
+        :class:`~repro.serve.admission.DeadlineExceeded` when the
+        deadline budget is blown."""
+        p = json.loads(payload) if isinstance(payload, str) else payload
+        traces, dests = self.decode_sweep(p)
+        deadline = self.resolve_deadline(p, deadline_ms)
+        ticket = self.admit_request("sweep", traces, dests,
+                                    deadline=deadline)
         try:
-            rows = self.sweep(traces, dests=dests)
+            rows = self.sweep(traces, dests=dests, deadline=deadline)
+        except DeadlineExceeded:
+            self.admission.record_deadline_shed(ticket.lane)
+            raise
         finally:
             self.admission.release(ticket)
         return self.encode_sweep(traces, rows)
@@ -496,18 +654,49 @@ class PredictionService:
                 ops += len(getattr(t, "ops", ()))  # let validation 400 it
         return c_pass + self._warm_discount() * ops * n_dests * c_cell
 
+    def _deadline_reserve_s(self, traces: Sequence[TrackedTrace],
+                            dests: Optional[Sequence[str]] = None) -> float:
+        """Window-closing reserve for a deadlined query (seconds).
+
+        The leader must close its coalescing window this long before
+        the query's deadline so the engine pass still fits inside the
+        budget.  The estimate is the same fitted pass model admission
+        prices with, floored at 10 ms: scheduling jitter between the
+        leader finishing and the deadline waiter waking is real, and a
+        reserve below it makes every tight deadline a coin flip."""
+        try:
+            est = self.estimate_cost_s(traces, dests)
+        except Exception:       # an unpriceable trace still gets the floor
+            est = 0.0
+        return max(est, 0.010)
+
     def admit_request(self, kind: str,
                       traces: Sequence[TrackedTrace],
-                      dests: Optional[Sequence[str]] = None) -> Ticket:
+                      dests: Optional[Sequence[str]] = None,
+                      deadline: Optional[float] = None) -> Ticket:
         """Price one front-door request and reserve admission budget.
 
         ``kind`` maps to the priority lane: "rank" -> interactive,
         anything else -> bulk.  Returns the ticket to release when the
         request finishes; raises
-        :class:`~repro.serve.admission.AdmissionError` when shed."""
+        :class:`~repro.serve.admission.AdmissionError` when shed.
+
+        With a ``deadline`` (absolute monotonic), a request whose
+        *projected* engine cost already exceeds the remaining budget is
+        shed instantly with :class:`DeadlineExceeded` (504) — queueing
+        work the caller will never read only steals capacity from
+        requests that can still make their deadlines."""
         lane = "interactive" if kind == "rank" else "bulk"
-        return self.admission.admit(lane,
-                                    self.estimate_cost_s(traces, dests))
+        cost_s = self.estimate_cost_s(traces, dests)
+        if deadline is not None:
+            remaining = deadline - time.monotonic()
+            if cost_s > remaining:
+                self.admission.record_deadline_shed(lane)
+                raise DeadlineExceeded(
+                    f"projected cost {cost_s:.3f}s exceeds remaining "
+                    f"deadline budget {max(remaining, 0.0):.3f}s",
+                    lane=lane, remaining_s=max(remaining, 0.0))
+        return self.admission.admit(lane, cost_s)
 
     def stats(self) -> Dict:
         """Service + cache accounting (the ``/stats`` payload).
@@ -536,6 +725,7 @@ class PredictionService:
                 "flush_at": self.flush_at,
                 "union_grid": self.union_grid,
                 "split_planner": self.split_planner,
+                "executing": self._executing,
             }
             optimizer = {
                 "optimize_searches": self._opt_searches,
@@ -559,6 +749,11 @@ class PredictionService:
         server_stats = getattr(self.planner.cache, "server_stats", None)
         if callable(server_stats):
             cache["netcache"] = server_stats()
+            # breaker observability: closed | open | half_open — "open"
+            # here is what a netcache=None block looks like from the
+            # client's side, so dashboards can tell outage from idle
+            cache["breaker_state"] = getattr(self.planner.cache,
+                                             "breaker_state", "closed")
         return {"requests": requests, "coalescing": coalescing,
                 "engine_passes": self.planner.engine_pass_count(),
                 "split_model": {"pass_overhead_ms": c_pass * 1e3,
@@ -569,7 +764,9 @@ class PredictionService:
                 "optimizer": optimizer,
                 "cache": cache,
                 "engine_caches": self.planner.engine_cache_stats(),
-                "fleet": self.planner.fleet}
+                "fleet": self.planner.fleet,
+                "draining": self._draining,
+                "faults": faults.stats()}
 
     # -- coalescing core ----------------------------------------------------
     def _enqueue(self, req: PendingQuery) -> None:
@@ -598,16 +795,35 @@ class PredictionService:
 
         ``_leader_active`` flips off under the same lock that snapshots
         the queue, so a request arriving mid-execution starts the NEXT
-        batch (with itself as leader) instead of being dropped."""
-        deadline = time.monotonic() + self.effective_window_ms() / 1e3
+        batch (with itself as leader) instead of being dropped.
+
+        The wait is capped by the tightest pending *deadline*: the
+        adaptive window may stretch for company, but never past the
+        instant a queued request's budget — minus its execution reserve
+        (the estimated cost of the pass it will join) — lapses.
+        Stretching past that would turn a meetable deadline into a
+        guaranteed 504: a window that closes AT the deadline leaves the
+        pass itself no budget at all.  Draining also cuts the wait — a
+        shutting-down worker flushes what it has now."""
+        window_end = time.monotonic() + self.effective_window_ms() / 1e3
         with self._cond:
             while len(self._pending) < self.flush_at:
-                remaining = deadline - time.monotonic()
+                if self._draining:
+                    break
+                end = window_end
+                for q in self._pending:
+                    if q.deadline is None:
+                        continue
+                    cut = q.deadline - q.exec_reserve_s
+                    if cut < end:
+                        end = cut
+                remaining = end - time.monotonic()
                 if remaining <= 0:
                     break
                 self._cond.wait(remaining)
             batch, self._pending = self._pending, []
             self._leader_active = False
+            self._executing += 1
             self._batches += 1
             self._max_batch = max(self._max_batch, len(batch))
             if len(batch) > 1:
@@ -616,7 +832,12 @@ class PredictionService:
             # (alpha 0.3 — a handful of batches to adapt, so one odd
             # batch cannot whip the window around)
             self._batch_ewma += 0.3 * (len(batch) - self._batch_ewma)
-        self._execute(batch)
+        try:
+            self._execute(batch)
+        finally:
+            with self._cond:
+                self._executing -= 1
+                self._cond.notify_all()     # wake a waiting drain()
 
     def effective_window_ms(self) -> float:
         """The window the NEXT leader will wait (adaptive or static)."""
@@ -626,6 +847,37 @@ class PredictionService:
             ewma = self._batch_ewma
         return adaptive_window_ms(self.coalesce_window_ms,
                                   self.window_max_ms, ewma, self.flush_at)
+
+    # -- graceful drain ------------------------------------------------------
+    @property
+    def draining(self) -> bool:
+        """True once :meth:`drain` began — front ends shed new work."""
+        return self._draining
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Flush in-flight coalescing windows and wait for quiescence.
+
+        Sets the draining flag (front ends consult it to shed new work
+        with 503 + Retry-After), wakes every waiting leader so open
+        windows close *now* instead of stretching for company, then
+        waits until no request is pending and no leader is running.
+        Returns True on quiescence, False on timeout.  Idempotent —
+        a second SIGTERM just re-waits."""
+        limit = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            self._draining = True
+            self._cond.notify_all()
+            while self._pending or self._leader_active or self._executing:
+                remaining = (None if limit is None
+                             else limit - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    return False
+                # executing leaders notify on finish; the short cap
+                # covers the snapshot gap (leader off, execute not yet
+                # counted) without a busy loop
+                self._cond.wait(0.05 if remaining is None
+                                else min(remaining, 0.05))
+            return True
 
     def _execute(self, batch: List[PendingQuery]) -> None:
         """Union-grid engine pass(es) for the whole batch.
@@ -816,9 +1068,21 @@ class PredictionService:
                     uniq.setdefault(t.fingerprint(), t)
             order = list(uniq)
             miss0 = self.planner.stats.misses
+            # bind the tightest member deadline for the pass: deep
+            # layers (netcache, router) derive socket timeouts from it,
+            # degrading to a local compute instead of blocking past the
+            # budget.  The scope never aborts the sweep itself — the
+            # pass still completes for every member.
+            scope = None
+            for req, _ in resolved:
+                if req.deadline is not None and (scope is None
+                                                 or req.deadline < scope):
+                    scope = req.deadline
+            faults.inject("engine.pass")
             t0 = time.perf_counter()
-            rows = self.planner.sweep([uniq[fp] for fp in order],
-                                      dests=union)
+            with deadline_scope(scope):
+                rows = self.planner.sweep([uniq[fp] for fp in order],
+                                          dests=union)
             dt = time.perf_counter() - t0
             # credit the sample with the op-cells actually COMPUTED, not
             # the full rectangle: with cell-level cache fills a warm pass

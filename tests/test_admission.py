@@ -242,3 +242,69 @@ def test_threaded_server_sheds_with_retry_after():
         assert stats["admission"]["shed_429"] == 1
     finally:
         server.shutdown()
+
+
+# -- release-on-cancel: exactly once under concurrent cancellation -----------
+# (hypothesis is a dev-only dependency — same gating as test_properties)
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    from repro.serve.admission import DeadlineExceeded
+    from repro.serve.service import PendingQuery
+
+    @settings(max_examples=30, deadline=None)
+    @given(n_cancellers=st.integers(1, 6), cost=st.floats(0.01, 0.5),
+           finisher_races=st.booleans())
+    def test_release_on_cancel_exactly_once(n_cancellers, cost,
+                                            finisher_races):
+        """The on_done -> release bridge fires exactly once no matter
+        how many cancellations race one finish: the admission budget is
+        conserved bit-for-bit (a double release would underflow it, a
+        missed one would leak inflight cost forever)."""
+        ctl = AdmissionController(max_queue=100, max_inflight_s=10.0)
+        ticket = ctl.admit("interactive", cost)
+        releases = []
+
+        def bridge(_q):
+            releases.append(1)
+            ctl.release(ticket)
+
+        q = PendingQuery(kind="rank", traces=[], dests=None,
+                         on_done=bridge)
+        q.result = "ok"
+        n_parties = n_cancellers + (1 if finisher_races else 0)
+        barrier = threading.Barrier(n_parties)
+        wins = []
+        lock = threading.Lock()
+
+        def canceller():
+            barrier.wait()
+            if q.cancel(DeadlineExceeded("lapsed")):
+                with lock:
+                    wins.append("cancel")
+                ctl.release(ticket)     # wire paths also release in
+                # their finally blocks — idempotence must absorb it
+
+        def finisher():
+            barrier.wait()
+            q.finish()
+            ctl.release(ticket)
+
+        threads = [threading.Thread(target=canceller)
+                   for _ in range(n_cancellers)]
+        if finisher_races:
+            threads.append(threading.Thread(target=finisher))
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert len(releases) == 1       # on_done fired exactly once
+        assert len(wins) <= 1
+        s = ctl.stats()
+        assert s["inflight_requests"] == 0
+        assert s["inflight_cost_s"] == 0.0
+        assert s["admitted"]["interactive"] == 1

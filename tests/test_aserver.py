@@ -7,7 +7,9 @@ byte-identical to the in-process planner.
 """
 
 import json
+import os
 import threading
+import time
 import urllib.error
 import urllib.request
 
@@ -176,3 +178,65 @@ def test_iter_sse_framing():
     # stream truncated without the trailing blank line still yields
     assert list(iter_sse((b"event: row\n", b"data: {}\n"))) == \
         [("row", {})]
+
+
+def test_sse_client_disconnect_releases_ticket_and_tasks():
+    """A client that vanishes mid-stream must not leak: the admission
+    ticket releases, no pending query or asyncio task survives."""
+    import asyncio
+    import socket
+
+    from repro.serve import faults
+
+    service = PredictionService(predictor=HabitatPredictor(),
+                                coalesce_window_ms=1.0)
+    srv = AsyncPredictionServer(service).start()
+    client = PredictionClient(srv.url)
+    try:
+        traces = [_trace(10 + 2 * i, f"disc-{i}") for i in range(6)]
+        client.rank(traces[0], batch_size=8)        # warm the engine
+
+        def _tasks():
+            async def _count():
+                return sum(1 for t in asyncio.all_tasks() if not t.done())
+            return asyncio.run_coroutine_threadsafe(
+                _count(), srv._loop).result(timeout=5)
+
+        baseline_tasks = _tasks()
+        faults.arm("engine.pass:delay=150ms,p=1.0")
+        payload = json.dumps({
+            "traces": [t.to_dict() for t in traces],
+            "dests": ["T4", "V100"]}).encode()
+        host, port = srv.host, srv.port
+        sock = socket.create_connection((host, port), timeout=10)
+        sock.sendall(
+            b"POST /sweep/stream HTTP/1.1\r\n"
+            b"Host: x\r\nContent-Type: application/json\r\n"
+            b"Content-Length: " + str(len(payload)).encode() + b"\r\n"
+            b"\r\n" + payload)
+        sock.recv(256)          # the 200 + SSE headers arrived: streaming
+        sock.shutdown(socket.SHUT_RDWR)     # client walks away mid-stream
+        sock.close()
+
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline and \
+                client.stats()["admission"]["inflight_requests"]:
+            time.sleep(0.05)
+        adm = client.stats()["admission"]
+        assert adm["inflight_requests"] == 0        # ticket released
+        assert adm["inflight_cost_s"] == 0.0
+        # the /stats connections above each ride their own handler task;
+        # give those (and the reaped stream) a beat to wind down before
+        # asserting nothing leaked
+        deadline = time.monotonic() + 5.0
+        while time.monotonic() < deadline and _tasks() > baseline_tasks:
+            time.sleep(0.05)
+        assert _tasks() <= baseline_tasks           # no leaked task
+        with service._cond:                         # no leaked query
+            assert not service._pending
+    finally:
+        faults.disarm()
+        env_spec = os.environ.get("REPRO_FAULTS", "").strip()
+        if env_spec:            # keep CI's chaos-job arming intact
+            faults.arm(env_spec)
+        srv.shutdown()
