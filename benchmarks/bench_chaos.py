@@ -259,17 +259,28 @@ def _phase_b(csv: Csv, smoke: bool) -> None:
 
 
 def _phase_c(csv: Csv, smoke: bool) -> None:
+    import tempfile
+    from repro.serve.snapshot import SnapshotManager
+
     n_traces = 4 if smoke else 8
     n_rounds = 2 if smoke else 4
     traces = [synthetic_trace(14 + 2 * i, origin="T4", seed=990 + i)
               for i in range(n_traces)]
     planner = FleetPlanner(predictor=HabitatPredictor())
     oracles = [planner.rank(t, batch_size=_BATCH) for t in traces]
+    # sqlite result cache so the ``cache.corrupt`` point is on the read
+    # path (it tampers a row's stored digest — the checksum must catch
+    # it and degrade to a recompute, never serve the corrupt value)
+    tmp = Path(tempfile.mkdtemp(prefix="chaos-parity-"))
     service = PredictionService(predictor=HabitatPredictor(),
+                                cache=str(tmp / "cache.sqlite"),
                                 coalesce_window_ms=5.0,
                                 adaptive_window=False)
+    snap = SnapshotManager(tmp / "chaos.snap", service, interval_s=0)
 
-    faults.arm("engine.pass:error,delay=2ms,p=0.5", seed=7)
+    faults.arm("engine.pass:error,delay=2ms,p=0.5;"
+               "cache.corrupt:error,p=0.3;"
+               "snapshot.write:error,p=0.5", seed=7)
     t0 = time.perf_counter()
     try:
         for r in range(n_rounds):
@@ -277,20 +288,25 @@ def _phase_c(csv: Csv, smoke: bool) -> None:
                 rows = service.rank(trace, batch_size=_BATCH)
                 _assert_bitwise(rows, oracles[j],
                                 f"phase C round {r} trace {j}")
-        fstats = faults.stats()["points"]["engine.pass"]
+            snap.save()     # some saves fail via the injected fault —
+            # a failed (or torn) snapshot must never corrupt answers
+        fstats = faults.stats()["points"]
     finally:
         faults.disarm()
     dt = time.perf_counter() - t0
-    if fstats["fired"] == 0:
-        raise AssertionError(
-            "fault injection never fired — the parity gate tested "
-            "nothing (raise p or rounds)")
-    print(f"  phase C     : {n_rounds * n_traces} reqs with "
-          f"engine.pass:error,p=0.5 armed | fired={fstats['fired']} "
-          f"skipped={fstats['skipped']} | every completed answer "
-          f"bitwise-identical to the fault-free oracle")
+    for point in ("engine.pass", "cache.corrupt"):
+        if fstats[point]["fired"] == 0:
+            raise AssertionError(
+                f"{point} never fired — the parity gate tested "
+                "nothing (raise p or rounds)")
+    fired = ", ".join(f"{k}={v['fired']}" for k, v in fstats.items())
+    print(f"  phase C     : {n_rounds * n_traces} reqs with engine.pass/"
+          f"cache.corrupt/snapshot.write armed | fired {fired} | "
+          f"snapshot saves ok={snap.saves} failed={snap.save_errors} | "
+          f"every completed answer bitwise-identical to the fault-free "
+          f"oracle")
     csv.add("chaos_parity", dt / (n_rounds * n_traces) * 1e6,
-            f"fired{fstats['fired']}_bitwise")
+            f"fired{fstats['engine.pass']['fired']}_bitwise")
 
 
 def run(csv: Csv, smoke: bool = False) -> None:

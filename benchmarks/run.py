@@ -67,11 +67,15 @@ BENCHES = [
      "Fault-tolerant serving: deadlines honored under 10x injected "
      "slowness (>=95% within deadline+100ms), supervised SIGKILL restart "
      "(zero lost, re-admitted <=3 sweeps), fault parity (bitwise)"),
+    ("recovery", "benchmarks.bench_recovery",
+     "Durable warm state: post-SIGKILL snapshot restore >=3x warmer "
+     "than cold restart (bitwise), corrupt snapshot degrades to cold "
+     "with zero failures, poison traces quarantined with 422"),
 ]
 
 #: the subset (and reduced sizes) run by CI's bench-smoke job
 SMOKE_KEYS = ("fleet", "sweep", "service", "union", "dispatch", "kernels",
-              "frontdoor", "cluster", "optimizer", "chaos")
+              "frontdoor", "cluster", "optimizer", "chaos", "recovery")
 
 
 def main() -> None:

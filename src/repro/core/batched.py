@@ -222,6 +222,36 @@ class _WaveFactorCache:
             self._total_bytes = 0
             self.hits = self.misses = self.inserts = self.evictions = 0
 
+    def export_state(self) -> List[Tuple]:
+        """Pickle-safe snapshot of every entry (``serve/snapshot.py``).
+
+        The stored ``DeviceArrays`` instance is identity-validated and
+        cannot survive a process boundary, so each exported entry ships
+        ``(key, origins, factor, overheads)`` only — the fleet names
+        ride inside the key and :meth:`import_state` re-resolves them."""
+        with self._lock:
+            return [(key, e[1], e[2], e[3])
+                    for key, e in self._data.items()]
+
+    def import_state(self, entries) -> int:
+        """Restore :meth:`export_state` entries into this cache.
+
+        Each entry's fleet names are re-resolved through the memoized
+        ``devices.arrays_for`` — yielding the exact instance the engine
+        will present on lookup — so the instance-identity staleness
+        guard keeps working after restore.  Entries naming devices no
+        longer in the registry are skipped (the registry moved on; a
+        stale factor must stay cold).  Returns the number restored."""
+        restored = 0
+        for key, origins, factor, overheads in entries:
+            try:
+                da = devices.arrays_for(key[1])
+            except KeyError:
+                continue
+            self.insert(key, da, origins, factor, overheads)
+            restored += 1
+        return restored
+
 
 #: the process-wide cross-stack wave-factor cache (see class docstring)
 WAVE_FACTOR_CACHE = _WaveFactorCache()
@@ -777,6 +807,37 @@ class _StackCache:
             self._bytes.clear()
             self._total_bytes = 0
             self.hits = self.extends = self.builds = 0
+
+    def export_state(self) -> List[Tuple]:
+        """Pickle-safe ``(key, stack)`` snapshot (``serve/snapshot.py``).
+
+        :class:`RaggedTraceArrays` is numpy arrays + string lists all
+        the way down (the private memo fields are plain dataclasses of
+        the same), so entries pickle as-is."""
+        with self._lock:
+            return list(self._data.items())
+
+    def import_state(self, entries) -> int:
+        """Restore :meth:`export_state` entries (LRU/byte bounds apply).
+
+        Imports do not count as builds — the restored warmth is the
+        point, not engine work.  Returns the number restored."""
+        restored = 0
+        for key, stack in entries:
+            nbytes = self._nbytes(stack)
+            with self._lock:
+                if key in self._data:
+                    self._total_bytes -= self._bytes.pop(key)
+                self._data[key] = stack
+                self._bytes[key] = nbytes
+                self._total_bytes += nbytes
+                self._data.move_to_end(key)
+                while self._data and (len(self._data) > self.capacity
+                                      or self._total_bytes > self.max_bytes):
+                    old_key, _ = self._data.popitem(last=False)
+                    self._total_bytes -= self._bytes.pop(old_key)
+            restored += 1
+        return restored
 
 
 #: the process-wide stack cache behind ``stack_traces(cache=True)``

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import integrity
 from repro.core.dataset import Dataset
 
 
@@ -152,12 +153,21 @@ class TrainedMLP:
                 "mean": self.feature_mean, "std": self.feature_std,
                 "test_mape": self.test_mape}
         with open(path, "wb") as f:
-            pickle.dump(blob, f)
+            f.write(integrity.seal(pickle.dumps(blob)))
 
     @staticmethod
     def load(path: Path) -> "TrainedMLP":
+        """Load a sealed artifact (``integrity.IntegrityError`` on a
+        checksum mismatch — ``predictor.train_mlps`` treats that as
+        missing and retrains).  Raw-pickle artifacts written before the
+        integrity envelope existed (e.g. the CI artifact cache) still
+        load; they are re-sealed the next time they are saved."""
         with open(path, "rb") as f:
-            blob = pickle.load(f)
+            raw = f.read()
+        if integrity.is_sealed(raw):
+            blob = pickle.loads(integrity.unseal(raw))
+        else:                           # legacy pre-envelope artifact
+            blob = pickle.loads(raw)
         return TrainedMLP(
             kind=blob["kind"], cfg=MLPConfig(**blob["cfg"]),
             params=[(jnp.asarray(w), jnp.asarray(b))

@@ -15,13 +15,14 @@ from __future__ import annotations
 
 import copy
 import dataclasses
+import pickle
 from pathlib import Path
 from typing import Dict, Optional, Sequence
 
 import numpy as np
 
 from repro.core import batched, dataset as dataset_mod
-from repro.core import devices, mlp, wave_scaling
+from repro.core import devices, integrity, mlp, wave_scaling
 from repro.core.batched import FleetPrediction
 from repro.core.devices import DeviceSpec
 from repro.core.trace import Op, TrackedTrace
@@ -321,8 +322,15 @@ def train_mlps(kinds: Sequence[str] = ("conv2d", "linear", "bmm",
         path = artifacts.artifact_path(cache_dir, kind, cfg, n_configs,
                                        device_names)
         if path.exists() and not force:
-            out[kind] = mlp.TrainedMLP.load(path)
-            continue
+            try:
+                out[kind] = mlp.TrainedMLP.load(path)
+                continue
+            except (integrity.IntegrityError, pickle.UnpicklingError,
+                    EOFError, KeyError) as e:
+                # a corrupt artifact is a cache miss, not a crash: fall
+                # through to retrain (which overwrites it re-sealed)
+                print(f"MLP artifact {path} is corrupt ({e}); retraining")
+                integrity.COUNTERS.bump("artifact")
         ds = dataset_mod.build_dataset(kind, n_configs,
                                        device_names=device_names)
         trained = mlp.train(ds, cfg, verbose=verbose)

@@ -19,6 +19,9 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import math
+import numbers
+import os
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -81,22 +84,54 @@ class Op:
 
     @staticmethod
     def from_dict(d: Dict[str, Any]) -> "Op":
+        """Decode one op document, validating every field.
+
+        Raises :class:`TraceValidationError` on any malformed input;
+        valid documents decode bitwise-identically to the pre-validation
+        decoder (``float``/``int`` coercion semantics unchanged)."""
+        if not isinstance(d, dict):
+            raise TraceValidationError(
+                f"op document must be an object, got {type(d).__name__}")
+        try:
+            name, kind, dtype = d["name"], d["kind"], d["dtype"]
+            cost_doc, raw_params = d["cost"], d["params"]
+            raw_in, raw_out = d["in_shapes"], d["out_shapes"]
+            raw_mult = d["multiplicity"]
+            raw_measured, raw_predicted = d["measured_ms"], d["predicted_ms"]
+        except KeyError as e:
+            raise TraceValidationError(
+                f"op document missing field {e}") from None
+        name = _v_str(name, "op.name")
+        kind = _v_str(kind, "op.kind")
+        dtype = _v_str(dtype, "op.dtype")
+        if not isinstance(cost_doc, dict):
+            raise TraceValidationError(
+                f"op.cost must be an object, got {type(cost_doc).__name__}")
+        if not isinstance(raw_params, dict):
+            raise TraceValidationError(
+                f"op.params must be an object, "
+                f"got {type(raw_params).__name__}")
+        for key in _FEATURE_PARAM_KEYS.get(kind, ()):
+            if key in raw_params:
+                _v_num(raw_params[key], f"op.params.{key}")
         return Op(
-            name=d["name"], kind=d["kind"],
-            cost=OpCost(flops=float(d["cost"]["flops"]),
-                        bytes_read=float(d["cost"]["bytes_read"]),
-                        bytes_written=float(d["cost"]["bytes_written"])),
-            multiplicity=int(d["multiplicity"]),
-            params=dict(d["params"]),
-            in_shapes=tuple(tuple(int(x) for x in s)
-                            for s in d["in_shapes"]),
-            out_shapes=tuple(tuple(int(x) for x in s)
-                             for s in d["out_shapes"]),
-            dtype=d["dtype"],
-            measured_ms=(None if d["measured_ms"] is None
-                         else float(d["measured_ms"])),
-            predicted_ms=(None if d["predicted_ms"] is None
-                          else float(d["predicted_ms"])))
+            name=name, kind=kind,
+            cost=OpCost(
+                flops=_v_num(cost_doc.get("flops"), "op.cost.flops"),
+                bytes_read=_v_num(cost_doc.get("bytes_read"),
+                                  "op.cost.bytes_read"),
+                bytes_written=_v_num(cost_doc.get("bytes_written"),
+                                     "op.cost.bytes_written")),
+            multiplicity=_v_num(raw_mult, "op.multiplicity",
+                                integral=True),
+            params=dict(raw_params),
+            in_shapes=_v_shapes(raw_in, "op.in_shapes"),
+            out_shapes=_v_shapes(raw_out, "op.out_shapes"),
+            dtype=dtype,
+            measured_ms=_v_num(raw_measured, "op.measured_ms",
+                               allow_none=True),
+            predicted_ms=_v_num(raw_predicted, "op.predicted_ms",
+                                allow_none=True))
 
     def feature_vector(self) -> List[float]:
         """Kind-specific op features for the MLP predictors (Sec. 3.4).
@@ -138,6 +173,94 @@ def _json_safe(v: Any) -> Any:
     if isinstance(v, (tuple, list)):
         return [_json_safe(x) for x in v]
     return str(v)
+
+
+class TraceValidationError(ValueError):
+    """A trace wire document failed strict validation.
+
+    The ONE exception type ``Op.from_dict`` / ``TrackedTrace.from_dict``
+    / ``from_json`` raise on malformed input — missing or mistyped
+    fields, NaN/negative times, type-confused shapes, absurd op counts —
+    so obvious poison is rejected at the wire (the front ends map
+    ``ValueError`` to a 400) instead of crashing deep inside numpy once
+    the engine consumes the arrays.  Valid documents decode exactly as
+    before: the bitwise round-trip guarantees below are unchanged."""
+
+
+#: params keys ``Op.feature_vector`` feeds through ``float()`` per
+#: kernel-varying kind — these must be numeric when present, or MLP
+#: scoring would crash mid-engine-pass long after admission
+_FEATURE_PARAM_KEYS = {
+    "conv2d": ("batch", "in_ch", "out_ch", "kernel", "padding", "stride",
+               "image"),
+    "linear": ("batch", "in_f", "out_f", "bias"),
+    "bmm": ("b", "m", "n", "k"),
+    "recurrent": ("batch", "in_f", "hidden", "seq", "layers", "bidir",
+                  "bias"),
+}
+
+_MAX_OPS_DEFAULT = 500_000
+
+
+def _trace_max_ops() -> int:
+    """``REPRO_TRACE_MAX_OPS`` (default 500000): the wire-entry cap on
+    ops per trace.  Parsed leniently (the env-knob policy: malformed
+    overrides keep the default) — duplicated from ``core.batched`` 's
+    ``env_int`` because importing it here would be a cycle."""
+    raw = os.environ.get("REPRO_TRACE_MAX_OPS")
+    if raw is None:
+        return _MAX_OPS_DEFAULT
+    try:
+        v = int(raw)
+    except ValueError:
+        return _MAX_OPS_DEFAULT
+    return v if v > 0 else _MAX_OPS_DEFAULT
+
+
+def _v_str(v: Any, where: str) -> str:
+    if not isinstance(v, str):
+        raise TraceValidationError(
+            f"{where}: expected a string, got {type(v).__name__}")
+    return v
+
+
+def _v_num(v: Any, where: str, allow_none: bool = False,
+           integral: bool = False):
+    """Validate one numeric field: a real, finite, non-negative number
+    (numpy scalars welcome; bools and numeric *strings* are rejected —
+    a type-confused field must not silently coerce, or the decode would
+    no longer round-trip bitwise)."""
+    if v is None and allow_none:
+        return None
+    if isinstance(v, bool) or not isinstance(v, numbers.Real):
+        raise TraceValidationError(
+            f"{where}: expected a number, got {type(v).__name__}: {v!r}")
+    f = float(v)
+    if not math.isfinite(f):
+        raise TraceValidationError(f"{where}: must be finite, got {f!r}")
+    if f < 0:
+        raise TraceValidationError(f"{where}: must be >= 0, got {f!r}")
+    if integral:
+        if f != int(f):
+            raise TraceValidationError(
+                f"{where}: must be an integer, got {f!r}")
+        return int(f)
+    return f
+
+
+def _v_shapes(v: Any, where: str) -> Tuple[Tuple[int, ...], ...]:
+    if not isinstance(v, (list, tuple)):
+        raise TraceValidationError(
+            f"{where}: expected a list, got {type(v).__name__}")
+    out = []
+    for i, s in enumerate(v):
+        if not isinstance(s, (list, tuple)):
+            raise TraceValidationError(
+                f"{where}[{i}]: expected a shape list, "
+                f"got {type(s).__name__}")
+        out.append(tuple(_v_num(x, f"{where}[{i}]", integral=True)
+                         for x in s))
+    return tuple(out)
 
 
 def _classify_dot(eqn, cost_params) -> Tuple[str, Dict[str, Any]]:
@@ -399,9 +522,36 @@ class TrackedTrace:
 
     @staticmethod
     def from_dict(d: Dict[str, Any]) -> "TrackedTrace":
-        return TrackedTrace(ops=[Op.from_dict(o) for o in d["ops"]],
-                            origin_device=d["origin_device"],
-                            label=d.get("label", "iteration"))
+        """Decode a trace document, validating every field.
+
+        Raises :class:`TraceValidationError` (a ``ValueError``; front
+        ends answer 400) on malformed input: wrong container types,
+        mistyped fields, NaN/negative times, op counts over
+        ``REPRO_TRACE_MAX_OPS``.  The origin device is deliberately NOT
+        checked against the registry here — an unknown origin is a
+        semantic failure the engine reports (and the quarantine layer
+        tracks), not a malformed document."""
+        if not isinstance(d, dict):
+            raise TraceValidationError(
+                f"trace document must be an object, "
+                f"got {type(d).__name__}")
+        try:
+            ops_doc, origin = d["ops"], d["origin_device"]
+        except KeyError as e:
+            raise TraceValidationError(
+                f"trace document missing field {e}") from None
+        if not isinstance(ops_doc, list):
+            raise TraceValidationError(
+                f"trace.ops must be a list, got {type(ops_doc).__name__}")
+        max_ops = _trace_max_ops()
+        if len(ops_doc) > max_ops:
+            raise TraceValidationError(
+                f"trace has {len(ops_doc)} ops, over the wire-entry cap "
+                f"of {max_ops} (REPRO_TRACE_MAX_OPS)")
+        origin = _v_str(origin, "trace.origin_device")
+        label = _v_str(d.get("label", "iteration"), "trace.label")
+        return TrackedTrace(ops=[Op.from_dict(o) for o in ops_doc],
+                            origin_device=origin, label=label)
 
     def to_json(self) -> str:
         import json
@@ -410,7 +560,12 @@ class TrackedTrace:
     @staticmethod
     def from_json(text: str) -> "TrackedTrace":
         import json
-        return TrackedTrace.from_dict(json.loads(text))
+        try:
+            doc = json.loads(text)
+        except json.JSONDecodeError as e:
+            raise TraceValidationError(
+                f"trace document is not valid JSON: {e}") from None
+        return TrackedTrace.from_dict(doc)
 
     def measure(self, method: str = "simulate") -> "TrackedTrace":
         """Fill ``measured_ms`` for every op on the origin device."""

@@ -258,7 +258,8 @@ class WorkerSupervisor:
                                    for w in self._workers]}
 
 
-def _worker_cmd(args, cache, port: int) -> List[str]:
+def _worker_cmd(args, cache, port: int,
+                snapshot: Optional[str] = None) -> List[str]:
     worker_mod = ("repro.serve.aserver" if args.use_async
                   else "repro.serve.http")
     cmd = [sys.executable, "-m", worker_mod,
@@ -267,9 +268,24 @@ def _worker_cmd(args, cache, port: int) -> List[str]:
            "--coalesce-ms", str(args.coalesce_ms)]
     if cache is not None:
         cmd += ["--cache", cache]
+    if snapshot is not None:
+        # the supervisor restarts a dead worker with this same command,
+        # so the successor restores the predecessor's warm state before
+        # printing its readiness line
+        cmd += ["--snapshot", snapshot]
     if args.fleet_mlps:
         cmd.append("--mlps")
     return cmd
+
+
+def _worker_snapshot(args, i: int) -> Optional[str]:
+    """Per-worker snapshot file under ``--snapshot-dir`` (index-keyed,
+    stable across restarts), or ``None`` when durability is off."""
+    if not getattr(args, "snapshot_dir", None):
+        return None
+    d = Path(args.snapshot_dir)
+    d.mkdir(parents=True, exist_ok=True)
+    return str(d / f"worker-{i}.snap")
 
 
 def _exit_on_sigterm() -> None:
@@ -296,7 +312,8 @@ def serve_router(args, cache) -> None:
     _exit_on_sigterm()
     sup = WorkerSupervisor()
     urls = [sup.spawn(_worker_cmd(args, cache,
-                                  args.port + 1 + i if args.port else 0))
+                                  args.port + 1 + i if args.port else 0,
+                                  snapshot=_worker_snapshot(args, i)))
             for i in range(args.workers)]
     sup.start()
     print(f"router fleet: {len(urls)} workers on "
@@ -355,18 +372,29 @@ def serve_http(args) -> None:
 
         service = build_service(cache=cache, coalesce_ms=args.coalesce_ms,
                                 mlps=args.fleet_mlps)
+        snap_path = _worker_snapshot(args, 0)
+        snapshot = None
+        if snap_path is not None:
+            from repro.serve.snapshot import SnapshotManager
+
+            snapshot = SnapshotManager(snap_path, service)
+            if snapshot.restore():
+                print(f"restored {snapshot.restored_entries} warm "
+                      f"entries from {snap_path}", flush=True)
+            snapshot.start()
         if args.use_async:
             from repro.serve.aserver import AsyncPredictionServer
 
             server = AsyncPredictionServer(service, host=args.host,
                                            port=args.port)
+            server.snapshot = snapshot  # final snapshot on drain
             try:
                 server.serve_forever()  # prints "serving on ..." itself
             finally:                    # (and drains on SIGTERM/SIGINT)
                 log_engine_caches(service)
             return
         server = PredictionServer(service, host=args.host, port=args.port)
-        install_drain_handlers(server, service)
+        install_drain_handlers(server, service, snapshot=snapshot)
         print(f"serving on {server.url}", flush=True)
         try:
             server.serve_forever()
@@ -382,7 +410,8 @@ def serve_http(args) -> None:
     _exit_on_sigterm()
     sup = WorkerSupervisor()
     for i in range(args.workers):
-        sup.spawn(_worker_cmd(args, cache, args.port + i))
+        sup.spawn(_worker_cmd(args, cache, args.port + i,
+                              snapshot=_worker_snapshot(args, i)))
     sup.start()
     print(f"launched {args.workers} supervised workers on ports "
           f"{args.port}..{args.port + args.workers - 1} "
@@ -457,6 +486,12 @@ def main():
                          "host); auto-created sqlite when --workers > 1")
     ap.add_argument("--coalesce-ms", type=float, default=5.0,
                     help="request-coalescing window for --serve")
+    ap.add_argument("--snapshot-dir", default=None, metavar="DIR",
+                    help="durable warm state for --serve: each worker "
+                         "snapshots its caches to DIR/worker-<i>.snap "
+                         "(every REPRO_SNAPSHOT_INTERVAL_S and on drain) "
+                         "and restores on restart, so crash recoveries "
+                         "come back warm instead of cold")
     args = ap.parse_args()
 
     if args.serve or args.cache_server:

@@ -65,16 +65,18 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 from repro.core.batched import env_float
 from repro.serve import faults
 from repro.serve.admission import AdmissionError, DeadlineExceeded
-from repro.serve.service import PendingQuery, PredictionService
+from repro.serve.service import PendingQuery, PredictionService, \
+    QuarantinedTrace
+from repro.serve.snapshot import SnapshotManager
 
 __all__ = ["AsyncPredictionServer", "iter_sse", "main"]
 
 _MAX_BODY = 64 * 1024 * 1024    # refuse absurd payloads, not big sweeps
 
 _REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
-            413: "Payload Too Large", 429: "Too Many Requests",
-            500: "Internal Server Error", 503: "Service Unavailable",
-            504: "Gateway Timeout"}
+            413: "Payload Too Large", 422: "Unprocessable Entity",
+            429: "Too Many Requests", 500: "Internal Server Error",
+            503: "Service Unavailable", 504: "Gateway Timeout"}
 
 
 def _response(status: int, payload: Dict,
@@ -104,6 +106,18 @@ def _admission_response(e: AdmissionError) -> bytes:
         return _response(e.status, body)
     return _response(
         e.status, body,
+        extra=[("Retry-After", str(max(1, int(e.retry_after_s + 0.999))))])
+
+
+def _quarantine_response(e: QuarantinedTrace) -> bytes:
+    """The poison-trace answer: a structured 422 — the request is
+    well-formed, its *content* is known to crash the engine — carrying
+    the stored failure reason and the quarantine TTL remainder (same
+    body shape both front ends emit)."""
+    return _response(
+        422, {"error": str(e), "code": "quarantined",
+              "fingerprint": e.fingerprint, "reason": e.reason,
+              "retry_after_s": round(e.retry_after_s, 3)},
         extra=[("Retry-After", str(max(1, int(e.retry_after_s + 0.999))))])
 
 
@@ -143,6 +157,9 @@ class AsyncPredictionServer:
         self.service = service
         self.host = host
         self.port = port
+        #: optional SnapshotManager — when set, the drain path takes a
+        #: final snapshot after the flush (set by ``main`` / embedders)
+        self.snapshot: Optional[SnapshotManager] = None
         self._server: Optional[asyncio.AbstractServer] = None
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._thread: Optional[threading.Thread] = None
@@ -181,6 +198,9 @@ class AsyncPredictionServer:
                           f"inflight={adm['inflight_requests']} "
                           f"shed_503={adm['shed_503']} "
                           f"shed_504={adm['shed_504']}", flush=True)
+                    if self.snapshot is not None:
+                        # final snapshot after the flush, before exit
+                        self.snapshot.stop(final=True)
                     loop.call_soon_threadsafe(stop.set)
 
                 # drain blocks on a condition variable; keep the event
@@ -400,6 +420,11 @@ class AsyncPredictionServer:
     async def _post_rank(self, headers: Dict[str, str], body: bytes,
                          writer: asyncio.StreamWriter) -> None:
         service = self.service
+        rkey = service.response_key("rank", body)
+        cached = service.response_lookup(rkey)
+        if cached is not None:
+            writer.write(_response(200, cached))
+            return
         try:
             p = self._decode_body(body)
             trace, batch_size, by, dests = service.decode_rank(p)
@@ -411,8 +436,12 @@ class AsyncPredictionServer:
                 400, {"error": f"{type(e).__name__}: {e}"}))
             return
         try:
+            service.check_quarantine([trace])
             ticket = service.admit_request("rank", [trace], dests,
                                            deadline=deadline)
+        except QuarantinedTrace as e:
+            writer.write(_quarantine_response(e))
+            return
         except AdmissionError as e:
             writer.write(_admission_response(e))
             return
@@ -420,8 +449,9 @@ class AsyncPredictionServer:
             handle = service.submit_rank(trace, batch_size, by, dests,
                                          deadline=deadline)
             choices = await self._await_handle(handle)
-            writer.write(_response(
-                200, service.encode_rank(trace, choices)))
+            out = service.encode_rank(trace, choices)
+            service.response_store(rkey, out)
+            writer.write(_response(200, out))
         except AdmissionError as e:     # deadline lapse mid-flight (504)
             writer.write(_admission_response(e))
         except (KeyError, ValueError, TypeError) as e:
@@ -436,6 +466,11 @@ class AsyncPredictionServer:
     async def _post_sweep(self, headers: Dict[str, str], body: bytes,
                           writer: asyncio.StreamWriter) -> None:
         service = self.service
+        rkey = service.response_key("sweep", body)
+        cached = service.response_lookup(rkey)
+        if cached is not None:
+            writer.write(_response(200, cached))
+            return
         try:
             p = self._decode_body(body)
             traces, dests = service.decode_sweep(p)
@@ -447,8 +482,12 @@ class AsyncPredictionServer:
                 400, {"error": f"{type(e).__name__}: {e}"}))
             return
         try:
+            service.check_quarantine(traces)
             ticket = service.admit_request("sweep", traces, dests,
                                            deadline=deadline)
+        except QuarantinedTrace as e:
+            writer.write(_quarantine_response(e))
+            return
         except AdmissionError as e:
             writer.write(_admission_response(e))
             return
@@ -456,8 +495,9 @@ class AsyncPredictionServer:
             handle = service.submit_sweep(traces, dests,
                                           deadline=deadline)
             rows = await self._await_handle(handle)
-            writer.write(_response(
-                200, service.encode_sweep(traces, rows)))
+            out = service.encode_sweep(traces, rows)
+            service.response_store(rkey, out)
+            writer.write(_response(200, out))
         except AdmissionError as e:     # deadline lapse mid-flight (504)
             writer.write(_admission_response(e))
         except (KeyError, ValueError, TypeError) as e:
@@ -480,6 +520,11 @@ class AsyncPredictionServer:
         any other traffic.  Admission is still decided on the loop
         thread before any engine work, same as every other route."""
         service = self.service
+        rkey = service.response_key("optimize", body)
+        cached = service.response_lookup(rkey)
+        if cached is not None:
+            writer.write(_response(200, cached))
+            return
         try:
             p = self._decode_body(body)
             traces, batch_sizes, dests, knobs = service.decode_optimize(p)
@@ -491,8 +536,12 @@ class AsyncPredictionServer:
                 400, {"error": f"{type(e).__name__}: {e}"}))
             return
         try:
+            service.check_quarantine(traces)
             ticket = service.admit_request("optimize", traces, dests,
                                            deadline=deadline)
+        except QuarantinedTrace as e:
+            writer.write(_quarantine_response(e))
+            return
         except AdmissionError as e:
             writer.write(_admission_response(e))
             return
@@ -509,7 +558,9 @@ class AsyncPredictionServer:
 
             loop = asyncio.get_running_loop()
             result = await loop.run_in_executor(None, _run)
-            writer.write(_response(200, encode_optimize(result)))
+            out = encode_optimize(result)
+            service.response_store(rkey, out)
+            writer.write(_response(200, out))
         except AdmissionError as e:     # deadline lapse mid-search (504)
             writer.write(_admission_response(e))
         except (KeyError, ValueError, TypeError) as e:
@@ -549,8 +600,12 @@ class AsyncPredictionServer:
                 400, {"error": f"{type(e).__name__}: {e}"}))
             return
         try:
+            service.check_quarantine(traces)
             ticket = service.admit_request("sweep", traces, dests,
                                            deadline=deadline)
+        except QuarantinedTrace as e:
+            writer.write(_quarantine_response(e))
+            return
         except AdmissionError as e:
             writer.write(_admission_response(e))
             return
@@ -623,6 +678,10 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                     help="trained-MLP predictor (loads/trains artifacts)")
     ap.add_argument("--fleet", default=None,
                     help="comma-separated device subset (default: all)")
+    ap.add_argument("--snapshot", default=None, metavar="PATH",
+                    help="warm-state snapshot file: restored before "
+                         "readiness, refreshed every "
+                         "REPRO_SNAPSHOT_INTERVAL_S, finalized on drain")
     args = ap.parse_args(argv)
 
     fleet = args.fleet.split(",") if args.fleet else None
@@ -631,6 +690,14 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                             flush_at=args.flush_at, mlps=args.mlps,
                             fleet=fleet)
     server = AsyncPredictionServer(service, host=args.host, port=args.port)
+    if args.snapshot:
+        # restore BEFORE serve_forever binds and prints readiness: the
+        # first request a restarted worker sees must hit warm caches
+        server.snapshot = SnapshotManager(args.snapshot, service)
+        if server.snapshot.restore():
+            print(f"restored {server.snapshot.restored_entries} warm "
+                  f"entries from {args.snapshot}", flush=True)
+        server.snapshot.start()
     try:
         server.serve_forever()     # prints "serving on <url>" once bound
     finally:

@@ -33,10 +33,15 @@ from __future__ import annotations
 
 import dataclasses
 import sqlite3
+import struct
+import sys
 import threading
 from collections import OrderedDict
 from pathlib import Path
 from typing import Iterable, List, Optional, Sequence, Tuple, Union
+
+from repro.core import integrity
+from repro.serve import faults
 
 #: a planner cache key: (trace fingerprint, device, config_key, fleet_token)
 Key = Tuple
@@ -134,6 +139,14 @@ class LRUCache:
         """No resources to release; exists so callers can close any
         backend uniformly (sqlite connections, netcache sockets)."""
 
+    def export_entries(self) -> List[Tuple[Key, float]]:
+        """Snapshot of every entry in LRU order (head first), so a
+        restore through :meth:`put_many` reproduces the eviction order.
+        Only the in-process backend exports — sqlite/netcache stores are
+        already durable/shared, so ``serve/snapshot.py`` skips them."""
+        with self._lock:
+            return list(self.data.items())
+
     def __len__(self) -> int:
         return len(self.data)
 
@@ -161,21 +174,51 @@ class SqliteCache:
 
     _SCHEMA = ("CREATE TABLE IF NOT EXISTS cache ("
                "k TEXT PRIMARY KEY, ms REAL NOT NULL, "
-               "tick INTEGER NOT NULL)")
+               "tick INTEGER NOT NULL, d BLOB)")
 
     def __init__(self, path: Union[str, Path], capacity: int = 262144):
         self.path = Path(path)
         self.capacity = capacity
         self.stats = CacheStats()
+        self.recreated = 0              # corrupt DB files replaced at open
         self._lock = threading.Lock()   # serializes this worker's conn
         self.path.parent.mkdir(parents=True, exist_ok=True)
-        self._conn = sqlite3.connect(self.path, timeout=30.0,
-                                     check_same_thread=False)
-        with self._lock:
-            self._conn.execute("PRAGMA journal_mode=WAL")
-            self._conn.execute("PRAGMA synchronous=NORMAL")
-            self._conn.execute(self._SCHEMA)
-            self._conn.commit()
+        try:
+            self._conn = self._open()
+        except sqlite3.DatabaseError as e:
+            # a corrupt/truncated DB file must cost this worker its
+            # persisted warmth, never its startup: recreate a fresh
+            # store in place (the shared entries are a cache, not a
+            # source of truth) and carry on
+            print(f"sqlite cache at {self.path} is corrupt ({e}); "
+                  f"recreating a fresh store", file=sys.stderr)
+            integrity.COUNTERS.bump("sqlite")
+            self.recreated += 1
+            for suffix in ("", "-wal", "-shm"):
+                Path(str(self.path) + suffix).unlink(missing_ok=True)
+            self._conn = self._open()
+
+    def _open(self) -> sqlite3.Connection:
+        """Connect + PRAGMAs + schema; raises ``sqlite3.DatabaseError``
+        on a corrupt file (``connect`` succeeds lazily — the first
+        statement is where garbage bytes surface)."""
+        conn = sqlite3.connect(self.path, timeout=30.0,
+                               check_same_thread=False)
+        try:
+            with self._lock:
+                conn.execute("PRAGMA journal_mode=WAL")
+                conn.execute("PRAGMA synchronous=NORMAL")
+                conn.execute(self._SCHEMA)
+                cols = [r[1] for r in conn.execute(
+                    "PRAGMA table_info(cache)")]
+                if "d" not in cols:     # pre-integrity stores: add the
+                    conn.execute(       # digest column, legacy rows NULL
+                        "ALTER TABLE cache ADD COLUMN d BLOB")
+                conn.commit()
+        except sqlite3.DatabaseError:
+            conn.close()
+            raise
+        return conn
 
     def describe(self) -> str:
         return f"sqlite({self.path}, capacity={self.capacity})"
@@ -186,31 +229,56 @@ class SqliteCache:
         # is deterministic and identical across worker processes
         return repr(key)
 
+    @staticmethod
+    def _digest(enc_key: str, ms: float) -> bytes:
+        """Row checksum binding the value to ITS key: a torn write or a
+        bit flip in either breaks verification, and the row degrades to
+        a miss rather than serving a wrong cell into the planner."""
+        return integrity.digest(
+            enc_key.encode() + struct.pack("!d", float(ms)))
+
+    def _decode(self, enc_key: str, row) -> Optional[float]:
+        """Verify-and-decode one fetched row; None (a miss) when the
+        checksum fails.  Legacy rows (NULL digest, written before the
+        integrity column existed) are served unverified."""
+        ms, d = float(row[0]), row[1]
+        try:
+            faults.inject("cache.corrupt")
+        except OSError:
+            d = b"\x00" * integrity.DIGEST_BYTES    # simulate a bad row
+        if d is not None and bytes(d) != self._digest(enc_key, ms):
+            integrity.COUNTERS.bump("sqlite")
+            return None
+        return ms
+
     def get(self, key: Key) -> Optional[float]:
+        enc = self._encode(key)
         with self._lock:
             row = self._conn.execute(
-                "SELECT ms FROM cache WHERE k = ?",
-                (self._encode(key),)).fetchone()
-        if row is None:
+                "SELECT ms, d FROM cache WHERE k = ?", (enc,)).fetchone()
+        ms = None if row is None else self._decode(enc, row)
+        if ms is None:
             self.stats.misses += 1
             return None
         self.stats.hits += 1
-        return float(row[0])
+        return ms
 
     def get_many(self, keys: Sequence[Key]) -> List[Optional[float]]:
         """Batched :meth:`get` (pure reads, one lock hold)."""
         out: List[Optional[float]] = []
         with self._lock:
-            for key in keys:
-                row = self._conn.execute(
-                    "SELECT ms FROM cache WHERE k = ?",
-                    (self._encode(key),)).fetchone()
-                if row is None:
-                    self.stats.misses += 1
-                    out.append(None)
-                else:
-                    self.stats.hits += 1
-                    out.append(float(row[0]))
+            rows = [self._conn.execute(
+                "SELECT ms, d FROM cache WHERE k = ?",
+                (self._encode(key),)).fetchone() for key in keys]
+        for key, row in zip(keys, rows):
+            ms = None if row is None else \
+                self._decode(self._encode(key), row)
+            if ms is None:
+                self.stats.misses += 1
+                out.append(None)
+            else:
+                self.stats.hits += 1
+                out.append(ms)
         return out
 
     def put_many(self, items: Sequence[Tuple[Key, float]]) -> None:
@@ -218,17 +286,20 @@ class SqliteCache:
         if not items:
             return
         with self._lock:
-            rows = [(self._encode(key), float(ms)) for key, ms in items]
+            rows = []
+            for key, ms in items:
+                enc = self._encode(key)
+                rows.append((enc, float(ms), self._digest(enc, ms)))
             # the tick subquery runs inside this statement's write
             # transaction, so it sees every committed write from every
             # worker (and this batch's earlier rows): ticks are globally
             # monotone and collision-free without any cross-process
             # coordination of our own
             self._conn.executemany(
-                "INSERT INTO cache (k, ms, tick) VALUES (?, ?, "
-                "(SELECT COALESCE(MAX(tick), 0) + 1 FROM cache)) "
+                "INSERT INTO cache (k, ms, tick, d) VALUES (?, ?, "
+                "(SELECT COALESCE(MAX(tick), 0) + 1 FROM cache), ?) "
                 "ON CONFLICT(k) DO UPDATE SET ms=excluded.ms, "
-                "tick=excluded.tick", rows)
+                "tick=excluded.tick, d=excluded.d", rows)
             over = (self._conn.execute(
                 "SELECT COUNT(*) FROM cache").fetchone()[0] - self.capacity)
             if over > 0:

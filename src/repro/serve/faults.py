@@ -2,7 +2,10 @@
 
 Named injection points are sprinkled through the serving hot paths
 (``netcache.get_many``, ``router.forward``, ``engine.pass``,
-``worker.heartbeat``). Each point is a single call::
+``worker.heartbeat``) and the durability paths (``snapshot.write``,
+``snapshot.load``, ``cache.corrupt`` — the last flips a sqlite row's
+stored digest so the read path must detect it and degrade to a miss).
+Each point is a single call::
 
     from repro.serve import faults
     faults.inject("engine.pass")

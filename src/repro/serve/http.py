@@ -58,7 +58,8 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 from repro.core.batched import env_float
 from repro.serve import faults
 from repro.serve.admission import AdmissionError
-from repro.serve.service import PredictionService
+from repro.serve.service import PredictionService, QuarantinedTrace
+from repro.serve.snapshot import SnapshotManager
 
 __all__ = ["PredictionServer", "PredictionClient", "main",
            "install_drain_handlers"]
@@ -85,14 +86,22 @@ class _Handler(BaseHTTPRequestHandler):
         self.end_headers()
         self.wfile.write(body)
 
-    def _read_json(self) -> Optional[Dict]:
+    def _read_json(self) -> Optional[str]:
+        """The request body as its RAW string (UTF-8 checked only).
+
+        The raw form is what the service's response cache keys on — a
+        repeat request is answered from its byte-identical payload
+        without parsing at all.  Malformed JSON surfaces from the
+        service's own ``json.loads`` as a ``ValueError`` and 400s
+        through ``do_POST``'s usual arm; parsing it here too would
+        charge every cached hit a redundant full-body parse."""
         length = int(self.headers.get("Content-Length", 0))
         if length <= 0 or length > _MAX_BODY:
             self._reply(400, {"error": f"bad Content-Length {length}"})
             return None
         try:
-            return json.loads(self.rfile.read(length))
-        except (json.JSONDecodeError, UnicodeDecodeError) as e:
+            return self.rfile.read(length).decode("utf-8")
+        except UnicodeDecodeError as e:
             self._reply(400, {"error": f"invalid JSON body: {e}"})
             return None
 
@@ -166,6 +175,17 @@ class _Handler(BaseHTTPRequestHandler):
             if e.status == 504:
                 body["code"] = "deadline_exceeded"
             self._reply(e.status, body, extra=extra)
+        except QuarantinedTrace as e:
+            # a ValueError subclass, so this arm must come first: a
+            # quarantined fingerprint is a structured 422 (the request
+            # is well-formed — its *content* is known-poisonous), not a
+            # generic 400
+            self._reply(422, {"error": str(e), "code": "quarantined",
+                              "fingerprint": e.fingerprint,
+                              "reason": e.reason,
+                              "retry_after_s": round(e.retry_after_s, 3)},
+                        extra=[("Retry-After",
+                                str(max(1, int(e.retry_after_s + 0.999))))])
         except (KeyError, ValueError, TypeError) as e:
             # malformed request / unknown device: client error, not 500
             self._reply(400, {"error": f"{type(e).__name__}: {e}"})
@@ -410,6 +430,10 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                     help="trained-MLP predictor (loads/trains artifacts)")
     ap.add_argument("--fleet", default=None,
                     help="comma-separated device subset (default: all)")
+    ap.add_argument("--snapshot", default=None, metavar="PATH",
+                    help="warm-state snapshot file: restored before "
+                         "readiness, refreshed every "
+                         "REPRO_SNAPSHOT_INTERVAL_S, finalized on drain")
     args = ap.parse_args(argv)
 
     fleet = args.fleet.split(",") if args.fleet else None
@@ -417,8 +441,17 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                             coalesce_ms=args.coalesce_ms,
                             flush_at=args.flush_at, mlps=args.mlps,
                             fleet=fleet)
+    snapshot = None
+    if args.snapshot:
+        # restore BEFORE the readiness line: the first request a
+        # supervisor-restarted worker sees must already hit warm caches
+        snapshot = SnapshotManager(args.snapshot, service)
+        if snapshot.restore():
+            print(f"restored {snapshot.restored_entries} warm entries "
+                  f"from {args.snapshot}", flush=True)
+        snapshot.start()
     server = PredictionServer(service, host=args.host, port=args.port)
-    install_drain_handlers(server, service)
+    install_drain_handlers(server, service, snapshot=snapshot)
     print(f"serving on {server.url}", flush=True)   # launcher/test protocol
     try:
         server.serve_forever()
@@ -428,7 +461,9 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         log_engine_caches(service)
 
 
-def install_drain_handlers(server, service: PredictionService) -> None:
+def install_drain_handlers(server, service: PredictionService,
+                           snapshot: Optional[SnapshotManager] = None
+                           ) -> None:
     """SIGTERM/SIGINT -> graceful drain -> shutdown -> exit 0.
 
     Shared by the threaded worker CLI and the launcher's single-worker
@@ -436,7 +471,9 @@ def install_drain_handlers(server, service: PredictionService) -> None:
     thread (``server.shutdown()`` must not run on the serving thread the
     signal interrupted).  Grace period: ``REPRO_DRAIN_GRACE_S`` (10.0) —
     past it the worker exits anyway, reporting the unflushed remainder.
-    No-op outside the main thread (signals cannot be installed there;
+    With a ``snapshot`` manager attached, a final snapshot is taken
+    after the drain flushes (so the successor restarts warm).  No-op
+    outside the main thread (signals cannot be installed there;
     embedded servers drain via ``server.drain()`` directly)."""
     if threading.current_thread() is not threading.main_thread():
         return
@@ -455,6 +492,8 @@ def install_drain_handlers(server, service: PredictionService) -> None:
                   f"inflight={adm['inflight_requests']} "
                   f"shed_503={adm['shed_503']} "
                   f"shed_504={adm['shed_504']}", flush=True)
+            if snapshot is not None:    # final snapshot after the flush
+                snapshot.stop(final=True)
             server.shutdown()
 
         threading.Thread(target=_do, daemon=True).start()

@@ -58,6 +58,7 @@ import threading
 import time
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
+from repro.core import integrity
 from repro.core.batched import env_float, env_int
 from repro.serve import faults
 from repro.serve.admission import remaining_s
@@ -70,8 +71,24 @@ _HEAD = struct.Struct("!I")
 
 
 def _pack(doc: Dict) -> bytes:
+    """Wire frame: length header, truncated-sha256 body digest, body.
+
+    The digest rides every frame in both directions so a corrupted or
+    desynced stream is *detected* instead of decoded into a wrong cache
+    value — the client degrades the call, the server drops the
+    connection (see ``integrity.COUNTERS`` ``corrupt_netcache``)."""
     body = json.dumps(doc).encode()
-    return _HEAD.pack(len(body)) + body
+    return _HEAD.pack(len(body)) + integrity.digest(body) + body
+
+
+def _verify_body(body: bytes, want: bytes) -> bytes:
+    """Client-side digest check; a mismatch counts and raises (the
+    ``IntegrityError`` is a ``ValueError``, so the existing transport
+    except-clauses absorb it into degradation/breaker handling)."""
+    if integrity.digest(body) != want:
+        integrity.COUNTERS.bump("netcache")
+        raise integrity.IntegrityError("netcache frame failed checksum")
+    return body
 
 
 class _CacheUnavailable(OSError):
@@ -141,8 +158,17 @@ class CacheServer:
                     writer.write(_pack({"error": f"frame too large ({n})"}))
                     await writer.drain()
                     return
+                want = await reader.readexactly(integrity.DIGEST_BYTES)
+                body = await reader.readexactly(n)
+                if integrity.digest(body) != want:
+                    # an inbound frame that fails its checksum means the
+                    # stream itself cannot be trusted: drop the whole
+                    # connection (the client reconnects) rather than
+                    # store a corrupted value for every worker to share
+                    integrity.COUNTERS.bump("netcache")
+                    return
                 try:
-                    req = json.loads(await reader.readexactly(n))
+                    req = json.loads(body)
                     resp = self._dispatch(req)
                 except (json.JSONDecodeError, KeyError, TypeError,
                         ValueError) as e:
@@ -332,7 +358,8 @@ class NetCache:
             (n,) = _HEAD.unpack(head)
             if n > _MAX_FRAME:
                 raise ConnectionError(f"oversized reply ({n})")
-            json.loads(self._recv_exact(sock, n))
+            want = self._recv_exact(sock, integrity.DIGEST_BYTES)
+            json.loads(_verify_body(self._recv_exact(sock, n), want))
             self._tripped = False
         except (OSError, ValueError, json.JSONDecodeError,
                 struct.error) as e:
@@ -391,7 +418,9 @@ class NetCache:
                     (n,) = _HEAD.unpack(head)
                     if n > _MAX_FRAME:
                         raise ConnectionError(f"oversized reply ({n})")
-                    resp = json.loads(self._recv_exact(sock, n))
+                    want = self._recv_exact(sock, integrity.DIGEST_BYTES)
+                    resp = json.loads(
+                        _verify_body(self._recv_exact(sock, n), want))
                     if "error" in resp:
                         # a protocol-level refusal is not retryable —
                         # and not a transport outage either; treat as

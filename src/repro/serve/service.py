@@ -77,15 +77,19 @@ transport that can move JSON can front this service.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import threading
 import time
+from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, \
     Union
 
-from repro.core.batched import env_float
+from repro.core import integrity
+from repro.core.batched import env_float, env_int
 from repro.core.trace import TrackedTrace
 from repro.serve import faults
+from repro.serve import snapshot as snapshot_mod
 from repro.serve.admission import AdmissionController, DeadlineExceeded, \
     Ticket, current_deadline, deadline_scope
 from repro.serve.cache import BackendLike
@@ -93,7 +97,7 @@ from repro.serve.fleet import FleetChoice, FleetPlanner, rank_rows
 from repro.serve.optimizer import OptimizeResult, WhatIfOptimizer, \
     encode_optimize
 
-__all__ = ["PredictionService", "adaptive_window_ms"]
+__all__ = ["PredictionService", "QuarantinedTrace", "adaptive_window_ms"]
 
 
 def adaptive_window_ms(base_ms: float, max_ms: float, batch_ewma: float,
@@ -113,6 +117,27 @@ def adaptive_window_ms(base_ms: float, max_ms: float, batch_ewma: float,
     span = max(float(flush_at) - 1.0, 1.0)
     fill = min(max((float(batch_ewma) - 1.0) / span, 0.0), 1.0)
     return float(base_ms) + (hi - float(base_ms)) * (1.0 - fill)
+
+
+class QuarantinedTrace(ValueError):
+    """A trace fingerprint is quarantined after repeated engine crashes.
+
+    Raised by :meth:`PredictionService.check_quarantine` at the WIRE
+    entry points only (``rank_request`` / ``sweep_request`` /
+    ``optimize_request``), before admission — a poison trace must not
+    keep buying engine passes that are known to crash.  Front ends
+    catch it BEFORE their generic ``ValueError -> 400`` mapping and
+    answer a structured **422** carrying the stored failure ``reason``
+    and ``retry_after_s`` (the quarantine TTL remainder).  In-process
+    callers (``rank``/``sweep``/``optimize``) bypass quarantine the
+    same way they bypass admission."""
+
+    def __init__(self, message: str, fingerprint: str = "",
+                 reason: str = "", retry_after_s: float = 0.0):
+        super().__init__(message)
+        self.fingerprint = fingerprint
+        self.reason = reason
+        self.retry_after_s = retry_after_s
 
 
 @dataclasses.dataclass
@@ -365,6 +390,39 @@ class PredictionService:
         self._opt_candidates = 0
         self._opt_cells_priced = 0
         self._opt_cells_deduped = 0
+        # poison-trace quarantine (wire entry only): a fingerprint whose
+        # engine execution crashed REPRO_QUARANTINE_THRESHOLD times in a
+        # row is refused with a structured 422 until its
+        # REPRO_QUARANTINE_TTL_S lapses (threshold 0 disables).  Guarded
+        # by its own lock — recording runs on the leader thread's error
+        # path, checks run on request threads, and neither may contend
+        # on the queue condvar.
+        self.quarantine_threshold = env_int("REPRO_QUARANTINE_THRESHOLD", 3)
+        self.quarantine_ttl_s = env_float("REPRO_QUARANTINE_TTL_S", 300.0)
+        self._quar_lock = threading.Lock()
+        self._fail_counts: Dict[str, int] = {}      # fp -> crash streak
+        self._quarantined: Dict[str, Tuple[float, str]] = {}
+        self._quar_total = 0        # fingerprints ever quarantined
+        self._quar_rejected = 0     # wire requests refused with 422
+        self._quar_readmitted = 0   # TTL lapses + success-clears
+        #: optional :class:`repro.serve.snapshot.SnapshotManager`; the
+        #: front ends attach one so ``/stats`` surfaces durability
+        self._snapshot: Optional[Any] = None
+        # wire-level response cache (REPRO_RESPONSE_CACHE entries, 0 =
+        # off): identical request BYTES are answered from the stored
+        # response without re-parsing the trace or touching admission or
+        # the engine.  Trace decode costs ~10us/op — more than a warm
+        # engine pass — so repeat traffic's floor is the transport, not
+        # the parser.  Only byte payloads are cached (in-process dict
+        # callers skip it); only 200 responses are stored, so a poison
+        # trace can never be cached.  Snapshots persist the entries —
+        # a restored worker answers repeat traffic at wire speed.
+        self.response_cache_max = env_int("REPRO_RESPONSE_CACHE", 0)
+        self._resp_lock = threading.Lock()
+        self._resp_cache: "OrderedDict[str, str]" = OrderedDict()
+        self._resp_hits = 0
+        self._resp_misses = 0
+        self._resp_restored = 0
 
     # -- public query API ---------------------------------------------------
     def rank(self, trace: TrackedTrace, batch_size: int,
@@ -514,6 +572,96 @@ class PredictionService:
             return None
         return time.monotonic() + ms / 1e3
 
+    # -- wire-level response cache ------------------------------------------
+    def response_key(self, kind: str,
+                     payload: Union[str, bytes, Dict]) -> Optional[str]:
+        """Cache key for a wire payload, or ``None`` when uncacheable.
+
+        Only raw byte/str payloads are keyed — hashing them is ~1us/KB,
+        while canonicalizing a decoded dict would cost as much as the
+        decode the cache exists to skip.  The endpoint name is part of
+        the key so ``/rank`` and ``/sweep`` bodies can never collide."""
+        if self.response_cache_max <= 0 or self._draining:
+            return None
+        if isinstance(payload, str):
+            payload = payload.encode("utf-8", "surrogatepass")
+        elif not isinstance(payload, bytes):
+            return None
+        return kind + ":" + hashlib.sha256(payload).hexdigest()
+
+    def response_lookup(self, key: Optional[str]) -> Optional[Dict]:
+        """Stored response for ``key`` (decoded fresh), or ``None``."""
+        if key is None:
+            return None
+        with self._resp_lock:
+            hit = self._resp_cache.get(key)
+            if hit is None:
+                self._resp_misses += 1
+                return None
+            self._resp_cache.move_to_end(key)
+            self._resp_hits += 1
+        # decode a fresh copy per hit: callers may mutate the dict, and
+        # a shared reference would let one request corrupt another's
+        return json.loads(hit)
+
+    def response_store(self, key: Optional[str], result: Dict) -> None:
+        """Store a successful response under ``key`` (LRU-bounded)."""
+        if key is None:
+            return
+        try:
+            encoded = json.dumps(result)
+        except (TypeError, ValueError):
+            return      # non-JSON-serializable: transports would have
+            # failed to emit it anyway; never let caching raise
+        with self._resp_lock:
+            self._resp_cache[key] = encoded
+            self._resp_cache.move_to_end(key)
+            while len(self._resp_cache) > self.response_cache_max:
+                self._resp_cache.popitem(last=False)
+
+    def export_response_cache(self) -> List[Tuple[str, str]]:
+        """Entries as ``(key, encoded_response)`` pairs, LRU order."""
+        with self._resp_lock:
+            return list(self._resp_cache.items())
+
+    def import_response_cache(self, entries: Sequence[Tuple[str, str]]
+                              ) -> int:
+        """Restore exported entries (snapshot restore path).
+
+        Malformed entries are dropped one by one — a half-bad snapshot
+        still restores its good half.  Returns the count restored."""
+        if self.response_cache_max <= 0:
+            return 0    # cache disabled here: snapshot may carry entries
+            # written under a different configuration
+        n = 0
+        for pair in entries:
+            try:
+                key, encoded = pair
+                if not (isinstance(key, str) and isinstance(encoded, str)):
+                    continue
+                json.loads(encoded)     # must decode, or the hit would
+                # raise at serve time — reject it here instead
+            except Exception:
+                continue
+            with self._resp_lock:
+                self._resp_cache[key] = encoded
+                while len(self._resp_cache) > max(self.response_cache_max,
+                                                  0):
+                    self._resp_cache.popitem(last=False)
+            n += 1
+        with self._resp_lock:
+            self._resp_restored += n
+        return n
+
+    def response_cache_stats(self) -> Dict:
+        """The ``/stats`` ``response_cache`` block."""
+        with self._resp_lock:
+            return {"max_entries": self.response_cache_max,
+                    "entries": len(self._resp_cache),
+                    "hits": self._resp_hits,
+                    "misses": self._resp_misses,
+                    "restored_entries": self._resp_restored}
+
     def rank_request(self, payload: Union[str, Dict],
                      deadline_ms: Optional[float] = None) -> Dict:
         """Serve one wire-format rank query (admission applies).
@@ -528,8 +676,13 @@ class PredictionService:
         429/503 + Retry-After) and
         :class:`~repro.serve.admission.DeadlineExceeded` (504) when the
         deadline budget is blown at admission or delivery."""
+        rkey = self.response_key("rank", payload)
+        cached = self.response_lookup(rkey)
+        if cached is not None:
+            return cached
         p = json.loads(payload) if isinstance(payload, str) else payload
         trace, batch_size, by, dests = self.decode_rank(p)
+        self.check_quarantine([trace])
         deadline = self.resolve_deadline(p, deadline_ms)
         ticket = self.admit_request("rank", [trace], dests,
                                     deadline=deadline)
@@ -541,7 +694,9 @@ class PredictionService:
             raise
         finally:
             self.admission.release(ticket)
-        return self.encode_rank(trace, choices)
+        out = self.encode_rank(trace, choices)
+        self.response_store(rkey, out)
+        return out
 
     @staticmethod
     def _wire_choice(choice: FleetChoice) -> Dict:
@@ -589,8 +744,13 @@ class PredictionService:
         bound on every generation's engine work, since cells are priced
         at most once per search.  Raises
         :class:`~repro.serve.admission.AdmissionError` when shed."""
+        rkey = self.response_key("optimize", payload)
+        cached = self.response_lookup(rkey)
+        if cached is not None:
+            return cached
         p = json.loads(payload) if isinstance(payload, str) else payload
         traces, batch_sizes, dests, knobs = self.decode_optimize(p)
+        self.check_quarantine(traces)
         deadline = self.resolve_deadline(p, deadline_ms)
         ticket = self.admit_request("optimize", traces, dests,
                                     deadline=deadline)
@@ -605,7 +765,9 @@ class PredictionService:
             raise
         finally:
             self.admission.release(ticket)
-        return encode_optimize(result)
+        out = encode_optimize(result)
+        self.response_store(rkey, out)
+        return out
 
     def sweep_request(self, payload: Union[str, Dict],
                       deadline_ms: Optional[float] = None) -> Dict:
@@ -617,8 +779,13 @@ class PredictionService:
         :class:`~repro.serve.admission.AdmissionError` when shed and
         :class:`~repro.serve.admission.DeadlineExceeded` when the
         deadline budget is blown."""
+        rkey = self.response_key("sweep", payload)
+        cached = self.response_lookup(rkey)
+        if cached is not None:
+            return cached
         p = json.loads(payload) if isinstance(payload, str) else payload
         traces, dests = self.decode_sweep(p)
+        self.check_quarantine(traces)
         deadline = self.resolve_deadline(p, deadline_ms)
         ticket = self.admit_request("sweep", traces, dests,
                                     deadline=deadline)
@@ -629,7 +796,9 @@ class PredictionService:
             raise
         finally:
             self.admission.release(ticket)
-        return self.encode_sweep(traces, rows)
+        out = self.encode_sweep(traces, rows)
+        self.response_store(rkey, out)
+        return out
 
     # -- admission ----------------------------------------------------------
     def estimate_cost_s(self, traces: Sequence[TrackedTrace],
@@ -698,6 +867,108 @@ class PredictionService:
                     lane=lane, remaining_s=max(remaining, 0.0))
         return self.admission.admit(lane, cost_s)
 
+    # -- poison-trace quarantine --------------------------------------------
+    def check_quarantine(self, traces: Sequence[TrackedTrace]) -> None:
+        """Refuse wire requests that reference a quarantined fingerprint.
+
+        Called by the three ``*_request`` entry points after decode and
+        before admission.  A lapsed TTL re-admits the fingerprint with
+        ONE strike left — a still-poisonous trace re-quarantines on its
+        next crash instead of buying a fresh run of N."""
+        if self.quarantine_threshold <= 0:
+            return
+        now = time.monotonic()
+        with self._quar_lock:
+            for t in traces:
+                fp = t.fingerprint()
+                entry = self._quarantined.get(fp)
+                if entry is None:
+                    continue
+                until, reason = entry
+                if now >= until:
+                    del self._quarantined[fp]
+                    self._fail_counts[fp] = self.quarantine_threshold - 1
+                    self._quar_readmitted += 1
+                    continue
+                self._quar_rejected += 1
+                raise QuarantinedTrace(
+                    f"trace {fp[:12]} is quarantined for another "
+                    f"{until - now:.0f}s after repeated engine failures "
+                    f"({reason})",
+                    fingerprint=fp, reason=reason,
+                    retry_after_s=until - now)
+
+    def _record_trace_failure(self, trace: TrackedTrace,
+                              error: BaseException) -> None:
+        """Count one engine crash against a trace's fingerprint.
+
+        Fed from the per-query isolation fallback (``_execute_singly``),
+        where blame is as narrow as the engine can assign it: a
+        multi-trace sweep that crashes strikes all its traces, but
+        innocents recover because any later success clears the streak."""
+        if self.quarantine_threshold <= 0:
+            return
+        try:
+            fp = trace.fingerprint()
+        except Exception:       # unfingerprintable -> can't track it
+            return
+        reason = f"{type(error).__name__}: {error}"[:500]
+        with self._quar_lock:
+            n = self._fail_counts.get(fp, 0) + 1
+            self._fail_counts[fp] = n
+            if (n >= self.quarantine_threshold
+                    and fp not in self._quarantined):
+                self._quarantined[fp] = (
+                    time.monotonic() + self.quarantine_ttl_s, reason)
+                self._quar_total += 1
+
+    def _record_trace_success(self, traces: Sequence[TrackedTrace]) -> None:
+        """A successful engine pass clears its traces' crash streaks
+        (and lifts any quarantine early — in-process callers bypass the
+        wire check, so their successes are the recovery signal)."""
+        if self.quarantine_threshold <= 0:
+            return
+        if not self._fail_counts and not self._quarantined:
+            return              # racy peek is fine: worst case we lock
+        with self._quar_lock:
+            for t in traces:
+                fp = t.fingerprint()
+                self._fail_counts.pop(fp, None)
+                if self._quarantined.pop(fp, None) is not None:
+                    self._quar_readmitted += 1
+
+    def quarantine_stats(self) -> Dict:
+        """The ``/stats`` ``quarantine`` block (always present)."""
+        with self._quar_lock:
+            return {"enabled": self.quarantine_threshold > 0,
+                    "threshold": self.quarantine_threshold,
+                    "ttl_s": self.quarantine_ttl_s,
+                    "active": len(self._quarantined),
+                    "tracked_failures": len(self._fail_counts),
+                    "quarantined_total": self._quar_total,
+                    "rejected": self._quar_rejected,
+                    "readmitted": self._quar_readmitted}
+
+    # -- durable warm state --------------------------------------------------
+    def attach_snapshot(self, manager: Any) -> None:
+        """Attach a :class:`repro.serve.snapshot.SnapshotManager` so the
+        ``/stats`` ``snapshot`` block reports it (done by its ctor)."""
+        self._snapshot = manager
+
+    def export_pass_samples(self) -> List[Tuple[int, int, float]]:
+        """Snapshot hook: the fitted split-planner model's samples."""
+        with self._cond:
+            return list(self._pass_samples)
+
+    def import_pass_samples(self, samples: Sequence) -> int:
+        """Restore hook: seed the split-planner pass model from a
+        snapshot so a restarted worker prices/splits like its
+        predecessor instead of re-learning from scratch."""
+        cleaned = [(int(c), int(r), float(s)) for c, r, s in samples]
+        with self._cond:
+            self._pass_samples = cleaned[-64:]
+        return len(cleaned)
+
     def stats(self) -> Dict:
         """Service + cache accounting (the ``/stats`` payload).
 
@@ -763,9 +1034,15 @@ class PredictionService:
                 "admission": self.admission.stats(),
                 "optimizer": optimizer,
                 "cache": cache,
+                "response_cache": self.response_cache_stats(),
                 "engine_caches": self.planner.engine_cache_stats(),
                 "fleet": self.planner.fleet,
                 "draining": self._draining,
+                "integrity": integrity.COUNTERS.stats(),
+                "quarantine": self.quarantine_stats(),
+                "snapshot": (self._snapshot.stats()
+                             if self._snapshot is not None
+                             else snapshot_mod.empty_stats()),
                 "faults": faults.stats()}
 
     # -- coalescing core ----------------------------------------------------
@@ -1123,6 +1400,7 @@ class PredictionService:
             with self._cond:
                 self._union_batches += 1
                 self._sliced_columns += sliced
+            self._record_trace_success([uniq[fp] for fp in order])
         except BaseException:
             # a trace-level engine error (e.g. an unmeasured op) must not
             # fate-share across the union batch the way a per-fleet group
@@ -1148,8 +1426,13 @@ class PredictionService:
                                            t.run_time_ms, req.by)
                 else:
                     req.result = [dict(r) for r in rows]
+                self._record_trace_success(req.traces)
             except BaseException as e:
                 req.error = e
+                # per-query isolation = the narrowest blame the engine
+                # can assign; the quarantine learns from it
+                for t in req.traces:
+                    self._record_trace_failure(t, e)
 
     def _execute_grouped(self, batch: List[PendingQuery]) -> None:
         """The PR 3 batcher: one engine pass per destination-fleet

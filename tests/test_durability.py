@@ -1,0 +1,493 @@
+"""Durable warm state: snapshots, integrity checking, quarantine.
+
+Pins the PR-10 robustness contracts:
+
+* the sealed-envelope integrity primitive — round-trip, tamper and
+  truncation detection, the per-kind corruption counters behind every
+  ``integrity.corrupt_*`` field in ``/stats``;
+* crash-consistent snapshots — save/restore round-trips the warm
+  state; a corrupt, truncated, version-skewed, or fault-injected
+  snapshot degrades to a COLD START (counter + log line), never an
+  exception into worker startup; a failed save keeps the previous
+  snapshot intact;
+* the wire-level response cache — off by default, byte-identical
+  replay when on, dict payloads bypass, LRU bound, export/import
+  rides snapshots;
+* poison-trace quarantine — N engine crashes quarantine a
+  fingerprint at the wire entry (structured 422 via
+  :class:`QuarantinedTrace`), TTL lapse re-admits with one strike
+  left, an engine success clears the streak early;
+* storage-layer integrity — sqlite rows carry a key-bound checksum
+  (a corrupted row is a MISS, not a wrong answer), a corrupt DB file
+  is recreated fresh at open, netcache frames fail closed on checksum
+  mismatch, and a tampered MLP artifact raises so the trainer
+  retrains instead of serving garbage predictions;
+* strict wire validation of ``TrackedTrace.from_json`` — malformed
+  documents raise exactly :class:`TraceValidationError` (the 400
+  path), valid ones round-trip bitwise (property-fuzzed when
+  hypothesis is available).
+"""
+
+import json
+import math
+import os
+import pickle
+import sqlite3
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import HabitatPredictor, OperationTracker, integrity
+from repro.core.trace import TraceValidationError, TrackedTrace
+from repro.serve import faults
+from repro.serve.cache import SqliteCache
+from repro.serve.service import PredictionService, QuarantinedTrace
+from repro.serve.snapshot import SnapshotManager, empty_stats
+
+
+def _trace(n=12, label="durable"):
+    return OperationTracker("T4").track(
+        lambda w, x: jnp.sum(jnp.tanh(x @ w)),
+        jnp.zeros((n, 24)), jnp.zeros((8, n)), label=label)
+
+
+def _service(**kw):
+    kw.setdefault("predictor", HabitatPredictor())
+    kw.setdefault("coalesce_window_ms", 0.0)
+    return PredictionService(**kw)
+
+
+@pytest.fixture(autouse=True)
+def _clean_counters():
+    """Each test sees integrity counters from zero, and leaves the
+    fault registry disarmed (restoring any suite-level CI arming)."""
+    integrity.COUNTERS.reset()
+    faults.disarm()
+    yield
+    faults.disarm()
+    integrity.COUNTERS.reset()
+    env_spec = os.environ.get("REPRO_FAULTS", "").strip()
+    if env_spec:
+        faults.arm(env_spec)
+
+
+# ---------------------------------------------------------------------------
+# sealed envelope
+# ---------------------------------------------------------------------------
+def test_seal_roundtrip_bitwise():
+    payload = os.urandom(257)
+    blob = integrity.seal(payload)
+    assert integrity.is_sealed(blob)
+    assert integrity.unseal(blob) == payload
+
+
+def test_seal_detects_any_single_byte_flip():
+    payload = b"warm state" * 7
+    blob = bytearray(integrity.seal(payload))
+    for i in range(len(blob)):
+        flipped = bytes(blob[:i]) + bytes([blob[i] ^ 0x40]) + bytes(blob[i + 1:])
+        with pytest.raises(integrity.IntegrityError):
+            integrity.unseal(flipped)
+
+
+def test_seal_detects_truncation():
+    blob = integrity.seal(b"x" * 100)
+    for cut in (0, 3, len(blob) // 2, len(blob) - 1):
+        with pytest.raises(integrity.IntegrityError):
+            integrity.unseal(blob[:cut])
+
+
+def test_counters_stats_has_every_kind():
+    stats = integrity.COUNTERS.stats()
+    assert set(stats) == {f"corrupt_{k}" for k in integrity._Counters.KINDS}
+    assert all(v == 0 for v in stats.values())
+    integrity.COUNTERS.bump("snapshot")
+    assert integrity.COUNTERS.stats()["corrupt_snapshot"] == 1
+
+
+# ---------------------------------------------------------------------------
+# snapshots: save/restore round-trip
+# ---------------------------------------------------------------------------
+def test_snapshot_roundtrip_restores_warm_state(tmp_path):
+    path = tmp_path / "snap.bin"
+    svc = _service()
+    trace = _trace()
+    before = svc.rank(trace, 32)
+    mgr = SnapshotManager(path, svc, interval_s=0)
+    assert mgr.save() is True
+    assert path.exists() and mgr.saves == 1
+
+    svc2 = _service()
+    assert len(svc2.planner.cache.export_entries()) == 0
+    mgr2 = SnapshotManager(path, svc2, interval_s=0)
+    assert mgr2.restore() is True
+    assert mgr2.restored and mgr2.restored_entries > 0
+    assert len(svc2.planner.cache.export_entries()) > 0
+    after = svc2.rank(trace, 32)
+    assert [c.device for c in after] == [c.device for c in before]
+    for a, b in zip(after, before):     # bitwise, not approx
+        assert a.throughput == b.throughput
+
+
+def test_snapshot_missing_file_is_cold_start_not_corruption(tmp_path):
+    mgr = SnapshotManager(tmp_path / "never-written.bin", _service(),
+                          interval_s=0)
+    assert mgr.restore() is False
+    assert integrity.COUNTERS.stats()["corrupt_snapshot"] == 0
+
+
+@pytest.mark.parametrize("damage", ["garbage", "truncate", "flip"])
+def test_snapshot_corruption_degrades_to_cold(tmp_path, damage, capsys):
+    path = tmp_path / "snap.bin"
+    svc = _service()
+    svc.rank(_trace(), 32)
+    SnapshotManager(path, svc, interval_s=0).save()
+    raw = path.read_bytes()
+    if damage == "garbage":
+        path.write_bytes(b"not a snapshot at all")
+    elif damage == "truncate":
+        path.write_bytes(raw[: len(raw) // 2])
+    else:
+        mid = len(raw) // 2
+        path.write_bytes(raw[:mid] + bytes([raw[mid] ^ 0xFF]) + raw[mid + 1:])
+
+    mgr = SnapshotManager(path, _service(), interval_s=0)
+    assert mgr.restore() is False       # cold, not raised
+    assert not mgr.restored
+    assert integrity.COUNTERS.stats()["corrupt_snapshot"] == 1
+    assert "starting cold" in capsys.readouterr().err
+
+
+def test_snapshot_version_skew_degrades_to_cold(tmp_path):
+    path = tmp_path / "snap.bin"
+    path.write_bytes(integrity.seal(pickle.dumps({"version": 999})))
+    mgr = SnapshotManager(path, _service(), interval_s=0)
+    assert mgr.restore() is False
+    assert integrity.COUNTERS.stats()["corrupt_snapshot"] == 1
+
+
+def test_snapshot_write_fault_keeps_previous_snapshot(tmp_path):
+    path = tmp_path / "snap.bin"
+    svc = _service()
+    svc.rank(_trace(), 32)
+    mgr = SnapshotManager(path, svc, interval_s=0)
+    assert mgr.save() is True
+    good = path.read_bytes()
+
+    faults.arm("snapshot.write:error,p=1")
+    assert mgr.save() is False
+    assert mgr.save_errors == 1
+    assert path.read_bytes() == good    # previous snapshot untouched
+    assert not list(tmp_path.glob("*.tmp.*"))   # no temp litter
+    faults.disarm()
+    assert mgr.save() is True           # and saving recovers
+
+
+def test_snapshot_load_fault_degrades_to_cold(tmp_path):
+    path = tmp_path / "snap.bin"
+    svc = _service()
+    svc.rank(_trace(), 32)
+    SnapshotManager(path, svc, interval_s=0).save()
+
+    faults.arm("snapshot.load:error,p=1")
+    mgr = SnapshotManager(path, _service(), interval_s=0)
+    assert mgr.restore() is False
+    assert integrity.COUNTERS.stats()["corrupt_snapshot"] == 1
+    faults.disarm()
+    assert mgr.restore() is True        # same file is fine without the fault
+
+
+def test_snapshot_stats_shape_matches_empty_stats(tmp_path):
+    mgr = SnapshotManager(tmp_path / "s.bin", _service(), interval_s=0)
+    assert set(mgr.stats()) == set(empty_stats())
+
+
+# ---------------------------------------------------------------------------
+# wire-level response cache
+# ---------------------------------------------------------------------------
+def test_response_cache_off_by_default():
+    svc = _service()
+    assert svc.response_cache_max == 0
+    assert svc.response_key("rank", '{"x": 1}') is None
+    assert svc.import_response_cache([("k", "{}")]) == 0
+
+
+def test_response_cache_replays_bitwise(monkeypatch):
+    monkeypatch.setenv("REPRO_RESPONSE_CACHE", "32")
+    svc = _service()
+    body = json.dumps({"trace": _trace().to_dict(), "batch_size": 32})
+    first = svc.rank_request(body)
+    second = svc.rank_request(body)
+    assert json.dumps(second) == json.dumps(first)      # byte-identical
+    stats = svc.response_cache_stats()
+    assert stats["hits"] == 1 and stats["entries"] == 1
+    # hits decode fresh copies: mutating one answer cannot corrupt another
+    second["ranking"].clear()
+    assert svc.rank_request(body)["ranking"] == first["ranking"]
+
+
+def test_response_cache_dict_payloads_bypass(monkeypatch):
+    monkeypatch.setenv("REPRO_RESPONSE_CACHE", "32")
+    svc = _service()
+    assert svc.response_key("rank", {"trace": "..."}) is None
+    svc.rank_request({"trace": _trace().to_dict(), "batch_size": 32})
+    assert svc.response_cache_stats()["entries"] == 0
+
+
+def test_response_cache_lru_eviction(monkeypatch):
+    monkeypatch.setenv("REPRO_RESPONSE_CACHE", "2")
+    svc = _service()
+    for i in range(3):
+        svc.response_store(svc.response_key("rank", f"body-{i}"), {"i": i})
+    assert svc.response_cache_stats()["entries"] == 2
+    assert svc.response_lookup(svc.response_key("rank", "body-0")) is None
+    assert svc.response_lookup(svc.response_key("rank", "body-2")) == {"i": 2}
+
+
+def test_response_cache_import_drops_malformed(monkeypatch):
+    monkeypatch.setenv("REPRO_RESPONSE_CACHE", "32")
+    svc = _service()
+    n = svc.import_response_cache([
+        ("good", '{"a": 1}'),
+        ("bad-json", "{nope"),
+        (42, '{"a": 2}'),
+        ("wrong-shape",),
+    ])
+    assert n == 1
+    assert svc.response_lookup("good") == {"a": 1}
+    assert svc.response_cache_stats()["restored_entries"] == 1
+
+
+def test_response_cache_rides_snapshots(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_RESPONSE_CACHE", "32")
+    path = tmp_path / "snap.bin"
+    svc = _service()
+    body = json.dumps({"trace": _trace().to_dict(), "batch_size": 32})
+    first = svc.rank_request(body)
+    SnapshotManager(path, svc, interval_s=0).save()
+
+    svc2 = _service()
+    SnapshotManager(path, svc2, interval_s=0).restore()
+    assert svc2.response_cache_stats()["restored_entries"] == 1
+    assert json.dumps(svc2.rank_request(body)) == json.dumps(first)
+    assert svc2.response_cache_stats()["hits"] == 1     # no engine pass
+
+
+# ---------------------------------------------------------------------------
+# poison-trace quarantine
+# ---------------------------------------------------------------------------
+def test_quarantine_after_threshold_crashes():
+    svc = _service()
+    trace = _trace(label="poison")
+    boom = RuntimeError("engine exploded")
+    for _ in range(svc.quarantine_threshold):
+        svc._record_trace_failure(trace, boom)
+    with pytest.raises(QuarantinedTrace) as exc:
+        svc.check_quarantine([trace])
+    assert exc.value.fingerprint == trace.fingerprint()
+    assert "engine exploded" in exc.value.reason
+    assert exc.value.retry_after_s > 0
+    # wire entry points refuse it too (transports answer 422)
+    with pytest.raises(QuarantinedTrace):
+        svc.rank_request({"trace": trace.to_dict(), "batch_size": 32})
+    stats = svc.quarantine_stats()
+    assert stats["active"] == 1 and stats["rejected"] == 2
+
+
+def test_quarantine_below_threshold_admits():
+    svc = _service()
+    trace = _trace(label="flaky")
+    for _ in range(svc.quarantine_threshold - 1):
+        svc._record_trace_failure(trace, RuntimeError("x"))
+    svc.check_quarantine([trace])       # no raise
+    assert svc.quarantine_stats()["active"] == 0
+
+
+def test_quarantine_ttl_readmits_with_one_strike_left():
+    svc = _service()
+    svc.quarantine_ttl_s = 0.05
+    trace = _trace(label="ttl")
+    for _ in range(svc.quarantine_threshold):
+        svc._record_trace_failure(trace, RuntimeError("x"))
+    with pytest.raises(QuarantinedTrace):
+        svc.check_quarantine([trace])
+    time.sleep(0.06)
+    svc.check_quarantine([trace])       # TTL lapsed: admitted again
+    assert svc.quarantine_stats()["readmitted"] == 1
+    # ... but with ONE strike left: the next crash re-quarantines
+    svc._record_trace_failure(trace, RuntimeError("still poison"))
+    with pytest.raises(QuarantinedTrace):
+        svc.check_quarantine([trace])
+
+
+def test_quarantine_success_clears_streak_and_lifts():
+    svc = _service()
+    trace = _trace(label="recovers")
+    for _ in range(svc.quarantine_threshold):
+        svc._record_trace_failure(trace, RuntimeError("x"))
+    svc._record_trace_success([trace])
+    svc.check_quarantine([trace])       # lifted early
+    stats = svc.quarantine_stats()
+    assert stats["active"] == 0 and stats["tracked_failures"] == 0
+    assert stats["readmitted"] == 1
+
+
+def test_quarantine_threshold_zero_disables(monkeypatch):
+    monkeypatch.setenv("REPRO_QUARANTINE_THRESHOLD", "0")
+    svc = _service()
+    trace = _trace()
+    for _ in range(10):
+        svc._record_trace_failure(trace, RuntimeError("x"))
+    svc.check_quarantine([trace])
+    assert svc.quarantine_stats()["enabled"] is False
+
+
+# ---------------------------------------------------------------------------
+# sqlite backend integrity
+# ---------------------------------------------------------------------------
+def test_sqlite_corrupt_db_file_recreated_fresh(tmp_path, capsys):
+    path = tmp_path / "cache.db"
+    path.write_bytes(b"this is not a sqlite database, honest")
+    cache = SqliteCache(path)
+    assert cache.recreated == 1
+    assert integrity.COUNTERS.stats()["corrupt_sqlite"] >= 1
+    cache.put_many([(("T4", "fp", 32), 1.25)])  # and it works afterwards
+    assert cache.get(("T4", "fp", 32)) == 1.25
+
+
+def test_sqlite_tampered_row_is_a_miss_not_a_wrong_answer(tmp_path):
+    path = tmp_path / "cache.db"
+    cache = SqliteCache(path)
+    cache.put_many([(("T4", "fp", 32), 1.25)])
+    with sqlite3.connect(path) as db:   # flip the stored value only:
+        db.execute("UPDATE cache SET ms = ms + 1.0")
+    assert cache.get(("T4", "fp", 32)) is None      # digest no longer matches
+    assert integrity.COUNTERS.stats()["corrupt_sqlite"] == 1
+
+
+def test_sqlite_cache_corrupt_fault_forces_misses(tmp_path):
+    cache = SqliteCache(tmp_path / "cache.db")
+    cache.put_many([(("T4", "fp", 32), 1.25)])
+    faults.arm("cache.corrupt:error,p=1")
+    assert cache.get(("T4", "fp", 32)) is None
+    assert integrity.COUNTERS.stats()["corrupt_sqlite"] == 1
+    faults.disarm()
+    assert cache.get(("T4", "fp", 32)) == 1.25      # row itself was fine
+
+
+# ---------------------------------------------------------------------------
+# netcache frame + MLP artifact integrity
+# ---------------------------------------------------------------------------
+def test_netcache_frame_checksum_fails_closed():
+    from repro.serve import netcache
+
+    frame = netcache._pack({"op": "ping"})
+    n = netcache._HEAD.size
+    digest = frame[n:n + integrity.DIGEST_BYTES]
+    body = frame[n + integrity.DIGEST_BYTES:]
+    assert netcache._verify_body(body, digest) == body
+    tampered = bytes([body[0] ^ 0x01]) + body[1:]
+    with pytest.raises(integrity.IntegrityError):
+        netcache._verify_body(tampered, digest)
+    assert integrity.COUNTERS.stats()["corrupt_netcache"] == 1
+
+
+def _tiny_mlp():
+    from repro.core import mlp
+
+    rng = np.random.default_rng(0)
+    return mlp.TrainedMLP(
+        kind="linear", cfg=mlp.MLPConfig(hidden_layers=1, hidden_size=4,
+                                         epochs=1),
+        params=[(jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+                 jnp.zeros(4, jnp.float32)),
+                (jnp.asarray(rng.normal(size=(4, 1)), jnp.float32),
+                 jnp.zeros(1, jnp.float32))],
+        feature_mean=np.zeros(8), feature_std=np.ones(8))
+
+
+def test_mlp_artifact_tamper_raises_for_retrain(tmp_path):
+    from repro.core import mlp
+
+    path = tmp_path / "model.pkl"
+    model = _tiny_mlp()
+    model.save(path)
+    loaded = mlp.TrainedMLP.load(path)      # sealed round-trip
+    np.testing.assert_array_equal(np.asarray(loaded.params[0][0]),
+                                  np.asarray(model.params[0][0]))
+    raw = path.read_bytes()
+    mid = len(raw) // 2
+    path.write_bytes(raw[:mid] + bytes([raw[mid] ^ 0xFF]) + raw[mid + 1:])
+    with pytest.raises(integrity.IntegrityError):   # train_mlps treats
+        mlp.TrainedMLP.load(path)                   # this as a cache miss
+
+
+def test_mlp_legacy_raw_pickle_artifact_still_loads(tmp_path):
+    from repro.core import mlp
+
+    path = tmp_path / "model.pkl"
+    _tiny_mlp().save(path)
+    # simulate a pre-envelope artifact: strip the seal, keep the pickle
+    path.write_bytes(integrity.unseal(path.read_bytes()))
+    assert mlp.TrainedMLP.load(path).kind == "linear"
+
+
+# ---------------------------------------------------------------------------
+# strict wire validation of trace documents
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def wire_doc():
+    return _trace(label="valid").to_dict()
+
+
+def test_from_json_rejects_non_json():
+    with pytest.raises(TraceValidationError):
+        TrackedTrace.from_json("{not json")
+
+
+def test_from_json_rejects_non_object():
+    for text in ("[]", "42", '"trace"', "null"):
+        with pytest.raises(TraceValidationError):
+            TrackedTrace.from_json(text)
+
+
+def test_from_dict_rejects_missing_fields(wire_doc):
+    for field in ("ops", "origin_device"):
+        doc = dict(wire_doc)
+        del doc[field]
+        with pytest.raises(TraceValidationError):
+            TrackedTrace.from_dict(doc)
+
+
+def test_from_dict_rejects_mistyped_fields(wire_doc):
+    bad = [("origin_device", 7), ("label", ["x"]), ("ops", "not-a-list")]
+    for field, value in bad:
+        doc = dict(wire_doc)
+        doc[field] = value
+        with pytest.raises(TraceValidationError):
+            TrackedTrace.from_dict(doc)
+
+
+def test_from_dict_rejects_poisoned_op_numbers(wire_doc):
+    for poison in ("12", -1.0, math.nan, math.inf, True):
+        doc = json.loads(json.dumps(wire_doc))
+        doc["ops"][0]["measured_ms"] = poison
+        with pytest.raises(TraceValidationError):
+            TrackedTrace.from_dict(doc)
+
+
+def test_from_dict_rejects_type_confused_shapes(wire_doc):
+    doc = json.loads(json.dumps(wire_doc))
+    doc["ops"][0]["in_shapes"] = [["8", "16"]]
+    with pytest.raises(TraceValidationError):
+        TrackedTrace.from_dict(doc)
+
+
+def test_from_dict_enforces_op_cap(wire_doc, monkeypatch):
+    monkeypatch.setenv("REPRO_TRACE_MAX_OPS", str(len(wire_doc["ops"]) - 1))
+    with pytest.raises(TraceValidationError, match="wire-entry cap"):
+        TrackedTrace.from_dict(wire_doc)
+    monkeypatch.delenv("REPRO_TRACE_MAX_OPS")
+    TrackedTrace.from_dict(wire_doc)    # default cap admits it
